@@ -1,0 +1,94 @@
+"""Kernel microbenchmarks: ``name,us_per_call,derived`` CSV.
+
+On CPU the Pallas kernels are timed in their XLA-oracle form (interpret mode
+measures Python emulation, not hardware); the kernel bodies themselves are
+correctness-validated by tests/test_kernels.py.  `derived` reports the
+achieved GFLOP/s of the oracle path as a lower-bound reference point.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AifConfig, generative, policies, spaces
+from repro.kernels.attention.ref import decode_ref, mha_ref
+from repro.kernels.efe.ops import fleet_efe
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_efe() -> tuple[str, float, str]:
+    cfg = AifConfig()
+    r = 64
+    key = jax.random.key(0)
+    S, A = spaces.N_STATES, policies.N_ACTIONS
+    M, NB = spaces.N_MODALITIES, spaces.MAX_BINS
+    a_counts = (jax.random.uniform(key, (r, M, NB, S)) + 0.1) * \
+        spaces.bins_mask()[None, :, :, None]
+    b_counts = jax.random.uniform(jax.random.fold_in(key, 1),
+                                  (r, A, S, S)) + 0.01
+    c_log = jnp.tile(generative.nominal_c_log(cfg)[None], (r, 1, 1))
+    q = jax.random.dirichlet(jax.random.fold_in(key, 2), jnp.ones(S), (r,))
+    f = jax.jit(lambda *xs: fleet_efe(*xs, cfg, use_pallas=False))
+    us = _time(f, a_counts, b_counts, c_log, q)
+    flops = 2 * r * A * S * S          # dominant batched matvec
+    return ("efe_fleet_r64", us, f"{flops/us/1e3:.1f}GFLOPs")
+
+
+def bench_attention() -> list[tuple[str, float, str]]:
+    key = jax.random.key(0)
+    rows = []
+    b, s, hq, hkv, d = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (b, s, hq, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, s, hkv, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, s, hkv, d), jnp.bfloat16)
+    f = jax.jit(lambda q_, k_, v_: mha_ref(q_, k_, v_, causal=True))
+    us = _time(f, q, k, v)
+    flops = 4 * b * s * s * hq * d
+    rows.append(("attn_prefill_2k", us, f"{flops/us/1e3:.1f}GFLOPs"))
+
+    q1 = jax.random.normal(key, (8, 1, hq, d), jnp.bfloat16)
+    k1 = jax.random.normal(key, (8, 4096, hkv, d), jnp.bfloat16)
+    v1 = jax.random.normal(key, (8, 4096, hkv, d), jnp.bfloat16)
+    fd = jax.jit(lambda q_, k_, v_: decode_ref(q_, k_, v_, position=4095))
+    us = _time(fd, q1, k1, v1)
+    bytes_ = 2 * 8 * 4096 * hkv * d * 2
+    rows.append(("attn_decode_4k", us, f"{bytes_/us/1e3:.1f}GB/s"))
+    return rows
+
+
+def bench_ssd() -> tuple[str, float, str]:
+    key = jax.random.key(0)
+    B, S, H, P, G, N, Q = 2, 1024, 16, 64, 1, 64, 128
+    x = jax.random.normal(key, (B, S, H, P), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, H)))
+    a = -jnp.exp(jax.random.normal(key, (H,)) * 0.3)
+    bb = jax.random.normal(key, (B, S, G, N), jnp.bfloat16)
+    cc = jax.random.normal(key, (B, S, G, N), jnp.bfloat16)
+    f = jax.jit(lambda *xs: ssd_ref(*xs, Q))
+    us = _time(f, x, dt, a, bb, cc)
+    flops = 2 * B * (S // Q) * H * Q * Q * (N + P)
+    return ("ssd_1k", us, f"{flops/us/1e3:.1f}GFLOPs")
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = [bench_efe()] + bench_attention() + [bench_ssd()]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""repro — production-grade JAX reproduction of AIF-Router.
+
+"Active Inference-Based Adaptive Routing for Heterogeneous Edge AI Services"
+(Wang, Sedlak, Dustdar — CS.DC 2026), adapted to a TPU-fleet-scale
+training/serving framework.
+
+Layers:
+  repro.core       the paper's contribution: Active Inference routing engine
+  repro.envsim     calibrated discrete-event simulator of the paper's testbed
+  repro.baselines  routing baselines (uniform, capacity, JSQ, bandits)
+  repro.models     LM model zoo (10 assigned architectures)
+  repro.training   optimizer / train_step / trainer with fault tolerance
+  repro.serving    KV-cache serving engine + multi-tier AIF-routed frontend
+  repro.kernels    Pallas TPU kernels (EFE fleet, flash attention, SSD)
+  repro.configs    per-architecture configs
+  repro.launch     production mesh, multi-pod dry-run, roofline analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""Routing baselines: the paper's uniform baseline + stronger comparisons."""
+from repro.baselines.bandit import ThompsonRouter, UcbRouter
+from repro.baselines.least_loaded import LeastLoadedRouter
+from repro.baselines.static import (CapacityRouter, RoundRobinRouter,
+                                    UniformRouter)
+
+__all__ = ["ThompsonRouter", "UcbRouter", "LeastLoadedRouter",
+           "CapacityRouter", "RoundRobinRouter", "UniformRouter"]

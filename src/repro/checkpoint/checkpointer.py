@@ -1,0 +1,150 @@
+"""Sharded checkpointing: async save, rotation, restart, elastic reshape.
+
+Format: one directory per step containing one ``.npy`` per pytree leaf
+(path-flattened names) plus a JSON manifest (tree structure, dtypes, shapes,
+data-iterator state, mesh signature).  No tensorstore in this environment,
+so the format is self-contained numpy — still production-shaped:
+
+* **async save** — the pytree is device-fetched, then written on a background
+  thread so the train loop keeps stepping (`wait()` joins before the next
+  save or at exit);
+* **rotation** — keep the newest ``keep_n`` checkpoints;
+* **atomicity** — writes go to ``<dir>.tmp`` and are renamed only after the
+  manifest lands, so a preempted save can never be mistaken for a valid one;
+* **elastic reshape** — arrays are saved unsharded (gathered); on restore
+  they are `device_put` against the *current* mesh/sharding, so a job can
+  restart on a different topology (mesh signature is recorded, not enforced).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(_path_str(p) for p in path)
+        out[name] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = False):
+        """Snapshot ``tree`` at ``step``; async unless blocking=True."""
+        self.wait()
+        # Fetch to host *before* handing to the writer thread: cheap snapshot
+        # semantics (the train loop may donate/overwrite device buffers).
+        flat = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def write():
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {"step": step, "leaves": {}, "extra": extra or {},
+                        "treedef": str(treedef)}
+            for name, arr in flat.items():
+                fn = name.replace("/", "__") + ".npy"
+                logical = str(arr.dtype)
+                if arr.dtype.kind not in "biufc":   # bf16 / fp8 etc.
+                    arr = arr.view(np.uint8 if arr.dtype.itemsize == 1
+                                   else np.uint16)
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"][name] = {
+                    "file": fn, "dtype": logical,
+                    "shape": list(arr.shape)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._rotate()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, d,
+                                               "manifest.json")):
+                    out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: int | None = None,
+                shardings=None) -> tuple[Any, dict]:
+        """Restore into the structure of ``like``.
+
+        ``shardings``: optional matching pytree of NamedSharding — arrays are
+        device_put against it (elastic reshape onto the current mesh).
+        Returns (tree, extra).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        names = list(_flatten_with_paths(like).keys())
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        shard_leaves = (treedef.flatten_up_to(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for name, ref, shd in zip(names, leaves, shard_leaves):
+            info = manifest["leaves"][name]
+            arr = np.load(os.path.join(d, info["file"]))
+            ref_dtype = np.dtype(getattr(ref, "dtype", np.float32))
+            if arr.dtype.kind in "u" and ref_dtype.kind not in "biufc":
+                arr = arr.view(ref_dtype)        # raw-stored bf16/fp8
+            assert list(arr.shape) == list(ref.shape), (
+                f"{name}: ckpt {arr.shape} vs model {ref.shape}")
+            arr = arr.astype(ref_dtype)
+            out.append(jax.device_put(arr, shd) if shd is not None
+                       else jax.device_put(arr))
+        return treedef.unflatten(out), manifest["extra"]

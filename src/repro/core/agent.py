@@ -1,0 +1,165 @@
+"""The AIF-Router agent: inference–action–learning cycle (paper §4, Fig. 1).
+
+The agent is purely functional: all mutable state lives in an
+:class:`AgentState` pytree and every transition is a jit-compiled pure
+function, so agents vmap into fleets (:mod:`repro.core.fleet`) and the whole
+control loop can run on-device.
+
+Fast loop (1 s)  — ``fast_step``: observe → adapt preferences → Bayesian
+belief update (Eq. 2) → EFE action selection (Eq. 1) → record transition.
+Slow loop (10 s) — ``slow_step``: replay-buffer batch update of A and B.
+
+``tick`` composes both with the paper's timescale separation: the slow update
+fires every ``slow_period_s / fast_period_s`` fast steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import belief as belief_mod
+from repro.core import efe as efe_mod
+from repro.core import generative, learning, policies, preferences, spaces
+
+
+class AgentState(NamedTuple):
+    model: generative.GenerativeModel
+    belief: jnp.ndarray              # (N_STATES,) current posterior q(s_t)
+    replay: learning.ReplayBuffer
+    prev_action: jnp.ndarray         # () int32 — action currently applied
+    dt_since_change: jnp.ndarray     # () float32 — seconds since action change
+    error_ema: jnp.ndarray           # () float32 — smoothed error rate
+    unstable: jnp.ndarray            # () bool — adaptive-preference mode
+    t: jnp.ndarray                   # () int32 — fast steps elapsed
+
+
+class StepInfo(NamedTuple):
+    """Diagnostics emitted by each fast step (all per-step scalars/vectors)."""
+
+    action: jnp.ndarray
+    routing_weights: jnp.ndarray     # (3,) applied (w_L, w_M, w_H)
+    efe: efe_mod.EfeBreakdown
+    belief_entropy: jnp.ndarray
+    unstable: jnp.ndarray
+    obs_bins: jnp.ndarray
+
+
+def init_agent_state(cfg: generative.AifConfig) -> AgentState:
+    model = generative.init_generative_model(cfg)
+    return AgentState(
+        model=model,
+        belief=model.d_prior,
+        replay=learning.init_replay(cfg.replay_capacity),
+        prev_action=jnp.asarray(policies.BALANCED_ACTION, jnp.int32),
+        dt_since_change=jnp.zeros((), jnp.float32),
+        error_ema=jnp.zeros((), jnp.float32),
+        unstable=jnp.zeros((), bool),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fast_step(state: AgentState,
+              obs_bins: jnp.ndarray,
+              raw_error_rate: jnp.ndarray,
+              key: jax.Array,
+              cfg: generative.AifConfig,
+              util_bins: jnp.ndarray | None = None,
+              util_valid=False) -> tuple[AgentState, StepInfo]:
+    """One 1-second control step.
+
+    Args:
+      state: current agent state.
+      obs_bins: (N_MODALITIES,) int32 discretized observation o_t.
+      raw_error_rate: () float — undiscretized error rate for the EMA that
+        drives adaptive preferences (the discretized bin is too coarse).
+      key: PRNG key for action sampling.
+      cfg: static hyper-parameters.
+      util_bins: optional (3,) int32 utilization scrape in (u_H, u_M, u_L)
+        order — the paper's 10-second resource-metric query (§3).
+      util_valid: gate for util_bins (True on scrape ticks only).
+    """
+    # --- adaptive preferences (paper §4.2) --------------------------------
+    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
+    c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
+    model = state.model._replace(c_log=c_log)
+
+    # --- Bayesian belief update (Eq. 2) -----------------------------------
+    q_prev = state.belief
+    q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
+                                      obs_bins, util_bins, util_valid)
+
+    # --- record the (q_prev, a, q_next, o) transition ----------------------
+    replay = learning.push_transition(
+        state.replay, q_prev, q_next, obs_bins, state.prev_action,
+        state.dt_since_change)
+
+    # --- action selection via EFE (Eq. 1) ----------------------------------
+    # Re-evaluate the policy on the dwell cadence only; hold it in between
+    # (the settle-weighted transition learning needs actions to persist).
+    dwell_ticks = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
+    do_select = (state.t % dwell_ticks) == 0
+    sampled, bd = efe_mod.select_action(key, model, q_next, cfg)
+    action = jnp.where(do_select, sampled, state.prev_action)
+    changed = action != state.prev_action
+    dt = jnp.where(changed, 0.0, state.dt_since_change + cfg.fast_period_s)
+
+    new_state = AgentState(
+        model=model,
+        belief=q_next,
+        replay=replay,
+        prev_action=action.astype(jnp.int32),
+        dt_since_change=dt,
+        error_ema=error_ema,
+        unstable=unstable,
+        t=state.t + 1,
+    )
+    info = StepInfo(
+        action=action,
+        routing_weights=policies.routing_weights(action),
+        efe=bd,
+        belief_entropy=belief_mod.belief_entropy(q_next),
+        unstable=unstable,
+        obs_bins=obs_bins,
+    )
+    return new_state, info
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def slow_step(state: AgentState, key: jax.Array,
+              cfg: generative.AifConfig) -> AgentState:
+    """One 10-second model-learning step (replay batch update of A, B)."""
+    model = learning.slow_update(key, state.model, state.replay, cfg)
+    return state._replace(model=model)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def tick(state: AgentState,
+         obs_bins: jnp.ndarray,
+         raw_error_rate: jnp.ndarray,
+         key: jax.Array,
+         cfg: generative.AifConfig,
+         util_bins: jnp.ndarray | None = None,
+         util_valid=False) -> tuple[AgentState, StepInfo]:
+    """fast_step + conditionally the slow learning step (timescale separation)."""
+    k_fast, k_slow = jax.random.split(key)
+    state, info = fast_step(state, obs_bins, raw_error_rate, k_fast, cfg,
+                            util_bins, util_valid)
+    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
+    do_learn = (state.t % period) == 0
+    state = jax.lax.cond(
+        do_learn,
+        lambda s: slow_step(s, k_slow, cfg),
+        lambda s: s,
+        state,
+    )
+    return state, info
+
+
+def observe_and_discretize(raw_metrics: jnp.ndarray,
+                           disc: spaces.DiscretizationConfig) -> jnp.ndarray:
+    """Convenience: raw (latency_s, rps, queue, err) -> observation bins."""
+    return spaces.discretize_observation(raw_metrics, disc)

@@ -1,0 +1,89 @@
+"""Fast-loop Bayesian state inference (paper §4.4, Eq. 2).
+
+Every second the router updates its belief over the 243 hidden states:
+
+    q(s_t | o_{1:t})  ∝  p(o_t | s_t) · p(s_t | o_{1:t-1})
+    p(s_t | o_{1:t-1}) = B_{a_{t-1}} · q(s_{t-1})
+
+The likelihood factorizes over the four observation modalities.  Everything
+is a plain function of arrays so it jits, vmaps (fleet mode) and differentiates
+cleanly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import generative, spaces
+
+
+def predict_prior(b_counts: jnp.ndarray, belief: jnp.ndarray,
+                  prev_action) -> jnp.ndarray:
+    """One-step state prediction ``B_{a} · q`` (the filter's prior)."""
+    b = generative.normalize_b(b_counts)[prev_action]      # (S', S)
+    prior = b @ belief
+    return prior / jnp.maximum(jnp.sum(prior), 1e-30)
+
+
+def log_likelihood(a_counts: jnp.ndarray, obs_bins: jnp.ndarray) -> jnp.ndarray:
+    """``log p(o_t | s)`` for every state, summed over modalities.
+
+    Args:
+      a_counts: (M, MAX_BINS, S) observation-model pseudo-counts.
+      obs_bins: (M,) int observation bin per modality.
+
+    Returns:
+      (S,) log-likelihood vector.
+    """
+    a = generative.normalize_a(a_counts)                   # (M, MAX_BINS, S)
+    onehot = spaces.one_hot_observation(obs_bins)          # (M, MAX_BINS)
+    per_modality = jnp.einsum("mb,mbs->ms", onehot, a)     # p(o_m | s)
+    return jnp.sum(jnp.log(jnp.maximum(per_modality, 1e-16)), axis=0)
+
+
+def util_log_likelihood(util_bins: jnp.ndarray,
+                        eps: float = 0.15) -> jnp.ndarray:
+    """Log-likelihood of the 10-second per-tier utilization scrape (paper §3).
+
+    The router "queries aggregated resource metrics (per-tier CPU
+    utilization) every 10 seconds to enrich state representation".  The state
+    factors (u_H, u_M, u_L) are directly the discretized utilizations, so the
+    scrape is a noisy direct reading of state factors 2..4:
+    ``p(û = b | s) = 1-eps`` if the factor level matches, else ``eps/2``.
+
+    Args:
+      util_bins: (3,) int32 utilization bins in state-factor order
+        (heavy, medium, light).
+    """
+    tbl = jnp.asarray(spaces.state_factor_table())        # (S, 5)
+    match = tbl[:, 2:5] == util_bins[None, :]             # (S, 3)
+    p = jnp.where(match, 1.0 - eps, eps / 2.0)
+    return jnp.sum(jnp.log(p), axis=-1)                   # (S,)
+
+
+def update_belief(model: generative.GenerativeModel,
+                  belief: jnp.ndarray,
+                  prev_action,
+                  obs_bins: jnp.ndarray,
+                  util_bins: jnp.ndarray | None = None,
+                  util_valid=False) -> jnp.ndarray:
+    """Posterior ``q(s_t) ∝ p(o_t|s_t) · B_{a_{t-1}} q(s_{t-1})`` (Eq. 2).
+
+    When a fresh utilization scrape is available (every 10th fast step) its
+    likelihood multiplies in as additional evidence on the hidden per-tier
+    factors; ``util_valid`` gates it jit-safely.
+    """
+    prior = predict_prior(model.b_counts, belief, prev_action)
+    logp = log_likelihood(model.a_counts, obs_bins) + jnp.log(
+        jnp.maximum(prior, 1e-30))
+    if util_bins is not None:
+        logp = logp + jnp.where(util_valid,
+                                util_log_likelihood(util_bins), 0.0)
+    logp = logp - jnp.max(logp)
+    q = jnp.exp(logp)
+    return q / jnp.maximum(jnp.sum(q), 1e-30)
+
+
+def belief_entropy(belief: jnp.ndarray) -> jnp.ndarray:
+    """Shannon entropy of the belief (monitoring / tests)."""
+    p = jnp.clip(belief, 1e-16, 1.0)
+    return -jnp.sum(p * jnp.log(p))

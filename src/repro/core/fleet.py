@@ -1,0 +1,53 @@
+"""Fleet mode: thousands of AIF routers as one batched, shardable program.
+
+The paper runs one router at 1 Hz on a CPU.  At datacenter scale each *service
+cell* (model family × pod slice × region) gets its own router; all of them
+share the same control cadence.  Because the agent is purely functional we
+get the fleet for free with ``jax.vmap``, and the batched step is a dense
+(R, A, S, S) einsum workload that shards over a mesh axis with pjit and maps
+onto the MXU via the fused Pallas EFE kernel (:mod:`repro.kernels.efe`).
+
+All functions below take/return a *batched* :class:`~repro.core.agent.AgentState`
+whose leaves carry a leading router dimension R.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import agent as agent_mod
+from repro.core import generative
+
+
+def init_fleet_state(cfg: generative.AifConfig,
+                     n_routers: int) -> agent_mod.AgentState:
+    """Batched agent state with leading router axis R = n_routers."""
+    single = agent_mod.init_agent_state(cfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_routers,) + x.shape), single)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fleet_tick(state: agent_mod.AgentState,
+               obs_bins: jnp.ndarray,
+               raw_error_rate: jnp.ndarray,
+               keys: jax.Array,
+               cfg: generative.AifConfig):
+    """vmapped :func:`repro.core.agent.tick` over the router axis.
+
+    Args:
+      state: batched AgentState (leading dim R on every leaf).
+      obs_bins: (R, N_MODALITIES) int32.
+      raw_error_rate: (R,) float32.
+      keys: (R, 2) uint32 PRNG keys (one per router).
+    """
+    return jax.vmap(
+        lambda s, o, e, k: agent_mod.tick(s, o, e, k, cfg)
+    )(state, obs_bins, raw_error_rate, keys)
+
+
+def fleet_routing_weights(info) -> jnp.ndarray:
+    """(R, 3) routing weights extracted from a batched StepInfo."""
+    return info.routing_weights

@@ -1,0 +1,163 @@
+"""Generative model of AIF-Router (paper §4.2): A, B, C (+ initial prior D).
+
+Observation model **A** — ``p(o_t | s_t)`` factorized over the four metric
+modalities; per modality an ``(MAX_BINS, N_STATES)`` likelihood matrix (padded
+bins carry zero mass).  Stored as Dirichlet *pseudo-counts*; the normalized
+likelihood is recovered on demand.  Initialized (near-)uniform — "reflecting
+no prior knowledge".
+
+Transition model **B** — ``p(s_{t+1} | s_t, a)``; one ``(N_STATES, N_STATES)``
+column-stochastic matrix per action (``B[a][s', s]``).  Also pseudo-counts.
+Initialized with a weak sticky-identity prior: with no experience the best
+guess is "the system stays roughly where it is", which keeps early belief
+propagation informative while remaining quickly overwritten by data.
+
+Preference distribution **C** — per-modality log-preferences over observation
+bins.  ``C_latency`` strongly prefers low-latency bins, ``C_error`` strongly
+prefers the low-error bin (−3.0 normally, −11.5 on the high-error bin during
+instability — see :mod:`repro.core.preferences`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies, spaces
+
+
+class GenerativeModel(NamedTuple):
+    """Learnable pseudo-count parameters + current preferences (a pytree)."""
+
+    a_counts: jnp.ndarray   # (N_MODALITIES, MAX_BINS, N_STATES) Dirichlet counts
+    b_counts: jnp.ndarray   # (N_ACTIONS, N_STATES, N_STATES) Dirichlet counts
+    c_log: jnp.ndarray      # (N_MODALITIES, MAX_BINS) log-preferences
+    d_prior: jnp.ndarray    # (N_STATES,) initial state prior
+
+
+@dataclasses.dataclass(frozen=True)
+class AifConfig:
+    """Static hyper-parameters (all defaults = paper values)."""
+
+    # Action selection (paper §4.3)
+    beta: float = 5.0                     # softmax inverse temperature
+    cost_weight: float = 0.2              # scale of Cost(a) regularizer
+    # Action dwell: re-evaluate the policy every `action_dwell_s` seconds
+    # while observing at 1 Hz.  The paper's sigmoid settle-weighting
+    # w(Δt)=σ((Δt−2)/2) only has effect if actions persist for several
+    # seconds; a 1 Hz re-sample would keep Δt ≈ 0 forever.  Dwell is the
+    # selection cadence that makes the published mechanism meaningful.
+    action_dwell_s: float = 5.0
+    # Beyond-paper (default off): information-gain bonus on the A-model
+    # (pymdp-style parameter novelty) — subtracts expected Dirichlet info
+    # gain from G to actively direct exploration.
+    novelty_weight: float = 0.0
+
+    # Online learning (paper §4.4)
+    alpha_a: float = 0.05                 # A pseudo-count learning rate
+    alpha_b: float = 0.05                 # B pseudo-count learning rate
+    replay_capacity: int = 5000           # replay buffer size
+    replay_batch: int = 100               # transitions sampled per slow update
+    settle_midpoint_s: float = 2.0        # sigmoid weight w(dt)=1/(1+e^-(dt-2)/2)
+    settle_scale_s: float = 2.0
+    fast_period_s: float = 1.0            # belief update cadence
+    slow_period_s: float = 10.0           # model learning cadence
+
+    # Priors
+    a_prior_count: float = 1.0            # uniform Dirichlet prior on A
+    b_prior_uniform: float = 0.1          # uniform floor on B columns
+    b_prior_sticky: float = 1.0           # identity (stay-put) prior on B
+
+    # Preferences (log space; see preferences.py for the adaptive shift)
+    c_latency: tuple[float, float, float] = (0.0, -1.5, -4.0)
+    c_rps: tuple[float, float, float] = (-1.0, -0.25, 0.0)
+    c_queue: tuple[float, float, float] = (0.0, -1.0, -3.0)
+    c_error_ok: tuple[float, float] = (0.0, -3.0)      # nominal: mild avoidance
+    c_error_unstable: tuple[float, float] = (0.0, -11.5)  # instability: strong
+    error_trigger: float = 0.15           # error-rate threshold for adaptation
+    latency_relax_factor: float = 0.3     # relax C_latency under instability
+    error_ema_halflife_s: float = 20.0    # smoothing of the observed error rate
+
+    @property
+    def n_states(self) -> int:
+        return spaces.N_STATES
+
+    @property
+    def n_actions(self) -> int:
+        return policies.N_ACTIONS
+
+
+def _nominal_c_rows(cfg: AifConfig) -> np.ndarray:
+    """Pure-numpy nominal log-preference table (safe to call under tracing)."""
+    rows = np.full((spaces.N_MODALITIES, spaces.MAX_BINS), -30.0,
+                   dtype=np.float32)
+    for m, prefs in enumerate((cfg.c_latency, cfg.c_rps, cfg.c_queue,
+                               cfg.c_error_ok)):
+        rows[m, : len(prefs)] = prefs
+    return rows
+
+
+def nominal_c_log(cfg: AifConfig) -> jnp.ndarray:
+    """(N_MODALITIES, MAX_BINS) nominal log-preferences, padded bins = -inf-ish.
+
+    Padded bins get a large negative value but are additionally masked out of
+    every expectation by ``spaces.bins_mask()``; the value never leaks.
+    """
+    return jnp.asarray(_nominal_c_rows(cfg))
+
+
+def unstable_c_log(cfg: AifConfig) -> jnp.ndarray:
+    """Log-preferences during instability: deep error avoidance, relaxed lat."""
+    rows = _nominal_c_rows(cfg).copy()
+    rows[0, : len(cfg.c_latency)] = (
+        np.asarray(cfg.c_latency, dtype=np.float32) * cfg.latency_relax_factor)
+    rows[3, : len(cfg.c_error_unstable)] = cfg.c_error_unstable
+    return jnp.asarray(rows)
+
+
+def init_generative_model(cfg: AifConfig) -> GenerativeModel:
+    """Paper-faithful initialization: uniform A, weakly-sticky B, uniform D."""
+    mask = np.asarray(spaces.BINS_MASK)                     # (M, MAX_BINS)
+    a0 = cfg.a_prior_count * mask[:, :, None] * np.ones(
+        (spaces.N_MODALITIES, spaces.MAX_BINS, spaces.N_STATES),
+        dtype=np.float32)
+
+    eye = np.eye(spaces.N_STATES, dtype=np.float32)
+    b0 = (cfg.b_prior_uniform / spaces.N_STATES
+          + cfg.b_prior_sticky * eye)[None].repeat(policies.N_ACTIONS, axis=0)
+
+    d0 = np.full((spaces.N_STATES,), 1.0 / spaces.N_STATES, dtype=np.float32)
+
+    return GenerativeModel(
+        a_counts=jnp.asarray(a0),
+        b_counts=jnp.asarray(b0),
+        c_log=nominal_c_log(cfg),
+        d_prior=jnp.asarray(d0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Normalization helpers (pseudo-counts -> distributions)
+# ---------------------------------------------------------------------------
+def normalize_a(a_counts: jnp.ndarray) -> jnp.ndarray:
+    """p(o_m = i | s): normalize counts over bins per (modality, state)."""
+    mask = spaces.bins_mask()[:, :, None]
+    counts = a_counts * mask
+    denom = jnp.sum(counts, axis=1, keepdims=True)
+    return counts / jnp.maximum(denom, 1e-30)
+
+
+def normalize_b(b_counts: jnp.ndarray) -> jnp.ndarray:
+    """p(s' | s, a): normalize counts over s' per (action, s) column."""
+    denom = jnp.sum(b_counts, axis=1, keepdims=True)     # sum over s'
+    return b_counts / jnp.maximum(denom, 1e-30)
+
+
+def c_probs(c_log: jnp.ndarray) -> jnp.ndarray:
+    """Normalized preference distribution sigma(C) per modality (masked)."""
+    mask = spaces.bins_mask()
+    logits = jnp.where(mask > 0, c_log, -jnp.inf)
+    return jax.nn.softmax(logits, axis=-1)

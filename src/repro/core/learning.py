@@ -1,0 +1,145 @@
+"""Slow-loop online model learning (paper §4.4).
+
+Every 10 seconds the router batch-updates its generative model from a replay
+buffer of recent transitions:
+
+* **Observation model A** — for each observed ``(o_t, q(s_t))`` pair,
+  posterior-weighted pseudo-count accumulation
+  ``A[m][o_m, :] += α · q(s_t)`` with ``α = 0.05``.
+
+* **Transition model B** — posterior-outer-product counts
+  ``B[a][:, :] += α_B · w(Δt) · q(s_{t+1}) q(s_t)^T`` where the *sigmoid
+  settle weight* ``w(Δt) = 1 / (1 + e^{−(Δt−2)/2})`` down-weights transitions
+  observed right after an action change, before the system has stabilized.
+
+* **Replay buffer** — ring buffer of 5000 transitions; each slow update
+  samples a batch of 100 (uniform over valid entries), improving sample
+  efficiency and stability.
+
+Timescale separation (1 s inference / 10 s learning) keeps the fast loop
+operating against a quasi-static model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generative, spaces
+
+
+class ReplayBuffer(NamedTuple):
+    """Fixed-capacity ring buffer of transitions (a pytree of arrays)."""
+
+    q_prev: jnp.ndarray      # (cap, N_STATES) posterior at t
+    q_next: jnp.ndarray      # (cap, N_STATES) posterior at t+1
+    obs_bins: jnp.ndarray    # (cap, N_MODALITIES) int32 observation at t+1
+    action: jnp.ndarray      # (cap,) int32 action taken at t
+    dt_since_change: jnp.ndarray  # (cap,) float32 seconds since action change
+    cursor: jnp.ndarray      # () int32 next write slot
+    size: jnp.ndarray        # () int32 number of valid entries
+
+
+def init_replay(capacity: int) -> ReplayBuffer:
+    s = spaces.N_STATES
+    m = spaces.N_MODALITIES
+    return ReplayBuffer(
+        q_prev=jnp.zeros((capacity, s), jnp.float32),
+        q_next=jnp.zeros((capacity, s), jnp.float32),
+        obs_bins=jnp.zeros((capacity, m), jnp.int32),
+        action=jnp.zeros((capacity,), jnp.int32),
+        dt_since_change=jnp.zeros((capacity,), jnp.float32),
+        cursor=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def push_transition(buf: ReplayBuffer,
+                    q_prev: jnp.ndarray,
+                    q_next: jnp.ndarray,
+                    obs_bins: jnp.ndarray,
+                    action,
+                    dt_since_change) -> ReplayBuffer:
+    """Write one transition at the ring cursor (jit-safe, O(1))."""
+    cap = buf.q_prev.shape[0]
+    i = buf.cursor
+    return ReplayBuffer(
+        q_prev=buf.q_prev.at[i].set(q_prev),
+        q_next=buf.q_next.at[i].set(q_next),
+        obs_bins=buf.obs_bins.at[i].set(jnp.asarray(obs_bins, jnp.int32)),
+        action=buf.action.at[i].set(jnp.asarray(action, jnp.int32)),
+        dt_since_change=buf.dt_since_change.at[i].set(
+            jnp.asarray(dt_since_change, jnp.float32)),
+        cursor=(i + 1) % cap,
+        size=jnp.minimum(buf.size + 1, cap),
+    )
+
+
+def settle_weight(dt: jnp.ndarray, cfg: generative.AifConfig) -> jnp.ndarray:
+    """Sigmoid settle weight ``w(Δt) = 1/(1+exp(−(Δt − mid)/scale))``."""
+    return jax.nn.sigmoid((dt - cfg.settle_midpoint_s) / cfg.settle_scale_s)
+
+
+def sample_batch(key: jax.Array, buf: ReplayBuffer,
+                 batch: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Uniformly sample ``batch`` valid indices (with replacement).
+
+    Returns (indices, validity weight).  When the buffer is empty all weights
+    are zero, making the subsequent update a no-op.
+    """
+    cap = buf.q_prev.shape[0]
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    valid = (buf.size > 0).astype(jnp.float32) * jnp.ones((batch,), jnp.float32)
+    return idx % cap, valid
+
+
+def update_observation_model(a_counts: jnp.ndarray,
+                             q_next: jnp.ndarray,
+                             obs_bins: jnp.ndarray,
+                             weight: jnp.ndarray,
+                             cfg: generative.AifConfig) -> jnp.ndarray:
+    """Batched ``A[m][o_m, :] += α · q(s)`` (posterior-weighted counts).
+
+    Args:
+      a_counts: (M, MAX_BINS, S).
+      q_next:   (batch, S) posteriors.
+      obs_bins: (batch, M) observed bins.
+      weight:   (batch,) 0/1 validity weights.
+    """
+    onehot = spaces.one_hot_observation(obs_bins)          # (batch, M, B)
+    upd = jnp.einsum("nmb,ns->mbs", onehot * weight[:, None, None], q_next)
+    return a_counts + cfg.alpha_a * upd
+
+
+def update_transition_model(b_counts: jnp.ndarray,
+                            q_prev: jnp.ndarray,
+                            q_next: jnp.ndarray,
+                            action: jnp.ndarray,
+                            dt_since_change: jnp.ndarray,
+                            weight: jnp.ndarray,
+                            cfg: generative.AifConfig) -> jnp.ndarray:
+    """Batched sigmoid-weighted ``B[a] += α_B · w(Δt) · q_next q_prev^T``."""
+    w = settle_weight(dt_since_change, cfg) * weight        # (batch,)
+    a_onehot = jax.nn.one_hot(action, b_counts.shape[0],
+                              dtype=q_prev.dtype)           # (batch, A)
+    upd = jnp.einsum("na,nt,ns->ats", a_onehot * w[:, None], q_next, q_prev)
+    return b_counts + cfg.alpha_b * upd
+
+
+def slow_update(key: jax.Array,
+                model: generative.GenerativeModel,
+                buf: ReplayBuffer,
+                cfg: generative.AifConfig) -> generative.GenerativeModel:
+    """One 10-second learning step: sample replay batch, update A and B."""
+    idx, valid = sample_batch(key, buf, cfg.replay_batch)
+    q_prev = buf.q_prev[idx]
+    q_next = buf.q_next[idx]
+    obs = buf.obs_bins[idx]
+    act = buf.action[idx]
+    dts = buf.dt_since_change[idx]
+
+    a_new = update_observation_model(model.a_counts, q_next, obs, valid, cfg)
+    b_new = update_transition_model(model.b_counts, q_prev, q_next, act, dts,
+                                    valid, cfg)
+    return model._replace(a_counts=a_new, b_counts=b_new)

@@ -1,0 +1,79 @@
+"""The 20 discrete routing policies (paper §4.1, Action Space).
+
+An action specifies routing weights ``(w_L, w_M, w_H)`` over the three tiers.
+The paper predefines 20 discrete policies:
+
+  - 1 balanced policy  (0.33, 0.33, 0.34)
+  - 5 heavy-biased     (0.15, 0.25, 0.60) ... (0.0, 0.0, 1.0)
+  - 4 medium-biased
+  - 4 light-biased
+  - 6 adaptive / exploratory
+
+"Discrete actions simplify the planning problem by reducing expected free
+energy computation to evaluation over a finite candidate set, while
+maintaining interpretability."  The set spans uniform load balancing to
+extreme concentration.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# (w_light, w_medium, w_heavy) rows; each row sums to 1.
+_POLICY_TABLE = np.asarray(
+    [
+        # 1 balanced
+        (0.33, 0.33, 0.34),
+        # 5 heavy-biased, (0.15, 0.25, 0.60) -> (0, 0, 1)
+        (0.15, 0.25, 0.60),
+        (0.10, 0.20, 0.70),
+        (0.05, 0.15, 0.80),
+        (0.00, 0.10, 0.90),
+        (0.00, 0.00, 1.00),
+        # 4 medium-biased
+        (0.20, 0.60, 0.20),
+        (0.15, 0.70, 0.15),
+        (0.10, 0.80, 0.10),
+        (0.00, 1.00, 0.00),
+        # 4 light-biased
+        (0.60, 0.25, 0.15),
+        (0.70, 0.20, 0.10),
+        (0.80, 0.10, 0.10),
+        (1.00, 0.00, 0.00),
+        # 6 adaptive / exploratory (pairwise splits + soft concentrations)
+        (0.45, 0.45, 0.10),
+        (0.45, 0.10, 0.45),
+        (0.10, 0.45, 0.45),
+        (0.50, 0.25, 0.25),
+        (0.25, 0.50, 0.25),
+        (0.25, 0.25, 0.50),
+    ],
+    dtype=np.float32,
+)
+
+N_ACTIONS = _POLICY_TABLE.shape[0]
+assert N_ACTIONS == 20
+
+BALANCED_ACTION = 0  # index of the paper's baseline-equivalent policy
+
+
+def policy_table() -> jnp.ndarray:
+    """(N_ACTIONS, 3) routing-weight table."""
+    return jnp.asarray(_POLICY_TABLE)
+
+
+def routing_weights(action) -> jnp.ndarray:
+    """Routing weights (w_L, w_M, w_H) for an action index (traced ok)."""
+    return policy_table()[action]
+
+
+def policy_concentration_cost() -> jnp.ndarray:
+    """Per-action regularization Cost(a) (paper Eq. 1, third term).
+
+    Penalizes extreme routing policies: ``log(3) - H(w)``, i.e. the entropy
+    gap to the uniform split.  Zero for the balanced policy, ``log 3`` for
+    full concentration on one tier.
+    """
+    w = jnp.clip(policy_table(), 1e-12, 1.0)
+    ent = -jnp.sum(w * jnp.log(w), axis=-1)
+    return jnp.log(3.0) - ent

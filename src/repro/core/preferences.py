@@ -1,0 +1,35 @@
+"""Adaptive preference adjustment (paper §4.2, "Adaptive preference adjustment").
+
+Static preferences that always prioritize latency can drive traffic toward
+unstable edge tiers and amplify failures.  AIF-Router therefore monitors the
+recent error rate and, when it exceeds 15%, (a) deepens the error-avoidance
+preference ``C_e`` from −3.0 to −11.5 (log space) and (b) relaxes the latency
+preference ``C_ℓ``.  When the error rate recovers, nominal preferences are
+restored.  The error rate is smoothed with an exponential moving average so a
+single noisy sample does not flip the mode.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import generative
+
+
+def ema_update(error_ema: jnp.ndarray, error_rate: jnp.ndarray,
+               cfg: generative.AifConfig) -> jnp.ndarray:
+    """One fast-loop EMA step of the observed error rate."""
+    decay = 0.5 ** (cfg.fast_period_s / cfg.error_ema_halflife_s)
+    return decay * error_ema + (1.0 - decay) * error_rate
+
+
+def adapt_preferences(error_ema: jnp.ndarray,
+                      cfg: generative.AifConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (c_log, unstable_flag) for the current smoothed error rate.
+
+    Jit-safe: both preference tables are materialized and selected with
+    ``jnp.where`` on the trigger condition.
+    """
+    unstable = error_ema > cfg.error_trigger
+    c_nom = generative.nominal_c_log(cfg)
+    c_uns = generative.unstable_c_log(cfg)
+    return jnp.where(unstable, c_uns, c_nom), unstable

@@ -1,0 +1,140 @@
+"""State / action / observation space design (paper §4.1).
+
+State space
+-----------
+``s_t = (ell, r, u_H, u_M, u_L) in {0,1,2}^5`` — latency level, request-rate
+level and per-tier CPU-utilization level (idle / moderate / saturated), giving
+``|S| = 3^5 = 243`` discrete states.  States are flattened row-major with the
+latency level as the most-significant digit.
+
+Observation space
+-----------------
+Every second the router observes ``o_t = (p95_latency, rps, queue_depth,
+error_rate)``, each discretized into 2-3 bins.  The per-tier utilizations are
+*hidden*: they must be inferred through the observation model A.
+
+To keep every array statically shaped (jit / vmap / Pallas friendly) the four
+observation modalities are stored padded to ``MAX_BINS`` bins with a validity
+mask; padded bins carry zero probability everywhere.
+
+Action space
+------------
+20 discrete routing policies over the (light, medium, heavy) weight simplex —
+see :mod:`repro.core.policies`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Static dimensions (paper constants)
+# ---------------------------------------------------------------------------
+N_LEVELS = 3                      # low / medium / high per state factor
+N_STATE_FACTORS = 5               # (latency, rate, u_H, u_M, u_L)
+N_STATES = N_LEVELS ** N_STATE_FACTORS   # 243
+N_TIERS = 3                       # light / medium / heavy
+
+# Observation modalities and their bin counts (paper: "2-3 bins").
+MODALITIES = ("latency", "rps", "queue", "error")
+N_MODALITIES = len(MODALITIES)
+N_BINS = (3, 3, 3, 2)             # latency, rps, queue: 3 bins; error: 2 bins
+MAX_BINS = max(N_BINS)
+
+# Mask of valid observation bins, shape (N_MODALITIES, MAX_BINS).
+BINS_MASK = np.zeros((N_MODALITIES, MAX_BINS), dtype=np.float32)
+for _m, _nb in enumerate(N_BINS):
+    BINS_MASK[_m, :_nb] = 1.0
+
+
+def bins_mask() -> jnp.ndarray:
+    """(N_MODALITIES, MAX_BINS) float mask of valid observation bins."""
+    return jnp.asarray(BINS_MASK)
+
+
+# ---------------------------------------------------------------------------
+# State indexing
+# ---------------------------------------------------------------------------
+def state_index(levels: Sequence[int]) -> int:
+    """Flatten a 5-tuple of levels into a state index in [0, 243)."""
+    idx = 0
+    for lv in levels:
+        idx = idx * N_LEVELS + int(lv)
+    return idx
+
+
+def state_levels(index) -> jnp.ndarray:
+    """Inverse of :func:`state_index`; works on traced ints too."""
+    index = jnp.asarray(index)
+    digits = []
+    for f in range(N_STATE_FACTORS):
+        power = N_LEVELS ** (N_STATE_FACTORS - 1 - f)
+        digits.append((index // power) % N_LEVELS)
+    return jnp.stack(digits, axis=-1)
+
+
+def state_factor_table() -> np.ndarray:
+    """(N_STATES, N_STATE_FACTORS) int table: level of each factor per state.
+
+    Used to build structured initial A-matrices and by tests.
+    """
+    tbl = np.zeros((N_STATES, N_STATE_FACTORS), dtype=np.int32)
+    for s in range(N_STATES):
+        x = s
+        for f in reversed(range(N_STATE_FACTORS)):
+            tbl[s, f] = x % N_LEVELS
+            x //= N_LEVELS
+    return tbl
+
+
+# ---------------------------------------------------------------------------
+# Observation discretization
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DiscretizationConfig:
+    """Bin edges mapping raw metrics -> observation bins.
+
+    Defaults are calibrated to the paper's testbed scale (P50 ~2-3 s at
+    50 RPS on ResNet-50 CPU tiers).  ``latency_edges_s = (1.0, 3.0)`` means
+    p95 < 1 s -> bin 0 (low), < 3 s -> bin 1 (medium), else bin 2 (high).
+    """
+
+    latency_edges_s: tuple[float, float] = (1.0, 3.0)
+    rps_edges: tuple[float, float] = (48.0, 62.0)
+    queue_edges: tuple[float, float] = (20.0, 80.0)
+    error_edges: tuple[float, ...] = (0.15,)   # 2 bins: low / high error
+
+    def as_padded_edges(self) -> jnp.ndarray:
+        """(N_MODALITIES, MAX_BINS - 1) edge array padded with +inf."""
+        rows = []
+        for edges in (self.latency_edges_s, self.rps_edges,
+                      self.queue_edges, self.error_edges):
+            row = list(edges) + [np.inf] * (MAX_BINS - 1 - len(edges))
+            rows.append(row)
+        return jnp.asarray(rows, dtype=jnp.float32)
+
+
+def discretize_observation(raw: jnp.ndarray,
+                           cfg: DiscretizationConfig) -> jnp.ndarray:
+    """Map raw metrics (latency_s, rps, queue_depth, error_rate) -> bin ids.
+
+    Args:
+      raw: (..., N_MODALITIES) float array of raw metric values.
+      cfg: bin edges.
+
+    Returns:
+      (..., N_MODALITIES) int32 array of observation bin indices.
+    """
+    edges = cfg.as_padded_edges()                       # (M, MAX_BINS-1)
+    raw = jnp.asarray(raw, dtype=jnp.float32)
+    # bin = number of edges strictly below the value.
+    return jnp.sum(raw[..., :, None] >= edges, axis=-1).astype(jnp.int32)
+
+
+def one_hot_observation(obs_bins: jnp.ndarray) -> jnp.ndarray:
+    """(..., M) int bins -> (..., M, MAX_BINS) one-hot (padded bins zero)."""
+    return jnp.asarray(
+        obs_bins[..., None] == jnp.arange(MAX_BINS), dtype=jnp.float32)

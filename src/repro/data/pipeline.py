@@ -1,0 +1,99 @@
+"""Deterministic synthetic LM data pipeline: shardable and resumable.
+
+Production shape without external data deps: each *host* draws its shard of
+the global batch from a counter-based PRNG (`jax.random.fold_in(key, step)`),
+so (a) every host produces disjoint, deterministic data, (b) restoring an
+iterator is just restoring its integer step — the checkpoint stores it and a
+restarted job resumes mid-epoch with zero drift, and (c) elastic re-sharding
+(different host count after restart) re-partitions cleanly because the
+sample index space is global.
+
+The token stream is a structured Markov-ish sequence (not uniform noise) so
+the training loss has learnable signal for the examples/tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    input_mode: str = "tokens"     # tokens | embeddings (audio stub)
+    d_model: int = 0               # for embeddings mode
+
+
+class SyntheticPipeline:
+    """Stateful iterator with explicit (step) state for checkpointing."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, n_hosts: int = 1,
+                 start_step: int = 0):
+        assert cfg.global_batch % n_hosts == 0
+        self.cfg = cfg
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.step = start_step
+        self.key = jax.random.key(cfg.seed)
+
+    # --------------------------------------------------------------- state
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: dict, host_id: int = 0,
+                n_hosts: int = 1) -> "SyntheticPipeline":
+        assert state["seed"] == cfg.seed, "seed mismatch on restore"
+        return cls(cfg, host_id, n_hosts, start_step=int(state["step"]))
+
+    # --------------------------------------------------------------- data
+    def _lcg_coeffs(self) -> tuple[np.ndarray, np.ndarray]:
+        """token_k = (a^k s0 + c·Σ_{j<k} a^j) mod V — deterministic LCG."""
+        v, a, c = self.cfg.vocab_size, 131, 17
+        ak = np.zeros(self.cfg.seq_len, dtype=np.int64)
+        ck = np.zeros(self.cfg.seq_len, dtype=np.int64)
+        x, s = 1, 0
+        for k in range(self.cfg.seq_len):
+            ak[k], ck[k] = x, (c * s) % v
+            s = (s + x) % v
+            x = (x * a) % v
+        return ak, ck
+
+    def _batch_for(self, step: int) -> dict:
+        cfg = self.cfg
+        per_host = cfg.global_batch // self.n_hosts
+        k = jax.random.fold_in(self.key, step)
+        k = jax.random.fold_in(k, self.host_id)
+        kt, ke = jax.random.split(k)
+        # LCG successor stream: token_{t+1} = (a·token_t + c) mod V — a model
+        # that learns the successor table drives the loss to ~0 (tests rely
+        # on this signal).
+        if not hasattr(self, "_coeffs"):
+            self._coeffs = self._lcg_coeffs()
+        ak, ck = self._coeffs
+        s0 = np.asarray(jax.random.randint(kt, (per_host, 1), 0,
+                                           cfg.vocab_size, dtype=jnp.int32),
+                        dtype=np.int64)
+        tokens = jnp.asarray((s0 * ak[None, :] + ck[None, :]) % cfg.vocab_size,
+                             dtype=jnp.int32)
+        labels = jnp.roll(tokens, -1, axis=1)
+        out = {"tokens": tokens, "labels": labels}
+        if cfg.input_mode == "embeddings":
+            out["embeds"] = jax.random.normal(
+                ke, (per_host, cfg.seq_len, cfg.d_model), jnp.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = self._batch_for(self.step)
+        self.step += 1
+        return b

@@ -1,0 +1,10 @@
+"""Calibrated discrete-event simulator of the paper's edge testbed."""
+from repro.envsim.config import SimConfig, TierConfig, default_tiers
+from repro.envsim.harness import (StrategySummary, evaluate_strategy, table1)
+from repro.envsim.routers import AifRouter
+from repro.envsim.simulator import (EdgeSimulator, MetricsSnapshot, RunResult,
+                                    run_experiment)
+
+__all__ = ["SimConfig", "TierConfig", "default_tiers", "StrategySummary",
+           "evaluate_strategy", "table1", "AifRouter", "EdgeSimulator",
+           "MetricsSnapshot", "RunResult", "run_experiment"]

@@ -1,0 +1,65 @@
+"""Router adapters connecting decision policies to the simulator.
+
+``AifRouter`` wraps the core Active Inference agent: every control window it
+discretizes the metrics snapshot into the paper's observation tuple, runs one
+``tick`` (belief update → EFE action selection → online learning on the slow
+cadence) and returns the selected policy's routing weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.envsim.simulator import MetricsSnapshot
+
+
+class AifRouter:
+    """The paper's router, driven by simulator metric snapshots."""
+
+    name = "aif"
+
+    def __init__(self,
+                 cfg: core.AifConfig | None = None,
+                 disc: core.DiscretizationConfig | None = None,
+                 seed: int = 0,
+                 adaptive_preferences: bool = True,
+                 use_util_scrape: bool = True,
+                 util_edges: tuple[float, float] = (0.5, 0.9)):
+        self.cfg = cfg or core.AifConfig()
+        self.disc = disc or core.DiscretizationConfig()
+        self.state = core.init_agent_state(self.cfg)
+        self.key = jax.random.key(seed)
+        self.adaptive_preferences = adaptive_preferences
+        self.use_util_scrape = use_util_scrape
+        self.util_edges = np.asarray(util_edges)
+        self.ticks = 0
+        self.actions: list[int] = []
+        self.unstable_trace: list[bool] = []
+
+    def __call__(self, snapshot: MetricsSnapshot) -> np.ndarray:
+        raw = jnp.asarray([
+            snapshot.p95_latency_s,
+            snapshot.rps,
+            snapshot.queue_depth,
+            snapshot.error_rate,
+        ], dtype=jnp.float32)
+        obs_bins = core.discretize_observation(raw, self.disc)
+        # Ablation lever: freeze the error EMA at 0 to disable adaptation.
+        err = raw[3] if self.adaptive_preferences else jnp.zeros(())
+        # The paper's 10-second resource scrape: per-tier CPU utilization,
+        # reordered (light, medium, heavy) -> state-factor order (H, M, L).
+        util_lmh = snapshot.tier_utilization
+        util_bins = jnp.asarray(
+            np.sum(util_lmh[[2, 1, 0], None] >= self.util_edges[None, :],
+                   axis=-1), dtype=jnp.int32)
+        util_valid = bool(self.use_util_scrape and self.ticks % 10 == 0
+                          and self.ticks > 0)
+        self.key, k = jax.random.split(self.key)
+        self.state, info = core.tick(self.state, obs_bins, err, k, self.cfg,
+                                     util_bins, util_valid)
+        self.ticks += 1
+        self.actions.append(int(info.action))
+        self.unstable_trace.append(bool(info.unstable))
+        return np.asarray(info.routing_weights, dtype=np.float64)

@@ -1,0 +1,225 @@
+"""Flash attention Pallas TPU kernels: prefill and GQA decode.
+
+Prefill kernel — grid (B, Hq, nq, nk), KV innermost (sequential on TPU so
+VMEM scratch persists across the online-softmax accumulation):
+
+  * q tile (block_q, D) stays resident; per step one K/V tile (block_k, D)
+    streams through VMEM; scores/probabilities never touch HBM;
+  * GQA without materializing repeated KV: the K/V BlockSpec index_map sends
+    query head h to KV head h // group;
+  * causal/window masking by absolute positions; fully-masked KV tiles are
+    skipped with ``pl.when`` (the triangular waste the XLA scan path pays);
+  * f32 VMEM scratch accumulators; output written on the last KV step.
+
+Decode kernel — grid (B, Hkv, nk): one query token; rows are the G query
+heads of one KV head; same online-softmax scratch pattern.
+
+VMEM at defaults (block_q=512, block_k=1024, D=128, bf16 inputs):
+q 128 KB + k/v 2×256 KB + acc f32 256 KB ≈ 0.9 MB — well inside ~16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                    scale: float, causal: bool, window: int, nk: int,
+                    block_q: int, block_k: int, q_offset: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = q_offset + qi * block_q
+    k_lo = kj * block_k
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant = jnp.logical_and(relevant, k_lo <= q_lo + block_q - 1)
+    if window > 0:
+        relevant = jnp.logical_and(relevant,
+                                   k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        q_pos = q_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, _NEG)
+        if window > 0:
+            s = jnp.where(k_pos > q_pos - window, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0, q_offset: int = 0,
+                  block_q: int = 512, block_k: int = 1024,
+                  interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    assert hq == g * hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / np.sqrt(d)
+
+    qt = jnp.moveaxis(q, 2, 1)      # (B, Hq, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1)      # (B, Hkv, Skv, D)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, causal=causal, window=window, nk=nk,
+        block_q=bq, block_k=bk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, GQA group per grid step)
+# ---------------------------------------------------------------------------
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   scale: float, window: int, position: int, nk: int,
+                   block_k: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_lo = kj * block_k
+    relevant = k_lo <= position
+    if window > 0:
+        relevant = jnp.logical_and(relevant,
+                                   k_lo + block_k - 1 > position - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bk)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= position, s, _NEG)
+        if window > 0:
+            s = jnp.where(k_pos > position - window, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "position", "block_k", "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 position: int, window: int = 0, block_k: int = 1024,
+                 interpret: bool = True) -> jnp.ndarray:
+    """q: (B, 1, Hq, D) vs cache k/v (B, S, Hkv, D) -> (B, 1, Hq, D)."""
+    b, one, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    bk = min(block_k, s)
+    assert s % bk == 0
+    nk = s // bk
+    scale = 1.0 / np.sqrt(d)
+
+    qt = q[:, 0].reshape(b, hkv, g, d)            # (B, Hkv, G, D)
+    kt = jnp.moveaxis(k, 2, 1)                    # (B, Hkv, S, D)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               position=position, nk=nk, block_k=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, 1, hq, d)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash attention kernels (GQA + causal/window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: int = 0,
+            q_offset: int = 0) -> jnp.ndarray:
+    """Naive masked attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    Positions: q[i] at q_offset+i, k[j] at j.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf) / np.sqrt(d)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+               position: int, window: int = 0) -> jnp.ndarray:
+    """Single-token decode oracle.  q: (B, 1, Hq, D) against (B, S, Hkv, D)."""
+    return mha_ref(q, k, v, causal=True, window=window, q_offset=position)

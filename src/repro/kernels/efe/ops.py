@@ -1,0 +1,60 @@
+"""Jit'd public wrapper for the fleet EFE kernel.
+
+``fleet_efe`` adapts a batched generative model (pseudo-counts, as carried by
+:class:`repro.core.agent.AgentState`) into the kernel's normalized inputs and
+dispatches to the Pallas kernel (TPU) or the pure-jnp oracle (CPU/unit
+tests).  Matches ``repro.core.efe.expected_free_energy`` term-for-term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import generative, policies, spaces
+from repro.kernels.efe.efe import efe_fleet_pallas
+from repro.kernels.efe.ref import efe_fleet_ref
+
+
+def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
+                       c_log: jnp.ndarray, beliefs: jnp.ndarray,
+                       cfg: generative.AifConfig):
+    """Batched (R, ...) counts -> kernel inputs (normalized, fused terms)."""
+    na = jax.vmap(generative.normalize_a)(a_counts)    # (R, M, NB, S)
+    nb = jax.vmap(generative.normalize_b)(b_counts)    # (R, A, S', S)
+    # kernel computes B_a q with contraction over the last dim: transpose so
+    # that out[s'] = sum_s b[s', s] q[s]  — already (S', S) ✓
+    mask = spaces.bins_mask()
+    logits = jnp.where(mask > 0, c_log, -jnp.inf)
+    logc = jax.nn.log_softmax(logits, axis=-1)
+    logc = jnp.where(mask > 0, logc, -60.0)            # padded bins
+    h = -jnp.sum(jnp.where(mask[None, :, :, None] > 0,
+                           na * jnp.log(jnp.maximum(na, 1e-16)), 0.0),
+                 axis=2)                               # (R, M, S)
+    amb = jnp.sum(h, axis=1)                           # (R, S)
+    cost = cfg.cost_weight * policies.policy_concentration_cost()
+    return nb, na, logc, amb, cost
+
+
+def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
+              c_log: jnp.ndarray, beliefs: jnp.ndarray,
+              cfg: generative.AifConfig, *,
+              use_pallas: bool = True, interpret: bool = True,
+              block_r: int = 8) -> jnp.ndarray:
+    """G (R, A) for a fleet of routers.
+
+    Args:
+      a_counts: (R, M, MAX_BINS, S) observation-model pseudo-counts.
+      b_counts: (R, A, S, S) transition pseudo-counts.
+      c_log:    (R, M, MAX_BINS) current log-preferences.
+      beliefs:  (R, S) posteriors.
+    """
+    nb, na, logc, amb, cost = _normalized_inputs(a_counts, b_counts, c_log,
+                                                 beliefs, cfg)
+    if use_pallas:
+        r = beliefs.shape[0]
+        br = block_r
+        while r % br:
+            br //= 2
+        return efe_fleet_pallas(nb, beliefs, na, logc, amb, cost,
+                                block_r=max(br, 1), interpret=interpret)
+    return efe_fleet_ref(nb, beliefs, na, logc, amb, cost)

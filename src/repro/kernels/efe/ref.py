@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fleet EFE kernel.
+
+Inputs are *normalized* distributions (the kernel fuses the inference-time
+hot path, not the pseudo-count normalization, which runs on the slow loop):
+
+  b_norm: (R, A, S, S) — p(s'|s,a) per router, column-stochastic over s'.
+  q:      (R, S)       — current beliefs.
+  a_norm: (R, M, NB, S) — p(o_m=b | s) per router (padded bins are zero).
+  logc:   (R, M, NB)   — log σ(C) preference distributions (padded ~-inf).
+  amb:    (R, S)       — Σ_m H[A_m(·|s)] per state (precomputed on the slow
+                          loop; changes only when A changes).
+  cost:   (A,)         — policy concentration regularizer.
+
+Output: G (R, A) — expected free energy per router × action:
+  ŝ_a = B_a q;  ô = A ŝ_a;  risk = Σ ô·(log ô − logC);  G = risk + ŝ_a·amb + cost.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def efe_fleet_ref(b_norm: jnp.ndarray, q: jnp.ndarray, a_norm: jnp.ndarray,
+                  logc: jnp.ndarray, amb: jnp.ndarray,
+                  cost: jnp.ndarray) -> jnp.ndarray:
+    s_pred = jnp.einsum("rats,rs->rat", b_norm, q)
+    s_pred = s_pred / jnp.maximum(jnp.sum(s_pred, -1, keepdims=True), 1e-30)
+    o_pred = jnp.einsum("rmbs,ras->ramb", a_norm, s_pred)
+    risk = jnp.sum(
+        jnp.where(o_pred > 1e-20,
+                  o_pred * (jnp.log(jnp.maximum(o_pred, 1e-30))
+                            - logc[:, None]), 0.0),
+        axis=(2, 3))
+    ambiguity = jnp.einsum("ras,rs->ra", s_pred, amb)
+    return risk + ambiguity + cost[None, :]

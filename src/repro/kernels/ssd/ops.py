@@ -1,0 +1,20 @@
+"""Public wrapper for the SSD kernel (TPU kernel / jnp oracle dispatch)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd.ssd import ssd_pallas
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 256, interpret: bool | None = None):
+    """Chunked SSD scan; Pallas on TPU, oracle elsewhere.
+
+    x: (B,S,H,P); dt: (B,S,H) positive; a: (H,) negative; b/c: (B,S,G,N).
+    Returns (y, final_state).
+    """
+    if jax.default_backend() == "tpu" or interpret:
+        return ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                          interpret=bool(interpret)
+                          and jax.default_backend() != "tpu")
+    return ssd_ref(x, dt, a, b, c, chunk)

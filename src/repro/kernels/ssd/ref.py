@@ -1,0 +1,17 @@
+"""Oracle for the SSD kernel = the validated pure-jnp chunked scan.
+
+(`repro.models.ssm.ssd_chunked` is itself consistency-tested against the
+single-step recurrence, so it serves as the reference here.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+            c: jnp.ndarray, chunk: int):
+    """x: (B,S,H,P); dt: (B,S,H) (softplus applied); a: (H,) negative;
+    b/c: (B,S,G,N).  Returns (y, final_state)."""
+    return ssd_chunked(x, dt, a, b, c, chunk)

@@ -1,0 +1,120 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (B, H, nc) with the chunk axis innermost/sequential: the running
+(P, N) state lives in f32 VMEM scratch across chunks, so the inter-chunk
+recurrence costs no HBM round-trips; the intra-chunk quadratic part
+(decay-masked (Q, Q) "attention") runs on the MXU.
+
+Per grid step:
+  dta = dt·a;  cs = cumsum(dta)
+  L[i,j]    = exp(cs_i − cs_j) for i ≥ j              (intra-chunk decays)
+  y_intra   = ((C Bᵀ) ∘ L) (dt ∘ x)                    (Q,Q)@(Q,P) on MXU
+  y_inter   = exp(cs) ∘ (C stateᵀ)                     (Q,N)@(N,P)
+  state     = exp(cs_Q)·state + Bᵀ diag(exp(cs_Q−cs)) (dt∘x)
+
+VMEM at Q=256, P=64, N=128 (f32): L 256 KB + score 256 KB + operands ≈ 1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref,
+                state_ref, *, q: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0]                              # scalar f32
+    bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+
+    dta = dt * a                                 # (Q,)
+    cs = jnp.cumsum(dta)                         # (Q,)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ll = jnp.where(ii >= jj, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+
+    xbar = x * dt[:, None]                       # (Q, P)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * ll  # (Q, Q)
+    y = jax.lax.dot_general(scores, xbar, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                       # (P, N)
+    y_inter = jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (Q, P)
+    y = y + y_inter * jnp.exp(cs)[:, None]
+
+    # state update
+    decay_to_end = jnp.exp(cs[-1] - cs)          # (Q,)
+    upd = jax.lax.dot_general(
+        xbar * decay_to_end[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (P, N)
+    state_ref[...] = state * jnp.exp(cs[-1]) + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_out_ref[0, 0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+               b: jnp.ndarray, c: jnp.ndarray, *, chunk: int = 256,
+               interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b/c: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xt = jnp.moveaxis(x, 2, 1)                   # (B, H, S, P)
+    dtt = jnp.moveaxis(dt, 2, 1)                 # (B, H, S)
+    bt = jnp.moveaxis(b, 2, 1)                   # (B, G, S, N)
+    ct = jnp.moveaxis(c, 2, 1)
+    a2 = a.reshape(h, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, q=q, nc=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, q), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a2, bt, ct)
+    return jnp.moveaxis(y, 1, 2), st

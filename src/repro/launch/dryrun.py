@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init).  512 placeholder host devices back the production
+meshes: (16, 16) single-pod and (2, 16, 16) multi-pod.
+
+Per cell this script:
+  1. builds the step fn + ShapeDtypeStruct inputs + shardings (launch.specs),
+  2. ``jax.jit(fn, in_shardings, out_shardings).lower(*args).compile()``,
+  3. prints ``compiled.memory_analysis()`` (proves HBM fit) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parses the optimized HLO for the collective schedule,
+  5. writes one JSON per cell under --outdir.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --outdir results/dryrun
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import SHAPES, all_archs, get_arch          # noqa: E402
+from repro.launch import roofline as rl                        # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.launch.specs import build_cell                      # noqa: E402
+
+
+def run_cell(arch, cell, mesh_name: str, outdir: str) -> dict:
+    t0 = time.time()
+    tag = f"{arch.arch_id}|{cell.name}|{mesh_name}"
+    rec = {"arch": arch.arch_id, "shape": cell.name, "mesh": mesh_name,
+           "step": cell.step, "ok": False}
+    try:
+        from repro import sharding as shd
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        n_chips = mesh.devices.size
+        built = build_cell(arch, cell, mesh)
+        with mesh, shd.activation_constraints(mesh, "train"):
+            jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                             out_shardings=built.out_shardings)
+            lowered = jitted.lower(*built.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            hlo = compiled.as_text()
+            roof = rl.analyze(compiled, built.meta, cell.step, n_chips,
+                              hlo_text=hlo)
+        print(f"[{tag}] OK  lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"[{tag}] memory_analysis: {roof.memory_analysis}")
+        print(f"[{tag}] cost_analysis: flops/chip={roof.flops_per_chip:.3e} "
+              f"bytes/chip={roof.hbm_bytes_per_chip:.3e}")
+        print(f"[{tag}] collectives: {roof.collectives['counts']} "
+              f"link_bytes/chip={roof.link_bytes_per_chip:.3e}")
+        print(f"[{tag}] terms: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"dominant={roof.dominant} useful={roof.useful_ratio:.3f}")
+        rec.update(ok=True, lower_s=t_lower, compile_s=t_compile,
+                   meta=built.meta, roofline=roof.as_dict())
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[{tag}] FAIL {type(e).__name__}: {e}")
+    rec["wall_s"] = time.time() - t0
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        fn = f"{arch.arch_id}__{cell.name}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(outdir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--include-skipped", action="store_true",
+                    help="also attempt cells marked skipped (debug)")
+    args = ap.parse_args()
+
+    archs = all_archs() if args.arch == "all" else [get_arch(args.arch)]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    results = []
+    for arch in archs:
+        cells = list(arch.cells())
+        skipped = dict(arch.skipped_cells())
+        for sh in SHAPES:
+            if args.shape not in ("all", sh.name):
+                continue
+            if sh in skipped and not args.include_skipped:
+                print(f"[{arch.arch_id}|{sh.name}] SKIP: {skipped[sh]}")
+                results.append({"arch": arch.arch_id, "shape": sh.name,
+                                "ok": None, "skip": skipped[sh]})
+                continue
+            if sh not in cells:
+                continue
+            for mesh_name in meshes:
+                results.append(run_cell(arch, sh, mesh_name, args.outdir))
+
+    ok = sum(1 for r in results if r.get("ok"))
+    fail = sum(1 for r in results if r.get("ok") is False)
+    skip = sum(1 for r in results if r.get("ok") is None)
+    print(f"\n=== dry-run summary: {ok} ok, {fail} failed, {skip} skipped ===")
+    if args.outdir:
+        with open(os.path.join(args.outdir, "summary.json"), "w") as f:
+            json.dump(results, f, indent=1)
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

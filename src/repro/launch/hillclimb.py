@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing driver: hypothesis → change → re-lower → measure.
+
+Each *variant* is one candidate change to a chosen (arch × shape) cell;
+the driver lowers+compiles the variant on the single-pod mesh and prints the
+before/after roofline terms.  Results append to results/perf/<cell>.jsonl.
+
+Cells (chosen per the brief):
+  qwen-prefill    worst roofline fraction (memory 717 s vs compute 20 s)
+  jamba-train     most collective-bound (collective 176 s)
+  mixtral-decode  most representative of the paper (serving/decode tier)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell mixtral-decode \
+      --variant serve_replicated
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+
+from repro import sharding as shd                       # noqa: E402
+from repro.configs import SHAPES, get_arch              # noqa: E402
+from repro.launch import roofline as rl                 # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.specs import (build_decode_cell, build_prefill_cell,
+                                build_train_cell)       # noqa: E402
+
+CELLS = {
+    "qwen-prefill": ("qwen1.5-32b", "prefill_32k"),
+    "jamba-train": ("jamba-1.5-large-398b", "train_4k"),
+    "mixtral-decode": ("mixtral-8x7b", "decode_32k"),
+}
+
+
+def _shape(name):
+    return next(s for s in SHAPES if s.name == name)
+
+
+def run_variant(cell_name: str, variant: str) -> dict:
+    arch_id, shape_name = CELLS[cell_name]
+    arch = get_arch(arch_id)
+    cell = _shape(shape_name)
+    mesh = make_production_mesh()
+    act_profile = "train" if cell.step == "train" else "serve"
+
+    # ---- variant knobs -----------------------------------------------
+    if variant == "cap1.0":
+        arch = dataclasses.replace(
+            arch, full=dataclasses.replace(arch.full, capacity_factor=1.0))
+    if variant == "loss_chunk":
+        arch = dataclasses.replace(
+            arch, full=dataclasses.replace(arch.full, loss_chunk=256))
+    if variant == "kvchunk_4k":
+        # bigger attention KV chunks: fewer, larger score tensors
+        pass  # handled via attention defaults; placeholder variant
+
+    t0 = time.time()
+    if cell.step == "train":
+        import repro.launch.specs as specs_mod
+        if variant == "bf16_grads":
+            from repro.training.grad_compression import CompressionConfig
+            orig = specs_mod.train_config_for
+
+            def patched(a):
+                cfg, tcfg = orig(a)
+                tcfg = dataclasses.replace(
+                    tcfg, compression=CompressionConfig(mode="bf16"))
+                return cfg, tcfg
+
+            specs_mod.train_config_for = patched
+            try:
+                built = build_train_cell(arch, cell, mesh)
+            finally:
+                specs_mod.train_config_for = orig
+        else:
+            built = build_train_cell(arch, cell, mesh)
+        if variant == "seqshard":
+            act_profile = "train_seqshard"
+    elif cell.step == "prefill":
+        profile = ("serve_replicated" if "repl" in variant else "serve")
+        built = build_prefill_cell(arch, cell, mesh, profile=profile)
+        if "seqshard" in variant:
+            act_profile = "serve_seqshard"
+    else:
+        profile = ("serve_replicated" if "repl" in variant else "serve")
+        built = build_decode_cell(arch, cell, mesh, profile=profile)
+        if "seqshard" in variant:
+            act_profile = "serve_seqshard"
+
+    with mesh, shd.activation_constraints(mesh, act_profile):
+        compiled = jax.jit(built.fn, in_shardings=built.in_shardings,
+                           out_shardings=built.out_shardings).lower(
+                               *built.args).compile()
+        roof = rl.analyze(compiled, built.meta, cell.step,
+                          mesh.devices.size)
+    rec = {"cell": cell_name, "variant": variant,
+           "wall_s": time.time() - t0,
+           "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+           "collective_s": roof.collective_s, "dominant": roof.dominant,
+           "useful": roof.useful_ratio,
+           "coll_counts": roof.collectives["counts"],
+           "coll_bytes": roof.collectives["out_bytes"],
+           "temp_gb": roof.memory_analysis.get("temp_size_in_bytes",
+                                               0) / 1e9}
+    print(f"[{cell_name}|{variant}] compute={roof.compute_s:.2f}s "
+          f"memory={roof.memory_s:.2f}s collective={roof.collective_s:.2f}s "
+          f"dominant={roof.dominant} useful={roof.useful_ratio:.3f} "
+          f"temp={rec['temp_gb']:.1f}GB")
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{cell_name}.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", required=True)
+    a = ap.parse_args()
+    run_variant(a.cell, a.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,321 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA counts a while-loop body ONCE,
+but our layer stacks / blockwise attention are `lax.scan`s — a 64-layer
+model's compute would be undercounted ~64×.  This analyzer walks the HLO
+computation graph, extracts each while's static trip count from its
+condition computation (the ``constant(N)`` in the `i < N` compare), and
+multiplies nested body costs accordingly.
+
+Counted per executed instruction:
+  * FLOPs — `dot` (2·|out|·Πcontracting) and `convolution`; elementwise /
+    reduction FLOPs are ignored (≤ a few % of matmul FLOPs for these
+    models; documented in EXPERIMENTS.md).
+  * HBM bytes — Σ operand sizes + output size per top-level op (fusions
+    count their operands/outputs once: post-fusion HLO is a good proxy for
+    HBM traffic; views like bitcast/get-tuple-element are skipped).
+  * Collective link bytes — ring-model accounting per collective type.
+
+The module is the per-partition program, so all numbers are per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# Shape text may be a tuple containing `/*index=N*/` comments; the opcode is
+# the first ` word(` after the `=`.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+) = (.+?)\s+([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.link_bytes += other.link_bytes * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry = None
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is not None:
+                self.comps[cur].append(line)
+        # name -> output shape text
+        self.shape_of: dict[str, str] = {}
+        for body in self.comps.values():
+            for line in body:
+                dm = _DEF_RE.match(line)
+                if dm:
+                    self.shape_of[dm.group(1)] = dm.group(2)
+                # parameters also define shapes (same lazy-shape pattern)
+                pm = re.match(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+) = (.+?)\s+"
+                              r"parameter\(", line)
+                if pm:
+                    self.shape_of[pm.group(1)] = pm.group(2)
+        self._memo: dict[str, Stats] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _operands_of(self, line: str) -> tuple[str, list[str], str]:
+        """(opcode, operand names, attrs text after operand list)."""
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return "", [], ""
+        op = dm.group(3)
+        start = line.index(op + "(") + len(op) + 1
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        args = line[start:i - 1]
+        attrs = line[i:]
+        return op, _NAME_RE.findall(args), attrs
+
+    def trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for line in self.comps.get(cond_comp, []):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    def _op_bytes(self, out_shape: str, operands: list[str]) -> float:
+        b = float(shape_bytes(out_shape))
+        for name in operands:
+            b += shape_bytes(self.shape_of.get(name, ""))
+        return b
+
+    def _dot_flops(self, line: str, out_shape: str,
+                   operands: list[str]) -> float:
+        out_elems = 1
+        for d in _shape_elems_dims(out_shape):
+            out_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        lhs_shape = self.shape_of.get(operands[0], "") if operands else ""
+        lhs_dims = _shape_elems_dims(lhs_shape)
+        k = 1
+        if m and m.group(1):
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    # --------------------------------------------------------------- main
+    def comp_stats(self, name: str) -> Stats:
+        if name in self._memo:
+            return self._memo[name]
+        st = Stats()
+        self._memo[name] = st          # break cycles defensively
+        for line in self.comps.get(name, []):
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            out_shape = dm.group(2)
+            op, operands, attrs = self._operands_of(line)
+            if op in _SKIP_OPS or not op:
+                continue
+            if op == "while":
+                bm = re.search(r"body=(%[\w\.\-]+)", line)
+                cm = re.search(r"condition=(%[\w\.\-]+)", line)
+                if bm and cm:
+                    st.add(self.comp_stats(bm.group(1)),
+                           self.trip_count(cm.group(1)))
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      line)
+                names = (_NAME_RE.findall(branches[0]) if branches else
+                         re.findall(r"(?:true|false)_computation="
+                                    r"(%[\w\.\-]+)", line))
+                if names:
+                    sub = [self.comp_stats(n) for n in names]
+                    best = max(sub, key=lambda s: s.flops + s.hbm_bytes)
+                    st.add(best)
+                continue
+            if op == "call":
+                tm = re.search(r"to_apply=(%[\w\.\-]+)", line)
+                if tm:
+                    st.add(self.comp_stats(tm.group(1)))
+                continue
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                n = float(shape_bytes(out_shape))
+                k = self._group_size(line)
+                st.coll_counts[base_op] = st.coll_counts.get(base_op, 0) + 1
+                st.coll_bytes[base_op] = st.coll_bytes.get(base_op, 0.0) + n
+                if base_op == "all-reduce":
+                    st.link_bytes += 2.0 * n * (k - 1) / k
+                elif base_op == "all-gather":
+                    st.link_bytes += n * (k - 1) / k
+                elif base_op == "reduce-scatter":
+                    st.link_bytes += n * (k - 1)
+                elif base_op == "all-to-all":
+                    st.link_bytes += n * (k - 1) / k
+                else:
+                    st.link_bytes += n
+                st.hbm_bytes += self._op_bytes(out_shape, operands)
+                continue
+            if op in ("all-reduce-done", "all-gather-done",
+                      "collective-permute-done", "all-to-all-done"):
+                continue
+            # dynamic-slice reads / dynamic-update-slice writes touch only
+            # the slice, and XLA aliases the DUS buffer in place — counting
+            # the full buffer would overstate HBM traffic by the stack depth.
+            nm = dm.group(1)
+            # CPU-backend artifact: XLA CPU emulates bf16 dots by upcasting
+            # operands to f32 (convert/copy/bitcast fusions whose output is
+            # f32 with exactly the operands' element count).  On the TPU
+            # target bf16 matmuls are native and these ops do not exist —
+            # exclude them from the HBM traffic model.
+            if op in ("fusion", "copy", "convert") and operands:
+                out_dims = _shape_elems_dims(out_shape)
+                out_elems = 1
+                for dd in out_dims:
+                    out_elems *= dd
+                in_elems = 0
+                all_bf16 = True
+                for o in operands:
+                    otxt = self.shape_of.get(o, "")
+                    oe = 1
+                    for dd in _shape_elems_dims(otxt):
+                        oe *= dd
+                    in_elems += oe
+                    if "bf16[" not in otxt:
+                        all_bf16 = False
+                if ("f32[" in out_shape and all_bf16
+                        and in_elems == out_elems):
+                    continue
+                # Layout copies of those upcast temporaries (f32→f32 pure
+                # copy/convert fusions) are part of the same emulation chain.
+                if (in_elems == out_elems
+                        and (nm.startswith("%copy") or
+                             nm.startswith("%convert"))
+                        and op in ("fusion", "copy", "convert")):
+                    continue
+            if "dynamic-update-slice" in nm or op == "dynamic-update-slice":
+                sizes = sorted((shape_bytes(self.shape_of.get(o, ""))
+                                for o in operands), reverse=True)
+                st.hbm_bytes += 2.0 * sum(sizes[1:])   # read update+aux, write slice
+                continue
+            if "dynamic-slice" in nm or op == "dynamic-slice":
+                st.hbm_bytes += 2.0 * shape_bytes(out_shape)
+                continue
+            # Fusions with scalar s32/u32 index operands that read a much
+            # larger buffer are dynamic-slice patterns in disguise (layer-
+            # stack weight slicing inside scans): bill the slice, not the
+            # whole stack.
+            if op == "fusion":
+                has_idx = any(
+                    re.match(r"^[su]32\[\]", self.shape_of.get(o, ""))
+                    for o in operands)
+                sizes = [shape_bytes(self.shape_of.get(o, ""))
+                         for o in operands]
+                ob = shape_bytes(out_shape)
+                if has_idx and sizes and max(sizes) > 8 * max(ob, 1):
+                    st.hbm_bytes += 2.0 * ob + sum(
+                        s for s in sizes if s <= 8 * max(ob, 1))
+                    continue
+            # compute ops
+            if op == "dot":
+                st.flops += self._dot_flops(line, out_shape, operands)
+            elif op == "convolution":
+                # 2 * |out| * prod(kernel spatial+input feature) — parse the
+                # rhs (kernel) total elements / output features as the
+                # contraction size.
+                rhs = self.shape_of.get(operands[1], "") if len(
+                    operands) > 1 else ""
+                out_elems = 1
+                for d in _shape_elems_dims(out_shape):
+                    out_elems *= d
+                rhs_elems = 1
+                for d in _shape_elems_dims(rhs):
+                    rhs_elems *= d
+                out_feat = (_shape_elems_dims(out_shape) or [1])[-1]
+                st.flops += 2.0 * out_elems * max(rhs_elems // max(
+                    out_feat, 1), 1)
+            st.hbm_bytes += self._op_bytes(out_shape, operands)
+        return st
+
+    def _group_size(self, line: str) -> int:
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_LIST_RE.search(line)
+        if m:
+            return max(len(m.group(1).split(",")), 1)
+        return 16
+
+    def entry_stats(self) -> Stats:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_stats(self.entry)
+
+
+def analyze_text(text: str) -> Stats:
+    return HloModule(text).entry_stats()

@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips (TPU v5e-256 pod).
+Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips across 2 pods;
+the "pod" axis carries cross-pod data parallelism over the slower DCI links.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; callers control when devices are
+initialized (the dry-run sets XLA_FLAGS for 512 host devices first).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:   # older jax without devices kwarg
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests on 1-8 CPU devices)."""
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,185 @@
+"""Cell builders: (arch × shape × mesh) -> jit-able fn + ShapeDtypeStruct args.
+
+``build_cell`` returns everything the dry-run needs to
+``jax.jit(fn, in_shardings, out_shardings).lower(*args).compile()`` without
+allocating a single parameter: parameter/optimizer/cache shapes come from
+``jax.eval_shape`` and shardings from the logical-axis resolver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ArchSpec, ShapeCell
+from repro.models import build_model
+from repro.training import optimizer as opt_mod
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, make_train_step)
+
+
+class Cell(NamedTuple):
+    fn: Any
+    args: tuple               # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_config_for(arch: ArchSpec) -> tuple[Any, TrainConfig]:
+    """Pick optimizer + param dtype for the train cell.
+
+    ≥300B params: Adafactor with f32 params (Adam state would blow 16 GB/chip
+    HBM on a single pod even 256-way sharded).  Otherwise AdamW with a f32
+    master over bf16 params.
+    """
+    cfg = arch.full
+    if cfg.param_count() > 150e9:
+        cfg = dataclasses.replace(cfg, param_dtype="float32")
+        ocfg = opt_mod.OptimizerConfig(name="adafactor")
+    else:
+        ocfg = opt_mod.OptimizerConfig(name="adamw", master_fp32=True,
+                                       moment_dtype="float32")
+    return cfg, TrainConfig(optimizer=ocfg)
+
+
+def batch_specs(cfg, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32),
+           "labels": _sds((b, s), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(arch: ArchSpec, cell: ShapeCell) -> dict:
+    """Public helper: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = arch.full
+    if cell.step == "train":
+        cfg, _ = train_config_for(arch)
+        return batch_specs(cfg, cell)
+    if cell.step == "prefill":
+        return batch_specs(cfg, cell)
+    model = build_model(cfg)
+    caches = jax.eval_shape(
+        lambda: model.init_caches(cell.global_batch, cell.seq_len))
+    return {"tokens": _sds((cell.global_batch, 1), jnp.int32),
+            "caches": caches,
+            "position": _sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+def _logits_sharding(mesh: Mesh, cfg, batch: int) -> NamedSharding:
+    spec = shd.resolve_spec((batch, 1, cfg.vocab_size),
+                            ("act_batch", None, "vocab"),
+                            shd.RULE_PROFILES["serve"], mesh)
+    return NamedSharding(mesh, spec)
+
+
+def build_train_cell(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    cfg, tcfg = train_config_for(arch)
+    model = build_model(cfg)
+    step_fn = make_train_step(model, tcfg)
+
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0), tcfg))
+    param_specs = model.param_specs()
+    opt_specs = opt_mod.state_specs(tcfg.optimizer, state_shapes.params,
+                                    param_specs)
+    state_specs = TrainState(params=param_specs, opt=opt_specs,
+                             ef_residual=None)
+    state_sh = shd.resolve_tree(state_shapes, state_specs, "train", mesh)
+
+    b_shapes = batch_specs(cfg, cell)
+    b_sh = shd.batch_sharding(mesh, b_shapes)
+    rep = shd.replicated(mesh)
+    metrics_sh = jax.eval_shape(step_fn, state_shapes, b_shapes)
+    metrics_sh = jax.tree_util.tree_map(lambda _: rep, metrics_sh[1])
+
+    return Cell(
+        fn=step_fn,
+        args=(state_shapes, b_shapes),
+        in_shardings=(state_sh, b_sh),
+        out_shardings=(state_sh, metrics_sh),
+        meta={"mode": "train", "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "tokens": cell.global_batch * cell.seq_len,
+              "optimizer": tcfg.optimizer.name},
+    )
+
+
+def build_prefill_cell(arch: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                       profile: str = "serve") -> Cell:
+    cfg = arch.full
+    model = build_model(cfg)
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    param_sh = shd.resolve_tree(param_shapes, model.param_specs(), profile,
+                                mesh)
+    b_shapes = batch_specs(cfg, cell)
+    b_sh = shd.batch_sharding(mesh, b_shapes)
+    cache_shapes = jax.eval_shape(
+        lambda p, b: model.prefill(p, b)[1], param_shapes, b_shapes)
+    cache_sh = shd.resolve_tree(cache_shapes, model.cache_specs(cell.seq_len),
+                                "serve", mesh)
+
+    def fn(params, batch):
+        return model.prefill(params, batch)
+
+    return Cell(
+        fn=fn,
+        args=(param_shapes, b_shapes),
+        in_shardings=(param_sh, b_sh),
+        out_shardings=(_logits_sharding(mesh, cfg, cell.global_batch),
+                       cache_sh),
+        meta={"mode": "prefill", "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "tokens": cell.global_batch * cell.seq_len},
+    )
+
+
+def build_decode_cell(arch: ArchSpec, cell: ShapeCell, mesh: Mesh,
+                      profile: str = "serve") -> Cell:
+    cfg = arch.full
+    model = build_model(cfg)
+    b, s = cell.global_batch, cell.seq_len
+    param_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    param_sh = shd.resolve_tree(param_shapes, model.param_specs(), profile,
+                                mesh)
+    cache_shapes = jax.eval_shape(lambda: model.init_caches(b, s))
+    cache_sh = shd.resolve_tree(cache_shapes, model.cache_specs(s), "serve",
+                                mesh)
+    tok_shapes = _sds((b, 1), jnp.int32)
+    tok_sh = shd.batch_sharding(mesh, tok_shapes)
+    pos_shapes = _sds((), jnp.int32)
+    rep = shd.replicated(mesh)
+
+    def fn(params, tokens, caches, position):
+        return model.decode_step(params, tokens, caches, position)
+
+    return Cell(
+        fn=fn,
+        args=(param_shapes, tok_shapes, cache_shapes, pos_shapes),
+        in_shardings=(param_sh, tok_sh, cache_sh, rep),
+        out_shardings=(_logits_sharding(mesh, cfg, b), cache_sh),
+        meta={"mode": "decode", "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "tokens": b},
+    )
+
+
+def build_cell(arch: ArchSpec, cell: ShapeCell, mesh: Mesh) -> Cell:
+    if cell.step == "train":
+        return build_train_cell(arch, cell, mesh)
+    if cell.step == "prefill":
+        return build_prefill_cell(arch, cell, mesh)
+    return build_decode_cell(arch, cell, mesh)

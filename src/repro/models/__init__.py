@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures on a shared substrate."""
+from repro.models.config import ModelConfig
+from repro.models.model import (DecoderOnlyLM, EncoderDecoderLM, build_model)
+
+__all__ = ["ModelConfig", "DecoderOnlyLM", "EncoderDecoderLM", "build_model"]

@@ -1,0 +1,266 @@
+"""Attention: GQA/MQA/MHA, causal / sliding-window / bidirectional / cross.
+
+The workhorse is :func:`blockwise_attention` — a doubly-blocked online-softmax
+attention (lax.scan over query chunks, inner scan over KV chunks) so the HLO
+never materializes an (S, S) score matrix; 32k prefill stays memory-bounded
+on every mesh.  This is the XLA baseline path; :mod:`repro.kernels.attention`
+provides the Pallas TPU kernel with the same semantics.
+
+KV caches:
+  * full-attention layers keep (B, S, n_kv, head_dim) per layer;
+  * sliding-window / local layers keep a **ring buffer** of size
+    ``min(S, window)`` — softmax is permutation-invariant over KV entries and
+    RoPE is applied at absolute positions before caching, so a rotated ring
+    needs no unrotation (this is what makes `long_500k` decode O(window) for
+    SWA archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+_NEG = -1e30
+
+
+def _chunk(x: jnp.ndarray, axis: int, size: int) -> jnp.ndarray:
+    """(… N …) -> (n_chunks, … size …) moved to front for scanning."""
+    n = x.shape[axis] // size
+    new_shape = x.shape[:axis] + (n, size) + x.shape[axis + 1:]
+    x = x.reshape(new_shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+def blockwise_attention(q: jnp.ndarray,
+                        k: jnp.ndarray,
+                        v: jnp.ndarray,
+                        *,
+                        mask_mode: str = "causal",
+                        window: int = 0,
+                        q_offset=0,
+                        kv_valid_len=None,
+                        q_chunk: int = 512,
+                        kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks.
+
+    Args:
+      q: (B, Sq, Hq, D) queries.
+      k, v: (B, Skv, Hkv, D); Hq must be a multiple of Hkv (GQA groups).
+      mask_mode: "causal" | "window" (causal ∧ within window) | "full".
+      window: sliding-window size (only for mask_mode == "window").
+      q_offset: absolute position of q[:, 0] — scalar or per-batch (B,)
+        vector (continuous batching decodes at ragged positions).  KV
+        positions are 0..Skv-1 absolute.
+      kv_valid_len: optional scalar or (B,) — KV *indices* >= this are masked
+        in any mode (cold ring caches, padded cross-attention memories).
+      q_chunk/kv_chunk: block sizes (clamped to the actual lengths).
+
+    Returns (B, Sq, Hq, D).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    assert hq == g * hkv, (hq, hkv)
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+    scale = 1.0 / np.sqrt(d)
+
+    qg = q.reshape(b, sq, hkv, g, d)
+    q_chunks = _chunk(qg, 1, cq)                       # (nq, B, cq, hkv, g, d)
+    k_chunks = _chunk(k, 1, ck)                        # (nk, B, ck, hkv, d)
+    v_chunks = _chunk(v, 1, ck)
+    nk = k_chunks.shape[0]
+    # Scalar offsets keep masks batch-free: XLA hoists loop-invariant mask
+    # construction out of the chunk scans, and a (B, nq, nk, cq, ck) hoisted
+    # mask would be the full S×S bitmap.  Only ragged serving pays for the
+    # per-batch (B,) form.
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    per_batch = q_offset.ndim > 0
+    if kv_valid_len is not None:
+        kv_valid_len = jnp.asarray(kv_valid_len, jnp.int32)
+        per_batch = per_batch or kv_valid_len.ndim > 0
+    if per_batch:
+        q_offset = jnp.broadcast_to(q_offset, (b,))
+        if kv_valid_len is not None:
+            kv_valid_len = jnp.broadcast_to(kv_valid_len, (b,))
+
+    def q_block(carry, q_in):
+        qi, qc = q_in                                  # index, (B,cq,hkv,g,d)
+        if per_batch:
+            q_pos = (q_offset[:, None] + qi * cq
+                     + jnp.arange(cq)[None, :])        # (B, cq)
+        else:
+            q_pos = q_offset + qi * cq + jnp.arange(cq)   # (cq,)
+
+        def kv_block(state, kv_in):
+            m, l, acc = state
+            ki, kc, vc = kv_in
+            k_pos = ki * ck + jnp.arange(ck)           # (ck,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if mask_mode != "full":
+                mask = k_pos[None, :] <= q_pos[..., :, None]
+                if mask_mode == "window" and window > 0:
+                    mask &= k_pos[None, :] > q_pos[..., :, None] - window
+                # (cq, ck) -> [None]*3; (B, cq, ck) -> batch leading
+                s = jnp.where(mask[:, None, None] if per_batch
+                              else mask[None, None, None], s, _NEG)
+            if kv_valid_len is not None:
+                if per_batch:
+                    vmask = k_pos[None, :] < kv_valid_len[:, None]
+                    s = jnp.where(vmask[:, None, None, None], s, _NEG)
+                else:
+                    vmask = k_pos < kv_valid_len
+                    s = jnp.where(vmask[None, None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))        # (b,h,g,q)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(nk), k_chunks, v_chunks))
+        out = acc / jnp.maximum(l[..., None], 1e-30)           # (b,h,g,q,d)
+        out = jnp.moveaxis(out, 3, 1).reshape(b, cq, hkv * g, d)
+        return carry, out.astype(q.dtype)
+
+    nq = q_chunks.shape[0]
+    _, outs = jax.lax.scan(q_block, (), (jnp.arange(nq), q_chunks))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+def init_attention(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(kq, (d, hq, hd), dtype) * s,
+        "wk": jax.random.normal(kk, (d, hkv, hd), dtype) * s,
+        "wv": jax.random.normal(kv, (d, hkv, hd), dtype) * s,
+        "wo": jax.random.normal(ko, (hq, hd, d), dtype) * (
+            1.0 / np.sqrt(hq * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    return p
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads", "head_dim")
+        p["bk"] = ("kv_heads", "head_dim")
+        p["bv"] = ("kv_heads", "head_dim")
+    return p
+
+
+def qkv_project(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                positions) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd), RoPE applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = apply_rope_positions(q, positions, cfg.rope_theta)
+    k = apply_rope_positions(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_rope_positions(x, positions, theta):
+    from repro.models.layers import apply_rope
+    return apply_rope(x, positions, theta)
+
+
+def attn_output(params: dict, o: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, layer_idx: int, seq_len: int) -> int:
+    """Per-layer cache length: ring-bounded for windowed/local layers."""
+    if not cfg.serve_ring_caches:
+        return seq_len
+    if cfg.attn_type == "swa":
+        return min(seq_len, cfg.sliding_window)
+    if cfg.attn_type == "local_global" and not cfg.is_global_attn_layer(
+            layer_idx):
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_specs() -> dict:
+    return {"k": ("act_batch", "act_kv", "kv_heads", "head_dim"),
+            "v": ("act_batch", "act_kv", "kv_heads", "head_dim")}
+
+
+def cache_write_decode(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                       position) -> dict:
+    """Write one token's K/V at ``position % cache_len`` (ring semantics).
+
+    ``position`` may be a scalar or a per-batch (B,) vector (continuous
+    batching decodes different sequences at different positions).
+    """
+    length = cache["k"].shape[1]
+    bsz = cache["k"].shape[0]
+    pos = jnp.asarray(position, jnp.int32)
+    if pos.ndim == 0:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                         (0, pos % length, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                         (0, pos % length, 0, 0))
+        return {"k": k, "v": v}
+    slot = pos % length                                    # (B,)
+    bidx = jnp.arange(bsz)
+    return {"k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v_new[:, 0])}
+
+
+def decode_attend(cache: dict, q: jnp.ndarray, *, full_ring: bool,
+                  position, window: int, kv_chunk: int = 2048) -> jnp.ndarray:
+    """Single-token attention against a (possibly ring) cache.
+
+    For a warm ring cache every slot is within the window, and softmax is
+    permutation-invariant, so no mask is needed (``full_ring=True``).  For a
+    full-length cache, slots beyond ``position`` are masked causally by
+    passing absolute positions.
+    """
+    if full_ring:
+        return blockwise_attention(q, cache["k"], cache["v"],
+                                   mask_mode="full", q_chunk=1,
+                                   kv_chunk=kv_chunk)
+    return blockwise_attention(q, cache["k"], cache["v"],
+                               mask_mode="window" if window > 0 else "causal",
+                               window=window, q_offset=position,
+                               q_chunk=1, kv_chunk=kv_chunk)

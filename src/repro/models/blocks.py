@@ -1,0 +1,326 @@
+"""Layer blocks + the period-stack: heterogeneous depth with O(1) compile.
+
+A *block* is one residual layer: (norm → mixer → residual, norm → FFN/MoE →
+residual).  The mixer is attention (full/SWA/local/global) or Mamba-2
+depending on ``cfg.layer_kind(i)``.
+
+The **period-stack** groups layers by their position inside the repeating
+kind-pattern (period P = ``cfg.period()``): each position gets a stacked
+parameter tree of ``n_layers // P`` (+1 for pattern tails) layers, and the
+model scans over periods executing P sub-blocks per step.  Compile time is
+O(P) regardless of depth — 80 multi-pod dry-run compiles on one CPU core
+depend on this.
+
+Examples: dense archs have P=1; gemma3 (5 local : 1 global) has P=6; jamba
+(7 mamba : 1 attention, MoE every 2nd) has P=8.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers, moe as moe_mod, ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Single block init / specs
+# ---------------------------------------------------------------------------
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str,
+               cross_attention: bool = False) -> dict:
+    dtype = layers.dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {
+        "norm_mixer": layers.init_rmsnorm(cfg.d_model, dtype),
+        "norm_mlp": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if "mamba" in kind:
+        p["mamba"] = ssm_mod.init_mamba(k1, cfg, dtype)
+    else:
+        p["attn"] = attn_mod.init_attention(k1, cfg, dtype)
+    if "moe" in kind:
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    elif "mlp" in kind:
+        p["mlp"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        del p["norm_mlp"]            # pure-mixer layer (mamba2 block)
+    if cross_attention:
+        p["norm_cross"] = layers.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = attn_mod.init_attention(k3, cfg, dtype)
+    return p
+
+
+def block_specs(cfg: ModelConfig, kind: str,
+                cross_attention: bool = False) -> dict:
+    p: dict[str, Any] = {
+        "norm_mixer": layers.rmsnorm_specs(),
+        "norm_mlp": layers.rmsnorm_specs(),
+    }
+    if "mamba" in kind:
+        p["mamba"] = ssm_mod.mamba_specs(cfg)
+    else:
+        p["attn"] = attn_mod.attention_specs(cfg)
+    if "moe" in kind:
+        p["moe"] = moe_mod.moe_specs(cfg)
+    elif "mlp" in kind:
+        p["mlp"] = layers.mlp_specs()
+    else:
+        del p["norm_mlp"]
+    if cross_attention:
+        p["norm_cross"] = layers.rmsnorm_specs()
+        p["cross"] = attn_mod.attention_specs(cfg)
+    return p
+
+
+def _mask_args(cfg: ModelConfig, kind: str) -> tuple[str, int]:
+    if kind.startswith("swa") or kind.startswith("lattn"):
+        return "window", cfg.sliding_window
+    if kind.startswith("enc"):
+        return "full", 0
+    return "causal", 0
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence application (train / prefill)
+# ---------------------------------------------------------------------------
+def apply_block(params: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
+                positions: jnp.ndarray,
+                memory: jnp.ndarray | None = None,
+                want_cache: bool = False,
+                layer_idx: int = 0, seq_len: int = 0):
+    """One block over a full sequence.
+
+    Returns (x, aux_loss, cache) — cache is None unless want_cache.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+
+    h = layers.rmsnorm(params["norm_mixer"], x, cfg.norm_eps)
+    if "mamba" in kind:
+        out, state = ssm_mod.mamba_forward(params["mamba"], h, cfg,
+                                           state=None)
+        if want_cache:
+            cache = {"mamba": state}
+    else:
+        q, k, v = attn_mod.qkv_project(params["attn"], h, cfg, positions)
+        mode, window = _mask_args(cfg, kind)
+        attn_fn = lambda q_, k_, v_: attn_mod.blockwise_attention(  # noqa: E731
+            q_, k_, v_, mask_mode=mode, window=window, q_offset=0)
+        if cfg.remat != "none" and not want_cache:
+            # Flash-attention memory policy: never materialize the chunked
+            # probability tensors as residuals — recompute in backward.
+            attn_fn = jax.checkpoint(attn_fn)
+        out = attn_fn(q, k, v)
+        out = attn_mod.attn_output(params["attn"], out)
+        if want_cache:
+            # seq_len here is the cache CAPACITY (max_len >= S).
+            s = k.shape[1]
+            clen = attn_mod.cache_len(cfg, layer_idx, seq_len)
+            if clen <= s:
+                # Ring cache: slot of position p is p % clen.  The last clen
+                # positions [S-clen, S) land there after a static roll.
+                r = s % clen
+                cache = {"attn": {"k": jnp.roll(k[:, -clen:], r, axis=1),
+                                  "v": jnp.roll(v[:, -clen:], r, axis=1)}}
+            else:
+                pad = [(0, 0), (0, clen - s), (0, 0), (0, 0)]
+                cache = {"attn": {"k": jnp.pad(k, pad),
+                                  "v": jnp.pad(v, pad)}}
+    x = x + out.astype(x.dtype)
+
+    if memory is not None and "cross" in params:
+        h = layers.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, params["cross"]["wq"].astype(h.dtype))
+        mk = jnp.einsum("bsd,dhk->bshk", memory, params["cross"]["wk"].astype(memory.dtype))
+        mv = jnp.einsum("bsd,dhk->bshk", memory, params["cross"]["wv"].astype(memory.dtype))
+        out = attn_mod.blockwise_attention(q, mk, mv, mask_mode="full")
+        x = x + attn_mod.attn_output(params["cross"], out).astype(x.dtype)
+
+    if "moe" in kind or "mlp" in kind:
+        h = layers.rmsnorm(params["norm_mlp"], x, cfg.norm_eps)
+        if "moe" in kind:
+            out, aux = moe_mod.apply_moe(params["moe"], h, cfg)
+        else:
+            out = layers.apply_mlp(params["mlp"], h, cfg.mlp_act)
+        x = x + out.astype(x.dtype)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode application
+# ---------------------------------------------------------------------------
+def decode_block(params: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str,
+                 cache: dict, position,
+                 cross_memory_cache: dict | None = None):
+    """One block for one new token.  x: (B, 1, D).  Returns (x, new_cache)."""
+    h = layers.rmsnorm(params["norm_mixer"], x, cfg.norm_eps)
+    if "mamba" in kind:
+        out, state = ssm_mod.mamba_decode(params["mamba"], h, cfg,
+                                          cache["mamba"])
+        new_cache = {"mamba": state}
+    else:
+        pos = jnp.asarray(position, jnp.int32)
+        pos_arr = pos.reshape(-1, 1) if pos.ndim else pos[None, None]
+        q, k, v = attn_mod.qkv_project(params["attn"], h, cfg, pos_arr)
+        ac = attn_mod.cache_write_decode(cache["attn"], k, v, position)
+        mode, window = _mask_args(cfg, kind)
+        clen = ac["k"].shape[1]
+        full_ring = (mode == "window" and clen <= window)
+        out = attn_mod.decode_attend(ac, q, full_ring=full_ring,
+                                     position=position, window=window)
+        out = attn_mod.attn_output(params["attn"], out)
+        new_cache = {"attn": ac}
+    x = x + out.astype(x.dtype)
+
+    if cross_memory_cache is not None and "cross" in params:
+        h = layers.rmsnorm(params["norm_cross"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, params["cross"]["wq"].astype(h.dtype))
+        out = attn_mod.blockwise_attention(
+            q, cross_memory_cache["k"], cross_memory_cache["v"],
+            mask_mode="full", q_chunk=1)
+        x = x + attn_mod.attn_output(params["cross"], out).astype(x.dtype)
+
+    if "moe" in kind or "mlp" in kind:
+        h = layers.rmsnorm(params["norm_mlp"], x, cfg.norm_eps)
+        if "moe" in kind:
+            out, _ = moe_mod.apply_moe(params["moe"], h, cfg)
+        else:
+            out = layers.apply_mlp(params["mlp"], h, cfg.mlp_act)
+        x = x + out.astype(x.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Period-stack
+# ---------------------------------------------------------------------------
+class PeriodStack:
+    """Stacked heterogeneous layers scanned over the repeating pattern."""
+
+    def __init__(self, cfg: ModelConfig, cross_attention: bool = False,
+                 n_layers: int | None = None,
+                 kind_of: Callable[[int], str] | None = None):
+        self.cfg = cfg
+        self.cross = cross_attention
+        self.n_layers = cfg.n_layers if n_layers is None else n_layers
+        self.kind_of = kind_of or cfg.layer_kind
+        kinds = [self.kind_of(i) for i in range(self.n_layers)]
+        period = 1
+        for p in range(1, self.n_layers + 1):
+            if all(kinds[i] == kinds[i % p] for i in range(self.n_layers)):
+                period = p
+                break
+        self.period = period
+        self.kinds = kinds[:period]
+        self.n_full = self.n_layers // period
+        self.tail = self.n_layers % period
+
+    def stack_len(self, pos: int) -> int:
+        return self.n_full + (1 if pos < self.tail else 0)
+
+    def layer_index(self, pos: int, rep: int) -> int:
+        return rep * self.period + pos
+
+    # ------------------------------------------------------------- params
+    def init(self, key: jax.Array) -> dict:
+        out = {}
+        for pos, kind in enumerate(self.kinds):
+            n = self.stack_len(pos)
+            keys = jax.random.split(jax.random.fold_in(key, pos), n)
+            stacked = jax.vmap(
+                lambda k: init_block(k, self.cfg, kind, self.cross))(keys)
+            out[f"pos{pos}"] = stacked
+        return out
+
+    def specs(self) -> dict:
+        out = {}
+        for pos, kind in enumerate(self.kinds):
+            spec = block_specs(self.cfg, kind, self.cross)
+            out[f"pos{pos}"] = jax.tree_util.tree_map(
+                lambda s: ("layers",) + tuple(s), spec,
+                is_leaf=lambda s: isinstance(s, tuple))
+        return out
+
+    # ------------------------------------------------- full-sequence apply
+    def apply(self, params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              memory: jnp.ndarray | None = None, remat: bool = False,
+              want_cache: bool = False, seq_len: int = 0):
+        """Returns (x, total_aux, caches) — caches stacked per position."""
+        cfg = self.cfg
+
+        def period_body(carry, stacks_slice):
+            from repro.sharding import constrain_act
+            x, aux = carry
+            x = constrain_act(x)
+            caches = {}
+            for pos, kind in enumerate(self.kinds):
+                x, a, c = apply_block(stacks_slice[f"pos{pos}"], x, cfg, kind,
+                                      positions, memory=memory,
+                                      want_cache=want_cache, layer_idx=pos,
+                                      seq_len=seq_len)
+                aux = aux + a
+                if want_cache:
+                    caches[f"pos{pos}"] = c
+            return (x, aux), (caches if want_cache else None)
+
+        body = jax.checkpoint(period_body) if remat else period_body
+        main = {k: jax.tree_util.tree_map(lambda a: a[:self.n_full], v)
+                for k, v in params.items()}
+        (x, aux), scan_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), main)
+
+        tail_caches = {}
+        for pos in range(self.tail):
+            tail_p = jax.tree_util.tree_map(lambda a: a[self.n_full],
+                                            params[f"pos{pos}"])
+            x, a, c = apply_block(tail_p, x, cfg, self.kinds[pos], positions,
+                                  memory=memory, want_cache=want_cache,
+                                  layer_idx=pos, seq_len=seq_len)
+            aux = aux + a
+            if want_cache:
+                tail_caches[f"pos{pos}"] = c
+        caches = ({"main": scan_caches, "tail": tail_caches}
+                  if want_cache else None)
+        return x, aux, caches
+
+    # --------------------------------------------------------- decode apply
+    def decode(self, params: dict, x: jnp.ndarray, caches: dict, position,
+               cross_caches: dict | None = None):
+        """One-token step through the whole stack.
+
+        ``caches`` / ``cross_caches`` are {"main": {posX: stacked}, "tail":
+        {posX: single}} trees as produced by prefill / init_caches.
+        """
+        cfg = self.cfg
+        has_cross = cross_caches is not None
+        main_p = {k: jax.tree_util.tree_map(lambda a: a[:self.n_full], v)
+                  for k, v in params.items()}
+        xs = ((main_p, caches["main"], cross_caches["main"]) if has_cross
+              else (main_p, caches["main"]))
+
+        def body(x, inp):
+            stacks_slice, cache_slice = inp[0], inp[1]
+            cross_slice = inp[2] if has_cross else None
+            new_caches = {}
+            for pos, kind in enumerate(self.kinds):
+                cmc = cross_slice[f"pos{pos}"] if has_cross else None
+                x, nc = decode_block(stacks_slice[f"pos{pos}"], x, cfg, kind,
+                                     cache_slice[f"pos{pos}"], position,
+                                     cross_memory_cache=cmc)
+                new_caches[f"pos{pos}"] = nc
+            return x, new_caches
+
+        x, new_main = jax.lax.scan(body, x, xs)
+
+        new_tail = {}
+        for pos in range(self.tail):
+            tail_p = jax.tree_util.tree_map(lambda a: a[self.n_full],
+                                            params[f"pos{pos}"])
+            cmc = cross_caches["tail"][f"pos{pos}"] if has_cross else None
+            x, nc = decode_block(tail_p, x, cfg, self.kinds[pos],
+                                 caches["tail"][f"pos{pos}"], position,
+                                 cross_memory_cache=cmc)
+            new_tail[f"pos{pos}"] = nc
+        return x, {"main": new_main, "tail": new_tail}

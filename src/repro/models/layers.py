@@ -1,0 +1,152 @@
+"""Common layers: norms, rotary embeddings, gated MLPs, embeddings, losses.
+
+Parameters are plain nested dicts of ``jnp`` arrays.  Every ``init_*`` has a
+matching ``*_specs`` returning the same tree with tuples of *logical axis
+names* per dimension; :mod:`repro.sharding` maps logical names to mesh axes
+(this is how sharding is hillclimbed without touching model code).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_specs() -> dict:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (.., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "wi": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "wg": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "wo": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp_specs() -> dict:
+    return {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+            "wo": ("mlp", "embed")}
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ params["wi"].astype(x.dtype)
+    g = x @ params["wg"].astype(x.dtype)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (h * g) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings & LM head
+# ---------------------------------------------------------------------------
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = dtype_of(cfg)
+    out = {"table": jax.random.normal(
+        key, (cfg.vocab_size, cfg.d_model), dtype) * 0.02}
+    if not cfg.tie_embeddings:
+        out["head"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size),
+            dtype) * (1.0 / np.sqrt(cfg.d_model))
+    return out
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    out = {"table": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        out["head"] = ("embed", "vocab")
+    return out
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["table"], tokens, axis=0)
+    return (x * np.sqrt(cfg.d_model)).astype(dtype_of(cfg, "compute"))
+
+
+def lm_logits(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ params["table"].T.astype(x.dtype)
+    return x @ params["head"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (..., V) any dtype, f32 reduction."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_lm_loss(emb_params: dict, x: jnp.ndarray, labels: jnp.ndarray,
+                    cfg: ModelConfig) -> jnp.ndarray:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks of size ``cfg.loss_chunk`` — the memory-term
+    lever for huge-vocab archs (gemma/gemma3/seamless, V ≥ 256k).
+    """
+    if cfg.loss_chunk <= 0 or x.shape[1] <= cfg.loss_chunk:
+        return softmax_xent(lm_logits(emb_params, x, cfg), labels)
+    b, s, d = x.shape
+    c = cfg.loss_chunk
+    n = s // c
+    assert s % c == 0, f"seq {s} not divisible by loss_chunk {c}"
+    xc = x.reshape(b, n, c, d).swapaxes(0, 1)          # (n, B, c, d)
+    lc = labels.reshape(b, n, c).swapaxes(0, 1)        # (n, B, c)
+
+    def body(carry, inp):
+        xi, li = inp
+        return carry + softmax_xent(lm_logits(emb_params, xi, cfg), li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / n

@@ -1,0 +1,298 @@
+"""Model assembly: decoder-only LM and encoder-decoder, over the period-stack.
+
+Public entry point: :func:`build_model` — returns an object exposing
+
+  init(key) -> params                      (also: param_specs() logical tree)
+  train_loss(params, batch) -> (loss, aux)
+  prefill(params, batch) -> (last_logits, caches)
+  decode_step(params, tokens, caches, position) -> (logits, caches)
+  init_caches(batch_size, seq_len) -> zero caches (decode-only entry)
+
+Batches are dicts: {"tokens": (B,S) int32, "labels": (B,S) int32} for
+token-input archs; {"embeds": (B,S,D)} replaces "tokens" for the audio
+frontend stub (seamless-m4t), plus {"tokens","labels"} for its decoder side.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import layers
+from repro.models.blocks import PeriodStack
+from repro.models.config import ModelConfig
+
+
+def _spec_wrap(spec):
+    return jax.tree_util.tree_map(lambda s: tuple(s), spec,
+                                  is_leaf=lambda s: isinstance(s, tuple))
+
+
+class DecoderOnlyLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stack = PeriodStack(cfg)
+
+    # ------------------------------------------------------------- params
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dtype = layers.dtype_of(cfg)
+        ke, ks = jax.random.split(key)
+        return {
+            "embed": layers.init_embedding(ke, cfg),
+            "stack": self.stack.init(ks),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def param_specs(self) -> dict:
+        return {
+            "embed": _spec_wrap(layers.embedding_specs(self.cfg)),
+            "stack": self.stack.specs(),
+            "final_norm": _spec_wrap(layers.rmsnorm_specs()),
+        }
+
+    # -------------------------------------------------------------- embed
+    def _embed(self, params: dict, batch: dict) -> jnp.ndarray:
+        from repro.sharding import constrain_act
+        if self.cfg.input_mode == "embeddings" and "embeds" in batch:
+            x = batch["embeds"].astype(layers.dtype_of(self.cfg, "compute"))
+        else:
+            x = layers.embed_tokens(params["embed"], batch["tokens"],
+                                    self.cfg)
+        return constrain_act(x)
+
+    # --------------------------------------------------------------- train
+    def train_loss(self, params: dict, batch: dict):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        x, aux, _ = self.stack.apply(params["stack"], x, positions,
+                                     remat=(cfg.remat == "full"))
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        loss = layers.chunked_lm_loss(params["embed"], x, batch["labels"],
+                                      cfg)
+        return loss, aux
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params: dict, batch: dict, max_len: int | None = None,
+                last_index=None):
+        """Prefill; caches get capacity ``max_len`` (≥ prompt length).
+
+        ``last_index``: position whose logits to return (defaults to the
+        final position; right-padded prompts pass their true last index).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        max_len = max_len or s
+        positions = jnp.arange(s)
+        x, _, caches = self.stack.apply(params["stack"], x, positions,
+                                        want_cache=True, seq_len=max_len)
+        if last_index is None:
+            x = x[:, -1:]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.lm_logits(params["embed"], x, cfg)
+        return logits, caches
+
+    def decode_step(self, params: dict, tokens: jnp.ndarray, caches: dict,
+                    position):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], tokens, cfg)
+        x, caches = self.stack.decode(params["stack"], x, caches, position)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.lm_logits(params["embed"], x, cfg)
+        return logits, caches
+
+    def init_caches(self, batch_size: int, seq_len: int) -> dict:
+        """Zero caches shaped for decoding against a seq_len context."""
+        from repro.models import ssm as ssm_mod
+        cfg = self.cfg
+        dtype = layers.dtype_of(cfg, "compute")
+
+        def one(pos: int) -> dict:
+            kind = self.stack.kinds[pos]
+            if "mamba" in kind:
+                return {"mamba": ssm_mod.init_mamba_state(cfg, batch_size,
+                                                          dtype)}
+            clen = attn_mod.cache_len(cfg, pos, seq_len)
+            return {"attn": attn_mod.init_cache(cfg, batch_size, clen,
+                                                dtype)}
+
+        main = {}
+        for pos in range(self.stack.period):
+            c = one(pos)
+            main[f"pos{pos}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a, (self.stack.n_full,) + a.shape), c)
+        tail = {f"pos{p}": one(p) for p in range(self.stack.tail)}
+        return {"main": main, "tail": tail}
+
+    def cache_specs(self, seq_len: int) -> dict:
+        from repro.models import ssm as ssm_mod
+        cfg = self.cfg
+
+        def one(pos: int, stacked: bool) -> dict:
+            kind = self.stack.kinds[pos]
+            spec = ({"mamba": ssm_mod.mamba_state_specs()}
+                    if "mamba" in kind else
+                    {"attn": attn_mod.cache_specs()})
+            if stacked:
+                spec = jax.tree_util.tree_map(
+                    lambda s: ("layers",) + tuple(s), spec,
+                    is_leaf=lambda s: isinstance(s, tuple))
+            return spec
+
+        return {"main": {f"pos{p}": one(p, True)
+                         for p in range(self.stack.period)},
+                "tail": {f"pos{p}": one(p, False)
+                         for p in range(self.stack.tail)}}
+
+
+class EncoderDecoderLM:
+    """seamless-m4t style: stub frontend embeddings -> encoder -> decoder."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.enc_stack = PeriodStack(cfg, n_layers=cfg.n_enc_layers,
+                                     kind_of=lambda i: "encattn_mlp")
+        self.dec_stack = PeriodStack(cfg, cross_attention=True)
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dtype = layers.dtype_of(cfg)
+        ke, k1, k2 = jax.random.split(key, 3)
+        return {
+            "embed": layers.init_embedding(ke, cfg),
+            "encoder": self.enc_stack.init(k1),
+            "decoder": self.dec_stack.init(k2),
+            "enc_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def param_specs(self) -> dict:
+        return {
+            "embed": _spec_wrap(layers.embedding_specs(self.cfg)),
+            "encoder": self.enc_stack.specs(),
+            "decoder": self.dec_stack.specs(),
+            "enc_norm": _spec_wrap(layers.rmsnorm_specs()),
+            "final_norm": _spec_wrap(layers.rmsnorm_specs()),
+        }
+
+    def _encode(self, params: dict, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        x = batch["embeds"].astype(layers.dtype_of(cfg, "compute"))
+        positions = jnp.arange(x.shape[1])
+        x, _, _ = self.enc_stack.apply(params["encoder"], x, positions,
+                                       remat=(cfg.remat == "full"))
+        return layers.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def train_loss(self, params: dict, batch: dict):
+        cfg = self.cfg
+        memory = self._encode(params, batch)
+        x = layers.embed_tokens(params["embed"], batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+        x, aux, _ = self.dec_stack.apply(params["decoder"], x, positions,
+                                         memory=memory,
+                                         remat=(cfg.remat == "full"))
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        loss = layers.chunked_lm_loss(params["embed"], x, batch["labels"],
+                                      cfg)
+        return loss, aux
+
+    def _cross_caches(self, params: dict, memory: jnp.ndarray):
+        """Per-decoder-layer cross K/V from encoder memory (stacked)."""
+        def project(stacked_cross, mem):
+            mk = jnp.einsum("bsd,ldhk->lbshk", mem, stacked_cross["wk"].astype(mem.dtype))
+            mv = jnp.einsum("bsd,ldhk->lbshk", mem, stacked_cross["wv"].astype(mem.dtype))
+            return {"k": mk, "v": mv}
+
+        st = self.dec_stack
+        out_main = {}
+        for pos in range(st.period):
+            cross = jax.tree_util.tree_map(
+                lambda a: a[:st.n_full],
+                params["decoder"][f"pos{pos}"]["cross"])
+            out_main[f"pos{pos}"] = project(cross, memory)
+        out_tail = {}
+        for pos in range(st.tail):
+            cross = jax.tree_util.tree_map(
+                lambda a: a[st.n_full],
+                params["decoder"][f"pos{pos}"]["cross"])
+            mk = jnp.einsum("bsd,dhk->bshk", memory, cross["wk"].astype(memory.dtype))
+            mv = jnp.einsum("bsd,dhk->bshk", memory, cross["wv"].astype(memory.dtype))
+            out_tail[f"pos{pos}"] = {"k": mk, "v": mv}
+        return {"main": out_main, "tail": out_tail}
+
+    def prefill(self, params: dict, batch: dict, max_len: int | None = None):
+        """Encode source; prefill decoder over the target prefix."""
+        cfg = self.cfg
+        memory = self._encode(params, batch)
+        x = layers.embed_tokens(params["embed"], batch["tokens"], cfg)
+        s = x.shape[1]
+        max_len = max_len or s
+        positions = jnp.arange(s)
+        x, _, caches = self.dec_stack.apply(params["decoder"], x, positions,
+                                            memory=memory, want_cache=True,
+                                            seq_len=max_len)
+        x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        logits = layers.lm_logits(params["embed"], x, cfg)
+        cross = self._cross_caches(params, memory)
+        return logits, {"self": caches, "cross": cross}
+
+    def decode_step(self, params: dict, tokens: jnp.ndarray, caches: dict,
+                    position):
+        cfg = self.cfg
+        x = layers.embed_tokens(params["embed"], tokens, cfg)
+        x, new_self = self.dec_stack.decode(params["decoder"], x,
+                                            caches["self"], position,
+                                            cross_caches=caches["cross"])
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = layers.lm_logits(params["embed"], x, cfg)
+        return logits, {"self": new_self, "cross": caches["cross"]}
+
+    def init_caches(self, batch_size: int, seq_len: int,
+                    enc_len: int | None = None) -> dict:
+        cfg = self.cfg
+        dtype = layers.dtype_of(cfg, "compute")
+        enc_len = enc_len or seq_len
+        st = self.dec_stack
+        helper = DecoderOnlyLM.__new__(DecoderOnlyLM)
+        helper.cfg = cfg
+        helper.stack = st
+        self_caches = DecoderOnlyLM.init_caches(helper, batch_size, seq_len)
+        cross_one = {"k": jnp.zeros((batch_size, enc_len, cfg.n_kv_heads,
+                                     cfg.head_dim), dtype),
+                     "v": jnp.zeros((batch_size, enc_len, cfg.n_kv_heads,
+                                     cfg.head_dim), dtype)}
+        cross = {"main": {f"pos{p}": jax.tree_util.tree_map(
+                     lambda a: jnp.broadcast_to(a, (st.n_full,) + a.shape),
+                     cross_one) for p in range(st.period)},
+                 "tail": {f"pos{p}": cross_one for p in range(st.tail)}}
+        return {"self": self_caches, "cross": cross}
+
+    def cache_specs(self, seq_len: int) -> dict:
+        st = self.dec_stack
+        helper = DecoderOnlyLM.__new__(DecoderOnlyLM)
+        helper.cfg = self.cfg
+        helper.stack = st
+        self_specs = DecoderOnlyLM.cache_specs(helper, seq_len)
+        cross_one = {"k": ("act_batch", "act_kv", "kv_heads", "head_dim"),
+                     "v": ("act_batch", "act_kv", "kv_heads", "head_dim")}
+        stacked = {k: ("layers",) + v for k, v in cross_one.items()}
+        cross = {"main": {f"pos{p}": dict(stacked)
+                          for p in range(st.period)},
+                 "tail": {f"pos{p}": dict(cross_one)
+                          for p in range(st.tail)}}
+        return {"self": self_specs, "cross": cross}
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return EncoderDecoderLM(cfg)
+    return DecoderOnlyLM(cfg)

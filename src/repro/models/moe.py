@@ -1,0 +1,165 @@
+"""Mixture-of-Experts: top-k routing with capacity-based scatter dispatch.
+
+Dispatch is *index-based* (gather / scatter-add), not GShard one-hot-matmul —
+the one-hot formulation inflates HLO FLOPs by ~E·C/k over the real expert
+compute and would poison the roofline's MODEL_FLOPS/HLO_FLOPs honesty ratio.
+
+Flow (token-major priority, drop-on-overflow — Switch/GShard semantics):
+  1. router logits → softmax → top-k experts + renormalized gates;
+  2. position-in-expert via cumsum over (token, k) pairs;
+  3. pairs with position ≥ capacity are dropped (scatter mode='drop');
+  4. gather tokens into (E, C, D), batched expert FFN einsum,
+     scatter-add back weighted by gates.
+
+Experts shard on the "experts" logical axis (EP) when divisible by the mesh
+axis, else on "mlp" (per-expert tensor parallelism) — see repro.sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    keys = jax.random.split(ke, 3)
+    p = {
+        "router": jax.random.normal(kr, (d, e), dtype) * s_in,
+        "wi": jax.random.normal(keys[0], (e, d, f), dtype) * s_in,
+        "wg": jax.random.normal(keys[1], (e, d, f), dtype) * s_in,
+        "wo": jax.random.normal(keys[2], (e, f, d), dtype) * s_out,
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.init_mlp(ks, d, f, dtype)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    p = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", "mlp"),
+        "wg": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.mlp_specs()
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(cfg.top_k * n_tokens * cfg.capacity_factor
+                    / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)      # round up to a multiple of 8
+
+
+# Decode-sized batches can skip dispatch entirely (dense mode).  OFF by
+# default so the dry-run baseline table measures the paper-faithful capacity
+# path; the hillclimbed configurations enable it (REPRO_MOE_DENSE_MAX=512).
+import os as _os
+
+DENSE_MODE_MAX_TOKENS = int(_os.environ.get("REPRO_MOE_DENSE_MAX", "0"))
+
+
+def _dense_moe(params, xf, gates, expert_idx, cfg):
+    """All-experts einsum weighted by top-k gates — no dispatch/scatter.
+
+    For small token counts (decode steps) the capacity machinery is pure
+    overhead: C ≈ k·N/E is too small to shard and the global top-k cumsum
+    de-shards the batch.  Running every expert on every token costs E/k×
+    more FLOPs but those are negligible at decode scale, and every dispatch
+    collective disappears (§Perf iteration C3 — confirmed).
+    """
+    e = cfg.n_experts
+    w = jnp.zeros((xf.shape[0], e), jnp.float32)
+    w = jax.vmap(lambda wi, gi, ei: wi.at[ei].add(gi))(w, gates, expert_idx)
+    h = jnp.einsum("nd,edf->nef", xf, params["wi"].astype(xf.dtype))
+    g = jnp.einsum("nd,edf->nef", xf, params["wg"].astype(xf.dtype))
+    g = jax.nn.silu(g) if cfg.mlp_act == "silu" else jax.nn.gelu(g)
+    y = jnp.einsum("nef,efd->ned", h * g, params["wo"].astype(xf.dtype))
+    return jnp.einsum("ned,ne->nd", y, w.astype(y.dtype))
+
+
+def apply_moe(params: dict, x: jnp.ndarray,
+              cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    c = capacity(n, cfg)
+
+    logits = (xf @ params["router"].astype(xf.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (N, E)
+    gates, expert_idx = jax.lax.top_k(probs, k)                 # (N, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if n <= DENSE_MODE_MAX_TOKENS:
+        y = _dense_moe(params, xf, gates, expert_idx, cfg).reshape(b, s, d)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, e,
+                                             dtype=jnp.float32), axis=1),
+                      axis=0)
+        if cfg.shared_expert:
+            y = y + layers.apply_mlp(params["shared"], x, cfg.mlp_act)
+        return y, e * jnp.sum(me * ce)
+
+    # Load-balancing auxiliary loss (Switch): E * Σ_e f_e · P_e.
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # Position-in-expert over (token, k) pairs, token-major priority.
+    e_flat = expert_idx.reshape(-1)                             # (N*K,)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)         # (N*K, E)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot,
+                  axis=1)                                       # (N*K,)
+    keep = pos < c
+    slot = jnp.where(keep, e_flat * c + pos, e * c)             # OOB -> drop
+    pair_token = jnp.arange(n * k, dtype=jnp.int32) // k
+
+    # Gather tokens into expert buffers (dummy row N for empty slots).
+    dispatch_tok = jnp.full((e * c,), n, jnp.int32).at[slot].set(
+        pair_token, mode="drop")
+    slot_gate = jnp.zeros((e * c,), jnp.float32).at[slot].set(
+        gates.reshape(-1), mode="drop")
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xd = x_pad[dispatch_tok].reshape(e, c, d)                   # (E, C, D)
+
+    # Pin the dispatch-buffer sharding: experts over "model" (EP), capacity
+    # over "data".  Without the xd pin XLA's sharding propagation is
+    # unstable — unrelated graph changes flipped the expert einsums between
+    # a good EP layout (17.8 s compute on jamba-train) and a replicated one
+    # (96.9 s).  Pinning yd as well forces an extra resharding of the
+    # combine path (+84 s collective on jamba-train) — so only xd is pinned.
+    # Measured in §Perf iterations B2–B4.  REPRO_MOE_PIN: xd (default),
+    # both, off.
+    import os
+    from repro.sharding import constrain_named
+    pin = os.environ.get("REPRO_MOE_PIN", "off")
+    if pin in ("xd", "both"):
+        xd = constrain_named(xd, ("experts", "act_capacity", None))
+
+    # Batched expert FFN.
+    h = jnp.einsum("ecd,edf->ecf", xd, params["wi"].astype(xd.dtype))
+    g = jnp.einsum("ecd,edf->ecf", xd, params["wg"].astype(xd.dtype))
+    g = jax.nn.silu(g) if cfg.mlp_act == "silu" else jax.nn.gelu(g)
+    yd = jnp.einsum("ecf,efd->ecd", h * g, params["wo"].astype(xd.dtype))
+    if pin == "both":
+        yd = constrain_named(yd, ("experts", "act_capacity", None))
+
+    # Scatter-add back, gate-weighted; dummy row swallows dropped slots.
+    yw = yd.reshape(e * c, d) * slot_gate[:, None].astype(yd.dtype)
+    y = jnp.zeros((n + 1, d), x.dtype).at[dispatch_tok].add(yw)
+    y = y[:n].reshape(b, s, d)
+
+    if cfg.shared_expert:
+        y = y + layers.apply_mlp(params["shared"], x, cfg.mlp_act)
+    return y, aux

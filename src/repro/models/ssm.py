@@ -1,0 +1,329 @@
+"""Mamba-2 (state-space duality) block: chunked SSD scan + O(1) decode.
+
+References: Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060).
+
+Layout: d_inner = expand·d_model split into H heads of P=ssm_head_dim;
+B/C projections shared per group (G=ssm_ngroups) over N=ssm_state channels;
+per-head scalar decay A, input-dependent step dt via softplus.
+
+Training / prefill use the chunked SSD algorithm: within a chunk of Q tokens
+the recurrence is materialized as a decay-masked "attention" (maps onto the
+MXU); across chunks a short `lax.scan` carries the (H, P, N) state.  Decode
+is the plain recurrence — O(1) memory per token, which is what makes the
+`long_500k` cell tractable for mamba2/jamba.
+
+This file is the pure-jnp oracle; :mod:`repro.kernels.ssd` is the fused
+Pallas TPU kernel for the intra-chunk part.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    """Projections kept as separate matrices so each shards independently
+    (fusing them into one in_proj would put z/x/B/C/dt split boundaries in
+    the middle of a sharded axis)."""
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    gn = g * n
+    ks = jax.random.split(key, 8)
+    s_in = 1.0 / np.sqrt(d)
+    return {
+        "in_z": jax.random.normal(ks[0], (d, di), dtype) * s_in,
+        "in_x": jax.random.normal(ks[1], (d, di), dtype) * s_in,
+        "in_b": jax.random.normal(ks[2], (d, gn), dtype) * s_in,
+        "in_c": jax.random.normal(ks[3], (d, gn), dtype) * s_in,
+        "in_dt": jax.random.normal(ks[4], (d, h), dtype) * s_in,
+        "conv_x_w": jax.random.normal(ks[5], (cfg.ssm_conv, di), dtype) * 0.1,
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b_w": jax.random.normal(ks[6], (cfg.ssm_conv, gn), dtype) * 0.1,
+        "conv_b_b": jnp.zeros((gn,), dtype),
+        "conv_c_w": jax.random.normal(ks[7], (cfg.ssm_conv, gn), dtype) * 0.1,
+        "conv_c_b": jnp.zeros((gn,), dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(jax.random.fold_in(key, 99),
+                                      (di, d), dtype) * (1.0 / np.sqrt(di)),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "in_z": ("embed", "ssm_inner"),
+        "in_x": ("embed", "ssm_inner"),
+        "in_b": ("embed", None),
+        "in_c": ("embed", None),
+        "in_dt": ("embed", None),
+        "conv_x_w": (None, "ssm_inner"),
+        "conv_x_b": ("ssm_inner",),
+        "conv_b_w": (None, None),
+        "conv_b_b": (None,),
+        "conv_c_w": (None, None),
+        "conv_c_b": (None,),
+        "a_log": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (train / prefill)
+# ---------------------------------------------------------------------------
+def _segsum(dta: jnp.ndarray) -> jnp.ndarray:
+    """dta: (..., Q) -> (..., Q, Q) lower-triangular decay-sum matrix.
+
+    out[i, j] = sum_{k=j+1..i} dta[k]  for i >= j, else -inf.
+    """
+    q = dta.shape[-1]
+    cs = jnp.cumsum(dta, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # sum_{j+1..i} for i>j
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None):
+    """Chunked state-space-duality scan.
+
+    Args:
+      x:  (B, S, H, P) inputs (post-conv branch).
+      dt: (B, S, H) positive step sizes (softplus already applied).
+      a:  (H,) negative decay rates (−exp(a_log)).
+      b:  (B, S, G, N) input projections.
+      c:  (B, S, G, N) output projections.
+      chunk: Q, the intra-chunk length (must divide S).
+      init_state: optional (B, H, P, N) initial state.
+
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, s_orig, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    q = min(chunk, s_orig)
+    if s_orig % q:
+        # Pad with dt=0 steps: decay exp(0·A)=1 and x̄=0, so padded steps are
+        # exact identities on the state and the padded outputs are sliced off.
+        pad = q - s_orig % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = x.shape[1]
+    nc = s // q
+    rep = h // g
+
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b.reshape(bsz, nc, q, g, n)
+    cc = c.reshape(bsz, nc, q, g, n)
+    dta = dtc * a[None, None, None, :]                    # (B,nc,Q,H) decay
+
+    # Broadcast groups to heads for einsum clarity.
+    bh = jnp.repeat(bc, rep, axis=3)                      # (B,nc,Q,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    # ---- intra-chunk (quadratic within chunk, MXU-friendly) --------------
+    ll = jnp.exp(_segsum(jnp.moveaxis(dta, -1, 2)))       # (B,nc,H,Q,Q)
+    xbar = xc * dtc[..., None].astype(xc.dtype)           # dt-scaled input
+    scores = jnp.einsum("bclhn,bcshn->bchls", ch, bh,
+                        preferred_element_type=f32)       # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", scores * ll,
+                         xbar.astype(f32))
+
+    # ---- chunk-final local states ----------------------------------------
+    cs = jnp.cumsum(dta, axis=2)                          # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)         # (B,nc,Q,H)
+    states_local = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                              bh.astype(f32), decay_to_end,
+                              xbar.astype(f32))           # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                # (B,nc,H)
+
+    # ---- inter-chunk recurrence (short scan over chunks) -----------------
+    def step(state, inp):
+        s_local, cd = inp                                 # (B,H,P,N),(B,H)
+        prev = state
+        new = prev * cd[:, :, None, None] + s_local
+        return new, prev                                  # emit state BEFORE
+
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((bsz, h, p, n), f32))
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states_local, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----------------------------------------
+    decay_from_start = jnp.exp(cs)                        # (B,nc,Q,H)
+    y_inter = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                         ch.astype(f32), decay_from_start, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s_orig].astype(x.dtype)
+    return y, final_state.astype(x.dtype)
+
+
+def ssd_decode_step(state: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+                    a: jnp.ndarray, b_t: jnp.ndarray, c_t: jnp.ndarray):
+    """One-token recurrence.  state: (B,H,P,N); x_t: (B,H,P);
+    dt_t: (B,H); b_t/c_t: (B,G,N).  Returns (y_t, new_state)."""
+    h = x_t.shape[1]
+    g = b_t.shape[1]
+    rep = h // g
+    f32 = jnp.float32
+    bh = jnp.repeat(b_t, rep, axis=1).astype(f32)          # (B,H,N)
+    ch = jnp.repeat(c_t, rep, axis=1).astype(f32)
+    da = jnp.exp(dt_t.astype(f32) * a[None, :])            # (B,H)
+    xbar = (x_t.astype(f32) * dt_t[..., None].astype(f32))  # (B,H,P)
+    new = state.astype(f32) * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xbar, bh)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new)
+    return y.astype(x_t.dtype), new.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal conv1d (width ssm_conv) + cache
+# ---------------------------------------------------------------------------
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                init_state: jnp.ndarray | None = None):
+    """x: (B, S, C); w: (W, C) depthwise.  Returns (y, last W-1 inputs)."""
+    width = w.shape[0]
+    pad = (init_state if init_state is not None
+           else jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+            for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(y + bias), new_state
+
+
+def conv_decode_step(x_t: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                     conv_state: jnp.ndarray):
+    """x_t: (B, 1, C); conv_state: (B, W-1, C) previous inputs."""
+    xp = jnp.concatenate([conv_state, x_t], axis=1)        # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", xp, w) + bias
+    return jax.nn.silu(y)[:, None], xp[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (norm handled by caller)
+# ---------------------------------------------------------------------------
+def mamba_forward(params: dict, x_in: jnp.ndarray, cfg: ModelConfig,
+                  state: dict | None = None):
+    """Full-sequence Mamba-2 mixer.  x_in: (B, S, D).
+
+    Returns (y, new_state) where state = {"conv": (B,W-1,C), "ssm": (B,H,P,N)}.
+    """
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    dt_c = x_in.dtype
+    z = x_in @ params["in_z"].astype(dt_c)
+    xr = x_in @ params["in_x"].astype(dt_c)
+    bb = x_in @ params["in_b"].astype(dt_c)
+    cc = x_in @ params["in_c"].astype(dt_c)
+    dt = x_in @ params["in_dt"].astype(dt_c)
+
+    st = state or {}
+    xr, conv_x_state = causal_conv(xr, params["conv_x_w"].astype(dt_c),
+                                   params["conv_x_b"].astype(dt_c),
+                                   st.get("conv_x"))
+    bb, conv_b_state = causal_conv(bb, params["conv_b_w"].astype(dt_c),
+                                   params["conv_b_b"].astype(dt_c),
+                                   st.get("conv_b"))
+    cc, conv_c_state = causal_conv(cc, params["conv_c_w"].astype(dt_c),
+                                   params["conv_c_b"].astype(dt_c),
+                                   st.get("conv_c"))
+
+    bsz, s, _ = xr.shape
+    xh = xr.reshape(bsz, s, h, p)
+    bh = bb.reshape(bsz, s, g, n)
+    chh = cc.reshape(bsz, s, g, n)
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32)
+                             + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+
+    y, ssm_state = ssd_chunked(
+        xh, dt_pos, a, bh, chh, cfg.ssm_chunk,
+        None if state is None else state["ssm"])
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, s, cfg.d_inner)
+
+    # gated RMSNorm then out-projection (Mamba-2 ordering)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, {"conv_x": conv_x_state, "conv_b": conv_b_state,
+                 "conv_c": conv_c_state, "ssm": ssm_state}
+
+
+def mamba_decode(params: dict, x_in: jnp.ndarray, cfg: ModelConfig,
+                 state: dict):
+    """Single-token Mamba-2 step.  x_in: (B, 1, D)."""
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    dt_c = x_in.dtype
+    z = x_in @ params["in_z"].astype(dt_c)
+    xr = x_in @ params["in_x"].astype(dt_c)
+    bb = x_in @ params["in_b"].astype(dt_c)
+    cc = x_in @ params["in_c"].astype(dt_c)
+    dt = x_in @ params["in_dt"].astype(dt_c)
+
+    xr, conv_x_state = conv_decode_step(xr, params["conv_x_w"].astype(dt_c),
+                                        params["conv_x_b"].astype(dt_c),
+                                        state["conv_x"])
+    bb, conv_b_state = conv_decode_step(bb, params["conv_b_w"].astype(dt_c),
+                                        params["conv_b_b"].astype(dt_c),
+                                        state["conv_b"])
+    cc, conv_c_state = conv_decode_step(cc, params["conv_c_w"].astype(dt_c),
+                                        params["conv_c_b"].astype(dt_c),
+                                        state["conv_c"])
+
+    bsz = xr.shape[0]
+    dt_pos = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                             + params["dt_bias"][None, :])
+    a = -jnp.exp(params["a_log"])
+    y, ssm_state = ssd_decode_step(
+        state["ssm"], xr[:, 0].reshape(bsz, h, p), dt_pos, a,
+        bb[:, 0].reshape(bsz, g, n), cc[:, 0].reshape(bsz, g, n))
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = y + (xr.reshape(bsz, 1, h, p)
+             * params["d_skip"][None, None, :, None].astype(xr.dtype)
+             ).reshape(bsz, 1, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm({"scale": params["norm"]}, y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, {"conv_x": conv_x_state, "conv_b": conv_b_state,
+                 "conv_c": conv_c_state, "ssm": ssm_state}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    w = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, w, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, w, gn), dtype),
+        "conv_c": jnp.zeros((batch, w, gn), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+    }
+
+
+def mamba_state_specs() -> dict:
+    return {"conv_x": ("act_batch", None, "ssm_inner"),
+            "conv_b": ("act_batch", None, None),
+            "conv_c": ("act_batch", None, None),
+            "ssm": ("act_batch", "ssm_heads", None, None)}

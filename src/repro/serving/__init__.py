@@ -1,0 +1,4 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.multitier import MultiTierServer, TierRuntime
+
+__all__ = ["Request", "ServingEngine", "MultiTierServer", "TierRuntime"]

@@ -1,0 +1,175 @@
+"""Slot-based serving engine with continuous batching.
+
+One engine wraps (model, params) and maintains ``max_batch`` decode slots:
+
+  * requests are admitted from a FIFO queue into free slots — admission runs
+    a b=1 prefill (prompt lengths are bucketed so the jit cache stays small)
+    and writes the resulting caches into the slot's batch lane;
+  * every `step()` runs ONE batched decode for all active slots at their own
+    positions (per-batch ragged positions; see blockwise_attention), greedy-
+    samples, and retires slots that hit max_new_tokens;
+  * the engine exports the paper's observation tuple (P95 latency, RPS,
+    queue depth, error rate) + utilization so an AIF router can sit in front
+    of a *fleet* of engines (repro.serving.multitier).
+
+Ring KV caches are disabled inside the engine (`serve_ring_caches=False`)
+because admission right-pads prompts into full-length caches; the dry-run
+decode cells exercise the ring path instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    tokens: list
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+    output: list = dataclasses.field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, max_batch: int = 4,
+                 max_len: int = 256, seed: int = 0,
+                 speed_factor: float = 1.0, name: str = "engine"):
+        cfg = dataclasses.replace(cfg, serve_ring_caches=False)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.key(seed)))
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.name = name
+        self.speed_factor = speed_factor   # relative tier capacity (sim time)
+
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * max_batch
+        self.positions = np.zeros(max_batch, dtype=np.int32)
+        self.remaining = np.zeros(max_batch, dtype=np.int32)
+        self.caches = self.model.init_caches(max_batch, max_len)
+        self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.completed: list[Request] = []
+        self.steps = 0
+        self.busy_steps = 0
+
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill_cache: dict[int, object] = {}
+
+    # ----------------------------------------------------------------- API
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def active_count(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def utilization(self) -> float:
+        return self.busy_steps / max(self.steps, 1)
+
+    # ------------------------------------------------------------ admission
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            self._prefill_cache[bucket] = jax.jit(
+                lambda p, b, idx: self.model.prefill(
+                    p, b, max_len=self.max_len, last_index=idx))
+        return self._prefill_cache[bucket]
+
+    def _bucket(self, n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _admit(self, slot: int, req: Request):
+        n = len(req.tokens)
+        bucket = self._bucket(n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.tokens[:bucket]
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, caches1 = self._prefill_fn(bucket)(
+            self.params, batch, jnp.asarray(n - 1, jnp.int32))
+        first = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        # splice the b=1 caches into this slot's batch lane
+        self.caches = _write_slot(self.caches, caches1, slot)
+        self.last_tokens = self.last_tokens.at[slot, 0].set(first[0])
+        req.output.append(int(first[0]))
+        self.active[slot] = req
+        self.positions[slot] = n
+        self.remaining[slot] = req.max_new_tokens - 1
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """Admit + one decode wave.  Returns requests finished this step."""
+        self.steps += 1
+        for slot in range(self.max_batch):
+            if self.active[slot] is None and self.queue:
+                self._admit(slot, self.queue.popleft())
+
+        if self.active_count == 0:
+            return []
+        self.busy_steps += 1
+
+        pos = jnp.asarray(self.positions)
+        logits, self.caches = self._decode(self.params, self.last_tokens,
+                                           self.caches, pos)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        self.last_tokens = nxt[:, None]
+        finished = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.output.append(int(nxt[slot]))
+            self.positions[slot] += 1
+            self.remaining[slot] -= 1
+            if (self.remaining[slot] <= 0
+                    or self.positions[slot] >= self.max_len - 1):
+                req.finished_at = time.time()
+                self.completed.append(req)
+                finished.append(req)
+                self.active[slot] = None
+        return finished
+
+
+def _write_slot(caches, caches1, slot: int):
+    """Write b=1 prefill caches into batch lane ``slot`` of the engine caches.
+
+    Engine cache leaves: main (L, B, ...), tail (B, ...); prefill-of-1 leaves:
+    main (L, 1, ...), tail (1, ...).
+    """
+    def main_leaf(big, one):
+        return jax.lax.dynamic_update_slice_in_dim(big, one, slot, axis=1)
+
+    def tail_leaf(big, one):
+        return jax.lax.dynamic_update_slice_in_dim(big, one, slot, axis=0)
+
+    out = dict(caches)
+    if isinstance(caches, dict) and set(caches.keys()) == {"self", "cross"}:
+        return {"self": _write_slot(caches["self"], caches1["self"], slot),
+                "cross": _write_slot(caches["cross"], caches1["cross"], slot)}
+    out["main"] = jax.tree_util.tree_map(main_leaf, caches["main"],
+                                         caches1["main"])
+    out["tail"] = jax.tree_util.tree_map(tail_leaf, caches["tail"],
+                                         caches1["tail"])
+    return out

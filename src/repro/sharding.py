@@ -1,0 +1,224 @@
+"""Logical-axis sharding: rules mapping logical names -> mesh axes.
+
+Model code annotates every parameter / activation dimension with a *logical*
+axis name ("embed", "heads", "mlp", "experts", "act_batch", ...).  This
+module resolves those names against a mesh using a *rule profile*, with two
+safety valves applied per tensor dimension:
+
+  * **divisibility** — a rule only applies if the dimension is divisible by
+    the mesh-axis size (40 heads on a 16-way axis auto-replicate instead of
+    failing to lower);
+  * **no axis reuse** — within one PartitionSpec each mesh axis is used at
+    most once, first dimension wins (so `act_batch -> data` on a batch-1
+    decode falls through and `act_kv -> data` picks the axis up instead —
+    exactly the long_500k cache layout).
+
+Profiles (hillclimbing = editing these tables, not model code):
+  serve: TP on "model" (heads/mlp/experts/vocab), batch on "data",
+         KV-cache batch on "data" with seq fallback.
+  train: 2D param sharding — embed dim on "data" (FSDP-style), width on
+         "model"; activations batch on ("pod","data").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> preferred mesh axis, per profile.  Order of dims in a
+# tensor decides conflicts (first dim claims the mesh axis).
+RULE_PROFILES: dict[str, dict[str, str | tuple[str, ...] | None]] = {
+    "serve": {
+        "vocab": "model",
+        "embed": "data",           # 2D params: jamba-398B needs > 16-way
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "act_batch": "data",
+        "act_kv": "data",          # picked up when act_batch can't shard
+        "act_capacity": "data",    # MoE dispatch-buffer capacity dim
+    },
+    "train": {
+        "vocab": "model",
+        "embed": "data",           # FSDP-ish second axis for params
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "layers": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "act_batch": "data",
+        "act_kv": None,
+        "act_capacity": "data",    # MoE dispatch-buffer capacity dim
+    },
+}
+
+# §Perf variants (hillclimb levers — see EXPERIMENTS.md §Perf):
+# serve_replicated: weights replicated over "data" (kills the per-step
+#   weight all-gather for decode; only for archs whose params fit one chip's
+#   HBM at 1/16 model sharding).
+RULE_PROFILES["serve_replicated"] = dict(RULE_PROFILES["serve"],
+                                         embed=None, vocab="model")
+# serve_seqshard: sequence-parallel activations — attention/MLP rows split
+# over "model" (the lever for archs whose heads don't divide the axis).
+RULE_PROFILES["serve_seqshard"] = dict(RULE_PROFILES["serve"],
+                                       act_seq="model")
+RULE_PROFILES["train_seqshard"] = dict(RULE_PROFILES["train"],
+                                       act_seq="model")
+# capshard: REFUTED for jamba train (collective 176→260 s — the forced
+# dispatch-buffer resharding added collectives; see §Perf B2).  Kept opt-in.
+RULE_PROFILES["train_capshard"] = dict(RULE_PROFILES["train"],
+                                       act_capacity="data")
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch shards over (pod axis joins data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def resolve_spec(shape: tuple[int, ...], logical: tuple, rules: dict,
+                 mesh: Mesh, batch_over_pod: bool = True) -> P:
+    """Resolve one tensor's logical names to a PartitionSpec."""
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name is not None else None
+        # batch dims additionally shard over the pod axis when present
+        if (name == "act_batch" and batch_over_pod
+                and "pod" in mesh.axis_names and axis is not None):
+            axis = tuple(a for a in ("pod", axis) if a not in used)
+            if len(axis) == 1:
+                axis = axis[0]
+        if axis is None:
+            entries.append(None)
+            continue
+        flat = axis if isinstance(axis, tuple) else (axis,)
+        flat = tuple(a for a in flat if a not in used)
+        size = _axis_size(mesh, flat if len(flat) > 1 else
+                          (flat[0] if flat else None))
+        if not flat or dim % max(size, 1) != 0:
+            entries.append(None)
+            continue
+        used.update(flat)
+        entries.append(flat if len(flat) > 1 else flat[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def resolve_tree(shape_tree, spec_tree, profile: str, mesh: Mesh):
+    """shape/spec pytrees -> NamedSharding pytree (same structure)."""
+    rules = RULE_PROFILES[profile]
+
+    def leaf(shape_leaf, spec_leaf):
+        shape = tuple(shape_leaf.shape)
+        assert len(shape) == len(spec_leaf), (shape, spec_leaf)
+        return NamedSharding(mesh, resolve_spec(shape, spec_leaf, rules,
+                                                mesh))
+
+    return jax.tree_util.tree_map(
+        leaf, shape_tree, spec_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def batch_sharding(mesh: Mesh, batch_shape_tree):
+    """Input batch: leading dim over (pod, data), rest replicated."""
+    axes = batch_axes(mesh)
+
+    def leaf(x):
+        dim = x.shape[0]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        spec = P(axes if len(axes) > 1 else axes[0]) if (
+            axes and dim % size == 0) else P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(leaf, batch_shape_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def shape_tree_of(f, *args, **kwargs):
+    """jax.eval_shape wrapper returning ShapeDtypeStruct pytree."""
+    return jax.eval_shape(f, *args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (trace-time context)
+# ---------------------------------------------------------------------------
+# Without explicit constraints XLA's sharding propagation may replicate
+# activations across the data axis (observed: 16× compute inflation on the
+# internlm2 train cell — see EXPERIMENTS.md §Perf iteration 1).  Model code
+# calls ``constrain_act`` at block boundaries; it is a no-op unless a mesh
+# context is installed (CPU unit tests never see it).
+import contextvars  # noqa: E402
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_ctx", default=None)
+
+
+class activation_constraints:
+    """Context manager enabling activation constraints during tracing."""
+
+    def __init__(self, mesh: Mesh, profile: str = "train"):
+        self.mesh = mesh
+        self.rules = RULE_PROFILES[profile]
+
+    def __enter__(self):
+        self._tok = _ACT_CTX.set((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_CTX.reset(self._tok)
+        return False
+
+
+def constrain_named(x, logical: tuple):
+    """Constrain a tensor by explicit logical axis names (no-op w/o mesh).
+
+    Used by the MoE dispatch path: (experts, capacity, embed) buffers get
+    capacity sharded over "data" so per-chip expert compute stays 1/16th —
+    without this, the global top-k cumsum de-shards the token batch and
+    every chip runs the full capacity einsums (see §Perf iteration C2/B2).
+    """
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(tuple(x.shape), logical, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_act(x):
+    """Constrain an activation (B, S, ...) to the profile's batch/seq rules."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    logical = ["act_batch"] + [None] * (x.ndim - 1)
+    if x.ndim >= 2 and rules.get("act_seq"):
+        logical[1] = "act_seq"
+    spec = resolve_spec(tuple(x.shape), tuple(logical), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,9 @@
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, make_train_step)
+from repro.training.trainer import (FailureInjector, Trainer, TrainerConfig,
+                                    run_with_restarts)
+
+__all__ = ["OptimizerConfig", "TrainConfig", "TrainState",
+           "init_train_state", "make_train_step", "FailureInjector",
+           "Trainer", "TrainerConfig", "run_with_restarts"]

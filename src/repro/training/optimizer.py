@@ -1,0 +1,218 @@
+"""Optimizers (hand-rolled; no optax in this environment).
+
+* **AdamW** — moments in configurable dtype, decoupled weight decay,
+  optional f32 master copy when params live in bf16.
+* **Adafactor** — factored second moment, no momentum (production choice for
+  the ≥100B archs: jamba-1.5-large / llama4-scout / chameleon-34b train
+  cells, where 3×f32 Adam state per parameter cannot fit 16 GB/chip HBM on a
+  single pod).
+
+Optimizer state mirrors the parameter pytree, so parameter sharding rules
+apply verbatim to the state (first-dim sharded leaves stay sharded — this is
+what keeps per-device optimizer bytes flat at scale).
+
+Also here: global-norm clipping and the warmup-cosine schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"               # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # bf16 halves Adam state bytes
+    master_fp32: bool = False         # keep f32 master when params are bf16
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio·peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(np.pi * frac))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any            # per-leaf state pytree (dict leaves)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(cfg: OptimizerConfig, params) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def leaf(p):
+        st = {"m": jnp.zeros_like(p, dtype=mdt),
+              "v": jnp.zeros_like(p, dtype=mdt)}
+        if cfg.master_fp32 and p.dtype != jnp.float32:
+            st["master"] = p.astype(jnp.float32)
+        return st
+
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    inner=jax.tree_util.tree_map(leaf, params))
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state: OptState, params):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, st, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * st["m"].astype(jnp.float32) + (1 - b1) * g32
+        v = b2 * st["v"].astype(jnp.float32) + (1 - b2) * g32 * g32
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        base = st.get("master", p).astype(jnp.float32)
+        new = base - lr * (update + cfg.weight_decay * base)
+        out_st = {"m": m.astype(st["m"].dtype), "v": v.astype(st["v"].dtype)}
+        if "master" in st:
+            out_st["master"] = new
+        return new.astype(p.dtype), out_st
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    flat_p = treedef.flatten_up_to(params)
+    out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_inner = treedef.unflatten([o[1] for o in out])
+    return new_params, OptState(step=step, inner=new_inner)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored v, no momentum
+# ---------------------------------------------------------------------------
+def adafactor_init(cfg: OptimizerConfig, params) -> OptState:
+    def leaf(p):
+        if p.ndim >= 2 and min(p.shape[-2:]) >= cfg.factored_min_dim:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    inner=jax.tree_util.tree_map(
+                        leaf, params, is_leaf=lambda x: hasattr(x, "ndim")))
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state: OptState, params):
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+
+    def leaf(g, st, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if "vr" in st:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., :, None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                              1e-30))
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            denom = jnp.sqrt(v)
+            new_st = {"v": v}
+        update = g32 / jnp.maximum(denom, cfg.eps)
+        # update clipping (RMS <= 1), per Adafactor
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        base = p.astype(jnp.float32)
+        new = base - lr * (update + cfg.weight_decay * base)
+        return new.astype(p.dtype), new_st
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    flat_p = treedef.flatten_up_to(params)
+    out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            OptState(step=step, inner=treedef.unflatten([o[1] for o in out])))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis specs for the optimizer state (mirrors init structure)
+# ---------------------------------------------------------------------------
+def state_specs(cfg: OptimizerConfig, param_shapes, param_specs) -> OptState:
+    """Spec tree matching ``init``'s state: optimizer state inherits the
+    parameter sharding leaf-for-leaf (factored Adafactor stats inherit the
+    surviving dimensions)."""
+    flat_shapes, treedef = jax.tree_util.tree_flatten(param_shapes)
+    flat_specs = treedef.flatten_up_to(param_specs)
+
+    def leaf(shape_leaf, spec):
+        spec = tuple(spec)
+        if cfg.name == "adafactor":
+            if (len(shape_leaf.shape) >= 2
+                    and min(shape_leaf.shape[-2:]) >= cfg.factored_min_dim):
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]}
+            return {"v": spec}
+        st = {"m": spec, "v": spec}
+        if cfg.master_fp32 and jnp.dtype(shape_leaf.dtype) != jnp.float32:
+            st["master"] = spec
+        return st
+
+    inner = treedef.unflatten([leaf(s, p)
+                               for s, p in zip(flat_shapes, flat_specs)])
+    return OptState(step=(), inner=inner)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+def init(cfg: OptimizerConfig, params) -> OptState:
+    if cfg.name == "adafactor":
+        return adafactor_init(cfg, params)
+    return adamw_init(cfg, params)
+
+
+def update(cfg: OptimizerConfig, grads, state: OptState, params):
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    if cfg.name == "adafactor":
+        new_p, new_s = adafactor_update(cfg, grads, state, params)
+    else:
+        new_p, new_s = adamw_update(cfg, grads, state, params)
+    return new_p, new_s, gnorm

@@ -1,0 +1,102 @@
+"""The jitted train step: loss -> grads -> clip -> (compress) -> update.
+
+Supports gradient accumulation over microbatches (``accum_steps``) via an
+inner `lax.scan`, which is also the activation-memory lever for the big
+train cells (each microbatch re-runs the rematerialized forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import grad_compression, optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt_mod.OptimizerConfig = dataclasses.field(
+        default_factory=opt_mod.OptimizerConfig)
+    compression: grad_compression.CompressionConfig = dataclasses.field(
+        default_factory=grad_compression.CompressionConfig)
+    moe_aux_weight: float = 0.01
+    accum_steps: int = 1
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_mod.OptState
+    ef_residual: Any          # error-feedback buffers (int8_ef) or None
+
+
+class StepMetrics(NamedTuple):
+    loss: jnp.ndarray
+    aux_loss: jnp.ndarray
+    grad_norm: jnp.ndarray
+    lr: jnp.ndarray
+
+
+def init_train_state(model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt = opt_mod.init(tcfg.optimizer, params)
+    ef = (grad_compression.init_error_feedback(params)
+          if tcfg.compression.mode == "int8_ef" else None)
+    return TrainState(params=params, opt=opt, ef_residual=ef)
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics), jit-ready."""
+
+    def loss_fn(params, batch):
+        loss, aux = model.train_loss(params, batch)
+        return loss + tcfg.moe_aux_weight * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(params, batch):
+        (_, (loss, aux)), grads = grad_fn(params, batch)
+        return grads, loss, aux
+
+    def accum_grads(params, batch):
+        """Microbatch accumulation: batch splits on the leading dim."""
+        a = tcfg.accum_steps
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            g_acc, l_acc, x_acc = carry
+            g, l, x = single_grads(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda ga, gi: ga + gi.astype(ga.dtype), g_acc, g)
+            return (g_acc, l_acc + l, x_acc + x), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, l, x), _ = jax.lax.scan(
+            body, (g0, jnp.zeros(()), jnp.zeros(())), micro)
+        scale = 1.0 / a
+        g = jax.tree_util.tree_map(lambda gi: gi * scale, g)
+        return g, l * scale, x * scale
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, StepMetrics]:
+        if tcfg.accum_steps > 1:
+            grads, loss, aux = accum_grads(state.params, batch)
+        else:
+            grads, loss, aux = single_grads(state.params, batch)
+
+        ef = state.ef_residual
+        if tcfg.compression.mode == "int8_ef":
+            grads, ef = grad_compression.compress_int8_ef(grads, ef)
+        else:
+            grads = grad_compression.compress_cast(grads, tcfg.compression)
+
+        new_params, new_opt, gnorm = opt_mod.update(
+            tcfg.optimizer, grads, state.opt, state.params)
+        metrics = StepMetrics(
+            loss=loss, aux_loss=aux, grad_norm=gnorm,
+            lr=opt_mod.schedule(tcfg.optimizer, new_opt.step))
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return train_step

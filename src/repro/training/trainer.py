@@ -1,0 +1,114 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption survival.
+
+The loop is deliberately boring — that is the point.  All state that matters
+(params, optimizer, data-iterator step, RNG) round-trips through the
+checkpointer, and `Trainer.run` can be killed at any step and re-invoked; it
+resumes from the newest checkpoint bit-exactly (the data pipeline is
+counter-based, see repro.data).  ``FailureInjector`` simulates preemptions
+for the integration tests / failover example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data import SyntheticPipeline
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, make_train_step)
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministic simulated preemption: raises at given global steps."""
+
+    fail_at_steps: tuple[int, ...] = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"simulated preemption at step {step}")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    log_every: int = 10
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+
+
+class Trainer:
+    def __init__(self, model, tcfg: TrainConfig, data: SyntheticPipeline,
+                 cfg: TrainerConfig,
+                 failure_injector: Optional[FailureInjector] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.tcfg = tcfg
+        self.data = data
+        self.cfg = cfg
+        self.injector = failure_injector
+        self.log = log_fn
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep_n=cfg.keep_n)
+        self.step_fn = jax.jit(make_train_step(model, tcfg))
+        self.losses: list[float] = []
+
+    # ------------------------------------------------------------------ run
+    def run(self, seed: int = 0) -> TrainState:
+        state, start_step = self._init_or_restore(seed)
+        self.data.step = start_step          # fast-forward the iterator
+        t0 = time.time()
+        for step in range(start_step, self.cfg.total_steps):
+            if self.injector is not None:
+                self.injector.check(step)
+            batch = next(self.data)
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics.loss)
+            self.losses.append(loss)
+            if step % self.cfg.log_every == 0:
+                self.log(f"step {step:5d} loss {loss:.4f} "
+                         f"gnorm {float(metrics.grad_norm):.3f} "
+                         f"lr {float(metrics.lr):.2e} "
+                         f"({time.time() - t0:.1f}s)")
+            if (step + 1) % self.cfg.checkpoint_every == 0:
+                self._save(state, step + 1)
+        self.ckpt.wait()
+        return state
+
+    # ------------------------------------------------------------ internals
+    def _init_or_restore(self, seed: int) -> tuple[TrainState, int]:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            state = init_train_state(self.model, jax.random.key(seed),
+                                     self.tcfg)
+            return state, 0
+        like = init_train_state(self.model, jax.random.key(seed), self.tcfg)
+        state, extra = self.ckpt.restore(like, step=latest)
+        self.log(f"restored checkpoint at step {latest}")
+        return state, int(extra["data_step"])
+
+    def _save(self, state: TrainState, step: int):
+        self.ckpt.save(step, state,
+                       extra={"data_step": step,
+                              "data_state": self.data.state_dict()})
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer],
+                      max_restarts: int = 10):
+    """Supervisor: re-launch the trainer after (simulated) preemptions."""
+    restarts = 0
+    while True:
+        trainer = make_trainer()
+        try:
+            return trainer.run(), restarts
+        except RuntimeError as e:
+            restarts += 1
+            trainer.log(f"[supervisor] {e}; restart {restarts}")
+            if restarts > max_restarts:
+                raise

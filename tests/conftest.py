@@ -1,0 +1,13 @@
+import os
+import sys
+
+# Tests run single-device CPU; the dry-run (and only the dry-run) forces 512
+# host devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,225 @@
+"""Unit + property tests for the Active Inference core (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro import core
+from repro.core import belief as belief_mod
+from repro.core import efe as efe_mod
+from repro.core import generative, learning, policies, spaces
+
+
+CFG = core.AifConfig()
+
+
+def _rand_model(key, sharp=False):
+    ks = jax.random.split(key, 2)
+    a = jax.random.uniform(ks[0], (spaces.N_MODALITIES, spaces.MAX_BINS,
+                                   spaces.N_STATES), minval=0.05, maxval=3.0)
+    a = a * spaces.bins_mask()[:, :, None]
+    if sharp:
+        a = a ** 8
+    b = jax.random.uniform(ks[1], (policies.N_ACTIONS, spaces.N_STATES,
+                                   spaces.N_STATES), minval=0.01, maxval=1.0)
+    m = generative.init_generative_model(CFG)
+    return m._replace(a_counts=a, b_counts=b)
+
+
+# ---------------------------------------------------------------- spaces
+def test_state_space_size():
+    assert spaces.N_STATES == 243 and spaces.N_LEVELS ** 5 == 243
+
+
+def test_state_index_roundtrip():
+    tbl = spaces.state_factor_table()
+    for s in (0, 1, 42, 242):
+        assert spaces.state_index(tbl[s]) == s
+
+
+def test_policy_table_paper_constants():
+    t = np.asarray(policies.policy_table())
+    assert t.shape == (20, 3)
+    np.testing.assert_allclose(t.sum(1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(t[0], [0.33, 0.33, 0.34])      # balanced
+    np.testing.assert_allclose(t[1], [0.15, 0.25, 0.60])      # heavy start
+    np.testing.assert_allclose(t[5], [0.0, 0.0, 1.0])         # heavy extreme
+
+
+def test_discretization_edges():
+    disc = core.DiscretizationConfig()
+    raw = jnp.asarray([[0.5, 40.0, 10.0, 0.01],
+                       [2.0, 55.0, 50.0, 0.5],
+                       [9.0, 90.0, 500.0, 0.2]])
+    bins = np.asarray(core.discretize_observation(raw, disc))
+    assert bins[0].tolist() == [0, 0, 0, 0]
+    assert bins[1].tolist() == [1, 1, 1, 1]
+    assert bins[2].tolist() == [2, 2, 2, 1]   # error has 2 bins
+
+
+# ---------------------------------------------------------------- belief
+@given(st.integers(0, 10_000))
+def test_belief_update_is_distribution(seed):
+    key = jax.random.key(seed)
+    m = _rand_model(key)
+    q0 = jax.random.dirichlet(jax.random.fold_in(key, 1),
+                              jnp.ones(spaces.N_STATES))
+    obs = jax.random.randint(jax.random.fold_in(key, 2),
+                             (spaces.N_MODALITIES,), 0, 2)
+    q1 = belief_mod.update_belief(m, q0, 3, obs)
+    q1 = np.asarray(q1)
+    assert np.all(q1 >= 0)
+    assert abs(q1.sum() - 1.0) < 1e-4
+    assert np.isfinite(q1).all()
+
+
+def test_sharp_likelihood_reduces_entropy():
+    key = jax.random.key(0)
+    m = _rand_model(key, sharp=True)
+    q0 = jnp.ones(spaces.N_STATES) / spaces.N_STATES
+    obs = jnp.asarray([1, 1, 1, 0])
+    q1 = belief_mod.update_belief(m, q0, 0, obs)
+    assert float(belief_mod.belief_entropy(q1)) < float(
+        belief_mod.belief_entropy(q0))
+
+
+def test_util_scrape_concentrates_on_matching_states():
+    logp = belief_mod.util_log_likelihood(jnp.asarray([2, 1, 0]))
+    tbl = spaces.state_factor_table()
+    best = np.argmax(np.asarray(logp))
+    assert tbl[best][2] == 2 and tbl[best][3] == 1 and tbl[best][4] == 0
+
+
+# ------------------------------------------------------------------- EFE
+@given(st.integers(0, 10_000))
+def test_efe_finite_and_probs_normalized(seed):
+    key = jax.random.key(seed)
+    m = _rand_model(key)
+    q = jax.random.dirichlet(jax.random.fold_in(key, 7),
+                             jnp.ones(spaces.N_STATES))
+    bd = efe_mod.expected_free_energy(m, q, CFG)
+    assert np.isfinite(np.asarray(bd.g)).all()
+    assert np.all(np.asarray(bd.ambiguity) >= -1e-5)   # entropy is >= 0
+    assert abs(float(jnp.sum(bd.action_probs)) - 1.0) < 1e-4
+
+
+def test_risk_prefers_matching_preferences():
+    """An action whose predicted obs match C must have lower risk."""
+    m = generative.init_generative_model(CFG)
+    # craft A: state 0 emits the preferred bins w.p. ~1, state 242 the worst
+    a = np.full((spaces.N_MODALITIES, spaces.MAX_BINS, spaces.N_STATES),
+                1e-3, np.float32) * np.asarray(spaces.BINS_MASK)[:, :, None]
+    good = [0, 2, 0, 0]   # low latency, high rps, low queue, low err
+    bad = [2, 0, 2, 1]
+    for mod in range(4):
+        a[mod, good[mod], 0] = 1.0
+        a[mod, bad[mod], 242] = 1.0
+    # B: action 0 -> state 0; action 1 -> state 242
+    b = np.full((policies.N_ACTIONS, spaces.N_STATES, spaces.N_STATES),
+                1e-6, np.float32)
+    b[0, 0, :] = 1.0
+    b[1, 242, :] = 1.0
+    m = m._replace(a_counts=jnp.asarray(a), b_counts=jnp.asarray(b))
+    q = jnp.ones(spaces.N_STATES) / spaces.N_STATES
+    bd = efe_mod.expected_free_energy(m, q, CFG)
+    assert float(bd.risk[0]) < float(bd.risk[1])
+
+
+def test_cost_zero_for_balanced_max_for_extreme():
+    c = np.asarray(policies.policy_concentration_cost())
+    assert c[0] < 1e-3
+    assert abs(c[5] - np.log(3)) < 1e-5
+    assert np.all(c >= -1e-6)
+
+
+# -------------------------------------------------------------- learning
+def test_settle_weight_sigmoid_shape():
+    w0 = float(learning.settle_weight(jnp.asarray(0.0), CFG))
+    w2 = float(learning.settle_weight(jnp.asarray(2.0), CFG))
+    w10 = float(learning.settle_weight(jnp.asarray(10.0), CFG))
+    assert w0 < w2 < w10
+    assert abs(w2 - 0.5) < 1e-6          # midpoint at Δt=2 (paper)
+    assert w10 > 0.98
+
+
+def test_replay_ring_buffer():
+    buf = learning.init_replay(8)
+    for i in range(11):
+        q = jnp.zeros(spaces.N_STATES).at[i % spaces.N_STATES].set(1.0)
+        buf = learning.push_transition(buf, q, q, jnp.zeros(4, jnp.int32),
+                                       i % 20, float(i))
+    assert int(buf.size) == 8
+    assert int(buf.cursor) == 11 % 8
+    # oldest surviving entry is i=3
+    assert float(buf.dt_since_change[3 % 8]) == 3.0
+
+
+def test_slow_update_moves_counts_toward_observations():
+    key = jax.random.key(0)
+    m = generative.init_generative_model(CFG)
+    buf = learning.init_replay(CFG.replay_capacity)
+    q = jnp.zeros(spaces.N_STATES).at[5].set(1.0)
+    obs = jnp.asarray([2, 1, 0, 1], jnp.int32)
+    for _ in range(50):
+        buf = learning.push_transition(buf, q, q, obs, 7, 10.0)
+    m2 = learning.slow_update(key, m, buf, CFG)
+    a0 = np.asarray(generative.normalize_a(m.a_counts))
+    a1 = np.asarray(generative.normalize_a(m2.a_counts))
+    assert a1[0, 2, 5] > a0[0, 2, 5]          # latency bin 2 more likely
+    b0 = np.asarray(generative.normalize_b(m.b_counts))
+    b1 = np.asarray(generative.normalize_b(m2.b_counts))
+    assert b1[7, 5, 5] > b0[7, 5, 5]          # action 7: 5 -> 5 transition
+
+
+# ---------------------------------------------------- adaptive preferences
+def test_adaptive_preferences_trigger_and_recover():
+    cfg = CFG
+    st_ = core.init_agent_state(cfg)
+    key = jax.random.key(0)
+    obs_bad = jnp.asarray([2, 1, 2, 1], jnp.int32)
+    for i in range(120):
+        key, k = jax.random.split(key)
+        st_, info = core.fast_step(st_, obs_bad, jnp.asarray(0.5), k, cfg)
+    assert bool(info.unstable)
+    c_err = np.asarray(st_.model.c_log)[3, :2]
+    np.testing.assert_allclose(c_err, cfg.c_error_unstable, atol=1e-5)
+    # recovery
+    obs_ok = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    for i in range(300):
+        key, k = jax.random.split(key)
+        st_, info = core.fast_step(st_, obs_ok, jnp.asarray(0.0), k, cfg)
+    assert not bool(info.unstable)
+
+
+def test_timescale_separation_learning_only_on_slow_ticks():
+    cfg = CFG
+    st_ = core.init_agent_state(cfg)
+    key = jax.random.key(1)
+    obs = jnp.asarray([1, 1, 1, 0], jnp.int32)
+    counts0 = float(jnp.sum(st_.model.a_counts))
+    for i in range(9):
+        key, k = jax.random.split(key)
+        st_, _ = core.tick(st_, obs, jnp.asarray(0.0), k, cfg)
+    # t goes 1..9; slow step fires at t % 10 == 0 only
+    assert float(jnp.sum(st_.model.a_counts)) == pytest.approx(counts0)
+    key, k = jax.random.split(key)
+    st_, _ = core.tick(st_, obs, jnp.asarray(0.0), k, cfg)   # t=10
+    assert float(jnp.sum(st_.model.a_counts)) > counts0
+
+
+def test_fleet_matches_single_agent():
+    cfg = CFG
+    from repro.core import fleet
+    n = 4
+    fst = fleet.init_fleet_state(cfg, n)
+    st_ = core.init_agent_state(cfg)
+    obs = jnp.tile(jnp.asarray([1, 1, 1, 0], jnp.int32), (n, 1))
+    errs = jnp.zeros((n,))
+    keys = jnp.stack([jax.random.key_data(jax.random.key(3))] * n)
+    keys = jax.vmap(jax.random.wrap_key_data)(keys)
+    fst, finfo = fleet.fleet_tick(fst, obs, errs, keys, cfg)
+    st_, info = core.tick(st_, obs[0], errs[0], jax.random.key(3), cfg)
+    np.testing.assert_allclose(np.asarray(finfo.efe.g[0]),
+                               np.asarray(info.efe.g), rtol=1e-5)
+    assert int(finfo.action[0]) == int(info.action)

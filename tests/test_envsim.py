@@ -1,0 +1,61 @@
+"""Simulator invariants + qualitative reproduction of the paper's dynamics."""
+import numpy as np
+import pytest
+
+from repro.baselines import CapacityRouter, LeastLoadedRouter, UniformRouter
+from repro.envsim import (AifRouter, SimConfig, run_experiment)
+
+
+def test_request_conservation():
+    cfg = SimConfig()
+    res = run_experiment(UniformRouter(), cfg, 120.0, seed=0)
+    # every generated request is either a success, a failure, or still in the
+    # system (queued / in flight) at the horizon
+    in_flight = res.n_requests - res.n_success - res.n_error
+    assert 0 <= in_flight < 500
+    assert res.n_requests > 0
+
+
+def test_determinism_same_seed():
+    cfg = SimConfig()
+    r1 = run_experiment(UniformRouter(), cfg, 90.0, seed=7)
+    r2 = run_experiment(UniformRouter(), cfg, 90.0, seed=7)
+    assert r1.n_requests == r2.n_requests
+    assert r1.n_success == r2.n_success
+    assert r1.p50_ms == pytest.approx(r2.p50_ms)
+
+
+def test_capacity_router_beats_uniform():
+    """Capacity-aware prior knowledge solves the testbed (paper §5.1)."""
+    cfg = SimConfig()
+    uni = run_experiment(UniformRouter(), cfg, 600.0, seed=1)
+    cap = run_experiment(CapacityRouter(), cfg, 600.0, seed=1)
+    assert cap.success_rate > uni.success_rate
+    assert cap.p50_ms < uni.p50_ms
+
+
+def test_instability_off_removes_restarts():
+    import dataclasses
+    cfg = dataclasses.replace(SimConfig(), instability=False)
+    res = run_experiment(UniformRouter(), cfg, 300.0, seed=3)
+    assert res.n_restarts.sum() == 0
+
+
+def test_least_loaded_sane():
+    cfg = SimConfig()
+    res = run_experiment(LeastLoadedRouter(), cfg, 300.0, seed=2)
+    assert res.success_rate > 0.8
+
+
+@pytest.mark.slow
+def test_aif_learns_heavy_bias_and_latency_win():
+    """Directional Table-1 claims on a shortened protocol (15 sim-minutes)."""
+    cfg = SimConfig()
+    uni = run_experiment(UniformRouter(), cfg, 900.0, seed=0)
+    aif = run_experiment(AifRouter(seed=0), cfg, 900.0, seed=0)
+    # Fig 2: AIF lowers P50 materially
+    assert aif.p50_ms < 0.8 * uni.p50_ms
+    # Fig 3b: heavy share of successes grows
+    assert aif.tier_share_of_success()[2] > uni.tier_share_of_success()[2]
+    # exploration has a reliability price under instability (§5.2)
+    assert aif.success_rate < uni.success_rate + 0.02

@@ -1,0 +1,60 @@
+"""Debug helper: top byte/flop contributors of a hillclimb variant's HLO."""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import jax
+from repro.configs import get_arch, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_mod
+from repro import sharding as shd
+from repro.launch.hlo_cost import HloModule, _DEF_RE, shape_bytes
+
+arch_id, shape_name, profile = sys.argv[1], sys.argv[2], sys.argv[3]
+arch = get_arch(arch_id)
+cell = [s for s in SHAPES if s.name == shape_name][0]
+mesh = make_production_mesh()
+if cell.step == "train":
+    built = specs_mod.build_train_cell(arch, cell, mesh)
+elif cell.step == "prefill":
+    built = specs_mod.build_prefill_cell(arch, cell, mesh, profile=profile)
+else:
+    built = specs_mod.build_decode_cell(arch, cell, mesh, profile=profile)
+act = "train" if cell.step == "train" else "serve"
+with mesh, shd.activation_constraints(mesh, act):
+    compiled = jax.jit(built.fn, in_shardings=built.in_shardings,
+                       out_shardings=built.out_shardings).lower(*built.args).compile()
+m = HloModule(compiled.as_text())
+mult = {m.entry: 1.0}; order = [m.entry]; i = 0
+while i < len(order):
+    comp = order[i]; i += 1
+    for line in m.comps.get(comp, []):
+        wm = re.search(r"body=(%[\w\.\-]+)", line)
+        cm2 = re.search(r"condition=(%[\w\.\-]+)", line)
+        if wm and cm2 and " while(" in line:
+            t = m.trip_count(cm2.group(1)); sub = wm.group(1)
+            mult[sub] = mult.get(sub, 0) + mult[comp] * t
+            if sub not in order: order.append(sub)
+contrib = []
+for comp, mu in mult.items():
+    for line in m.comps.get(comp, []):
+        dm = _DEF_RE.match(line)
+        if not dm: continue
+        op, operands, attrs = m._operands_of(line)
+        if op in ("parameter","constant","tuple","get-tuple-element","bitcast","while","call","conditional") or not op:
+            continue
+        nm = dm.group(1)
+        if (op == "fusion" and len(operands) == 1 and
+                (nm.startswith("%convert") or nm.startswith("%copy_convert") or nm.startswith("%bitcast_convert"))):
+            continue
+        if "dynamic-update-slice" in nm or op == "dynamic-update-slice":
+            sizes = sorted((shape_bytes(m.shape_of.get(o, "")) for o in operands), reverse=True)
+            b = 2.0 * sum(sizes[1:])
+        elif "dynamic-slice" in nm or op == "dynamic-slice":
+            b = 2.0 * shape_bytes(dm.group(2))
+        else:
+            b = m._op_bytes(dm.group(2), operands)
+        contrib.append((b * mu, op, nm, dm.group(2)[:48], mu))
+contrib.sort(reverse=True)
+print("total bytes:", f"{sum(c[0] for c in contrib):.3e}")
+for c in contrib[:12]:
+    print(f"{c[0]:.3e} mult={c[4]:5.0f} {c[1]:<14} {c[2][:34]:<36} {c[3]}")
