@@ -1,0 +1,133 @@
+"""Fleet scenario-engine benchmark: cell-windows/sec vs fleet size R.
+
+Two workloads, both single jitted ``lax.scan`` programs (no Python in the
+loop):
+
+* ``env``   — the batched fluid engine alone under a static router
+              (R × T cell-windows per rollout; the R=256 × T=600 row is the
+              acceptance workload of the fleet engine),
+* ``fleet`` — the full closed loop: AIF fleet tick (belief update → EFE →
+              action → online learning) + fluid engine step per window,
+              with the vmapped and the fused-EFE-kernel paths reported
+              separately.
+
+Reports compile time and steady-state throughput per configuration as CSV on
+stdout; ``--json out.json`` additionally writes the rows for the CI benchmark
+artifact trajectory.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AifConfig, fleet
+from repro.envsim import SimConfig, batched, scenarios
+
+
+def _bench(run, *args) -> tuple[float, float]:
+    """(compile_s, steady_run_s) for a jitted rollout callable."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(*args))
+    compile_s = time.perf_counter() - t0
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run(*args)
+    jax.block_until_ready(out)
+    return compile_s, (time.perf_counter() - t0) / iters
+
+
+def bench_env(r: int, t: int, scenario: str = "paper-burst") -> dict:
+    """Static-router fluid rollout at (R, T)."""
+    cfg = SimConfig()
+    sc = scenarios.build_scenario(scenario, cfg, r, t)
+    params = batched.params_from_config(cfg, r, sc.capacity_scale)
+    rate = jnp.asarray(sc.arrival_rate)
+    hz = jnp.asarray(sc.hazard_scale)
+    w = jnp.asarray([0.15, 0.23, 0.62], jnp.float32)
+    key = jax.random.key(0)
+
+    compile_s, run_s = _bench(
+        lambda: batched.run_fluid(params, rate, hz, w, key))
+    return {
+        "workload": "env", "r": r, "t": t, "scenario": scenario,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def bench_fleet(r: int, t: int, fused: bool) -> dict:
+    """Closed-loop AIF fleet rollout at (R, T)."""
+    cfg = AifConfig()
+    scfg = SimConfig()
+    sc = scenarios.build_scenario("paper-burst", scfg, r, t)
+    params = batched.params_from_config(scfg, r, sc.capacity_scale)
+    env_step = batched.make_env_step(params, jnp.asarray(sc.arrival_rate),
+                                     jnp.asarray(sc.hazard_scale))
+    ast = fleet.init_fleet_state(cfg, r)
+    est = batched.init_fluid_state(params)
+    key = jax.random.key(0)
+
+    compile_s, run_s = _bench(
+        lambda: fleet.fleet_rollout(ast, est, env_step, t, key, cfg,
+                                    fused=fused))
+    return {
+        "workload": "fleet", "r": r, "t": t,
+        "efe": "fused" if fused else "vmap",
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    # acceptance workload first: R=256 cells x T=600 windows, one jitted scan
+    env_grid = [(256, 600)] if quick else [(16, 600), (64, 600), (256, 600),
+                                           (1024, 600)]
+    for r, t in env_grid:
+        rows.append(bench_env(r, t))
+        _print_row(rows[-1])
+    fleet_grid = [(4, 60)] if quick else [(4, 120), (16, 120)]
+    for r, t in fleet_grid:
+        for fused in (False, True):
+            rows.append(bench_fleet(r, t, fused))
+            _print_row(rows[-1])
+    return rows
+
+
+def _print_row(row: dict) -> None:
+    tag = row["workload"] + ("" if row["workload"] == "env"
+                             else f"_{row['efe']}")
+    print(f"{tag},r={row['r']},t={row['t']},"
+          f"compile={row['compile_s']}s,run={row['run_s']}s,"
+          f"{row['cell_windows_per_s']}cw/s", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset (acceptance workload only)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON for the benchmark artifact")
+    args = ap.parse_args()
+    if args.json:     # fail fast on an unwritable path, not after the bench
+        open(args.json, "a").close()
+    rows = run(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "fleet_bench",
+                       "device": str(jax.devices()[0]),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

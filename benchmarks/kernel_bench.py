@@ -4,9 +4,14 @@ On CPU the Pallas kernels are timed in their XLA-oracle form (interpret mode
 measures Python emulation, not hardware); the kernel bodies themselves are
 correctness-validated by tests/test_kernels.py.  `derived` reports the
 achieved GFLOP/s of the oracle path as a lower-bound reference point.
+
+``--quick`` shrinks the problem sizes for the CI smoke step; ``--json PATH``
+writes the rows as JSON for the benchmark artifact trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -29,9 +34,9 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
-def bench_efe() -> tuple[str, float, str]:
+def bench_efe(quick: bool = False) -> tuple[str, float, str]:
     cfg = AifConfig()
-    r = 64
+    r = 8 if quick else 64
     key = jax.random.key(0)
     S, A = spaces.N_STATES, policies.N_ACTIONS
     M, NB = spaces.N_MODALITIES, spaces.MAX_BINS
@@ -44,34 +49,36 @@ def bench_efe() -> tuple[str, float, str]:
     f = jax.jit(lambda *xs: fleet_efe(*xs, cfg, use_pallas=False))
     us = _time(f, a_counts, b_counts, c_log, q)
     flops = 2 * r * A * S * S          # dominant batched matvec
-    return ("efe_fleet_r64", us, f"{flops/us/1e3:.1f}GFLOPs")
+    return (f"efe_fleet_r{r}", us, f"{flops/us/1e3:.1f}GFLOPs")
 
 
-def bench_attention() -> list[tuple[str, float, str]]:
+def bench_attention(quick: bool = False) -> list[tuple[str, float, str]]:
     key = jax.random.key(0)
     rows = []
-    b, s, hq, hkv, d = 1, 2048, 8, 2, 64
+    b, s, hq, hkv, d = 1, (512 if quick else 2048), 8, 2, 64
     q = jax.random.normal(key, (b, s, hq, d), jnp.bfloat16)
     k = jax.random.normal(key, (b, s, hkv, d), jnp.bfloat16)
     v = jax.random.normal(key, (b, s, hkv, d), jnp.bfloat16)
     f = jax.jit(lambda q_, k_, v_: mha_ref(q_, k_, v_, causal=True))
     us = _time(f, q, k, v)
     flops = 4 * b * s * s * hq * d
-    rows.append(("attn_prefill_2k", us, f"{flops/us/1e3:.1f}GFLOPs"))
+    rows.append((f"attn_prefill_{s}", us, f"{flops/us/1e3:.1f}GFLOPs"))
 
+    kv_len = 1024 if quick else 4096
     q1 = jax.random.normal(key, (8, 1, hq, d), jnp.bfloat16)
-    k1 = jax.random.normal(key, (8, 4096, hkv, d), jnp.bfloat16)
-    v1 = jax.random.normal(key, (8, 4096, hkv, d), jnp.bfloat16)
-    fd = jax.jit(lambda q_, k_, v_: decode_ref(q_, k_, v_, position=4095))
+    k1 = jax.random.normal(key, (8, kv_len, hkv, d), jnp.bfloat16)
+    v1 = jax.random.normal(key, (8, kv_len, hkv, d), jnp.bfloat16)
+    fd = jax.jit(lambda q_, k_, v_: decode_ref(q_, k_, v_,
+                                               position=kv_len - 1))
     us = _time(fd, q1, k1, v1)
-    bytes_ = 2 * 8 * 4096 * hkv * d * 2
-    rows.append(("attn_decode_4k", us, f"{bytes_/us/1e3:.1f}GB/s"))
+    bytes_ = 2 * 8 * kv_len * hkv * d * 2
+    rows.append((f"attn_decode_{kv_len}", us, f"{bytes_/us/1e3:.1f}GB/s"))
     return rows
 
 
-def bench_ssd() -> tuple[str, float, str]:
+def bench_ssd(quick: bool = False) -> tuple[str, float, str]:
     key = jax.random.key(0)
-    B, S, H, P, G, N, Q = 2, 1024, 16, 64, 1, 64, 128
+    B, S, H, P, G, N, Q = 2, (256 if quick else 1024), 16, 64, 1, 64, 128
     x = jax.random.normal(key, (B, S, H, P), jnp.bfloat16)
     dt = jax.nn.softplus(jax.random.normal(key, (B, S, H)))
     a = -jnp.exp(jax.random.normal(key, (H,)) * 0.3)
@@ -80,15 +87,36 @@ def bench_ssd() -> tuple[str, float, str]:
     f = jax.jit(lambda *xs: ssd_ref(*xs, Q))
     us = _time(f, x, dt, a, bb, cc)
     flops = 2 * B * (S // Q) * H * Q * Q * (N + P)
-    return ("ssd_1k", us, f"{flops/us/1e3:.1f}GFLOPs")
+    return (f"ssd_{S}", us, f"{flops/us/1e3:.1f}GFLOPs")
 
 
-def run() -> list[tuple[str, float, str]]:
-    rows = [bench_efe()] + bench_attention() + [bench_ssd()]
+def run(quick: bool = False) -> list[tuple[str, float, str]]:
+    rows = [bench_efe(quick)] + bench_attention(quick) + [bench_ssd(quick)]
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller problem sizes (CI smoke step)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON for the benchmark artifact")
+    args = ap.parse_args()
+    if args.json:     # fail fast on an unwritable path, not after the bench
+        open(args.json, "a").close()
+    rows = run(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "kernel_bench",
+                       "device": str(jax.devices()[0]),
+                       "quick": args.quick,
+                       "rows": [{"name": n, "us_per_call": round(us, 2),
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -14,7 +14,8 @@ from repro.core.agent import (AgentState, StepInfo, fast_step,
                               init_agent_state, slow_step, tick)
 from repro.core.belief import update_belief
 from repro.core.efe import EfeBreakdown, expected_free_energy, select_action
-from repro.core.fleet import fleet_tick, init_fleet_state
+from repro.core.fleet import (FleetTrace, fleet_rollout, fleet_tick,
+                              init_fleet_state)
 from repro.core.generative import (AifConfig, GenerativeModel,
                                    init_generative_model)
 from repro.core.learning import ReplayBuffer, init_replay, slow_update
@@ -26,7 +27,8 @@ from repro.core.spaces import (MODALITIES, N_MODALITIES, N_STATES, N_TIERS,
 __all__ = [
     "AgentState", "StepInfo", "fast_step", "init_agent_state", "slow_step",
     "tick", "update_belief", "EfeBreakdown", "expected_free_energy",
-    "select_action", "fleet_tick", "init_fleet_state", "AifConfig",
+    "select_action", "FleetTrace", "fleet_rollout", "fleet_tick",
+    "init_fleet_state", "AifConfig",
     "GenerativeModel", "init_generative_model", "ReplayBuffer", "init_replay",
     "slow_update", "BALANCED_ACTION", "N_ACTIONS", "policy_table",
     "routing_weights", "MODALITIES", "N_MODALITIES", "N_STATES", "N_TIERS",

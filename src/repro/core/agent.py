@@ -61,6 +61,71 @@ def init_agent_state(cfg: generative.AifConfig) -> AgentState:
     )
 
 
+def pre_action(state: AgentState,
+               obs_bins: jnp.ndarray,
+               raw_error_rate: jnp.ndarray,
+               cfg: generative.AifConfig,
+               util_bins: jnp.ndarray | None = None,
+               util_valid=False):
+    """Everything in a fast step *before* action selection.
+
+    Adaptive preferences (paper §4.2) → Bayesian belief update (Eq. 2) →
+    replay-buffer push.  Split out so fleet mode can evaluate the EFE term
+    with the fused fleet kernel between this and :func:`apply_action` while
+    sharing one copy of the control-step logic.
+
+    Returns (model, q_next, replay, error_ema, unstable).
+    """
+    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
+    c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
+    model = state.model._replace(c_log=c_log)
+
+    q_prev = state.belief
+    q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
+                                      obs_bins, util_bins, util_valid)
+
+    replay = learning.push_transition(
+        state.replay, q_prev, q_next, obs_bins, state.prev_action,
+        state.dt_since_change)
+    return model, q_next, replay, error_ema, unstable
+
+
+def apply_action(state: AgentState,
+                 model: generative.GenerativeModel,
+                 q_next: jnp.ndarray,
+                 replay: learning.ReplayBuffer,
+                 error_ema: jnp.ndarray,
+                 unstable: jnp.ndarray,
+                 sampled: jnp.ndarray,
+                 cfg: generative.AifConfig) -> tuple[AgentState, jnp.ndarray]:
+    """Dwell-gate the sampled action and assemble the next AgentState.
+
+    The policy is re-evaluated on the dwell cadence only and held in between
+    (the settle-weighted transition learning needs actions to persist).
+    Elementwise over any leading batch shape — fleet mode calls it directly
+    on (R,)-batched states.
+
+    Returns (new_state, applied action).
+    """
+    dwell_ticks = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
+    do_select = (state.t % dwell_ticks) == 0
+    action = jnp.where(do_select, sampled, state.prev_action)
+    changed = action != state.prev_action
+    dt = jnp.where(changed, 0.0, state.dt_since_change + cfg.fast_period_s)
+
+    new_state = AgentState(
+        model=model,
+        belief=q_next,
+        replay=replay,
+        prev_action=action.astype(jnp.int32),
+        dt_since_change=dt,
+        error_ema=error_ema,
+        unstable=unstable,
+        t=state.t + 1,
+    )
+    return new_state, action
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def fast_step(state: AgentState,
               obs_bins: jnp.ndarray,
@@ -82,41 +147,14 @@ def fast_step(state: AgentState,
         order — the paper's 10-second resource-metric query (§3).
       util_valid: gate for util_bins (True on scrape ticks only).
     """
-    # --- adaptive preferences (paper §4.2) --------------------------------
-    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
-    c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
-    model = state.model._replace(c_log=c_log)
-
-    # --- Bayesian belief update (Eq. 2) -----------------------------------
-    q_prev = state.belief
-    q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
-                                      obs_bins, util_bins, util_valid)
-
-    # --- record the (q_prev, a, q_next, o) transition ----------------------
-    replay = learning.push_transition(
-        state.replay, q_prev, q_next, obs_bins, state.prev_action,
-        state.dt_since_change)
+    model, q_next, replay, error_ema, unstable = pre_action(
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
 
     # --- action selection via EFE (Eq. 1) ----------------------------------
-    # Re-evaluate the policy on the dwell cadence only; hold it in between
-    # (the settle-weighted transition learning needs actions to persist).
-    dwell_ticks = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
-    do_select = (state.t % dwell_ticks) == 0
     sampled, bd = efe_mod.select_action(key, model, q_next, cfg)
-    action = jnp.where(do_select, sampled, state.prev_action)
-    changed = action != state.prev_action
-    dt = jnp.where(changed, 0.0, state.dt_since_change + cfg.fast_period_s)
+    new_state, action = apply_action(state, model, q_next, replay, error_ema,
+                                     unstable, sampled, cfg)
 
-    new_state = AgentState(
-        model=model,
-        belief=q_next,
-        replay=replay,
-        prev_action=action.astype(jnp.int32),
-        dt_since_change=dt,
-        error_ema=error_ema,
-        unstable=unstable,
-        t=state.t + 1,
-    )
     info = StepInfo(
         action=action,
         routing_weights=policies.routing_weights(action),

@@ -7,18 +7,36 @@ get the fleet for free with ``jax.vmap``, and the batched step is a dense
 (R, A, S, S) einsum workload that shards over a mesh axis with pjit and maps
 onto the MXU via the fused Pallas EFE kernel (:mod:`repro.kernels.efe`).
 
+Two execution paths for one control tick:
+
+* ``fleet_tick(..., fused=False)`` — ``jax.vmap`` of the single-agent
+  :func:`repro.core.agent.tick` (reference semantics),
+* ``fleet_tick(..., fused=True)`` — the same math with the EFE evaluation
+  routed through :func:`repro.kernels.efe.ops.fleet_efe`, i.e. one fused
+  (R, A, S, S) kernel launch instead of R independent einsums
+  (``use_pallas=True`` selects the Pallas TPU kernel, else the XLA oracle).
+
+:func:`fleet_rollout` closes the loop on-device: a single ``jax.lax.scan``
+alternates fleet ticks with a batched environment step (e.g. the fluid engine
+in :mod:`repro.envsim.batched`), so a whole fleet-of-routers experiment runs
+jit-compiled end to end with zero Python in the loop.
+
 All functions below take/return a *batched* :class:`~repro.core.agent.AgentState`
 whose leaves carry a leading router dimension R.
 """
 from __future__ import annotations
 
 import functools
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import agent as agent_mod
-from repro.core import generative
+from repro.core import belief as belief_mod
+from repro.core import efe as efe_mod
+from repro.core import generative, policies, spaces
+from repro.kernels.efe import ops as efe_ops
 
 
 def init_fleet_state(cfg: generative.AifConfig,
@@ -29,25 +47,197 @@ def init_fleet_state(cfg: generative.AifConfig,
         lambda x: jnp.broadcast_to(x, (n_routers,) + x.shape), single)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+# ------------------------------------------------------------------ one tick
+def _fused_fast_step(state: agent_mod.AgentState,
+                     obs_bins: jnp.ndarray,
+                     raw_error_rate: jnp.ndarray,
+                     keys: jax.Array,
+                     cfg: generative.AifConfig,
+                     util_bins: jnp.ndarray | None,
+                     util_valid,
+                     use_pallas: bool):
+    """:func:`repro.core.agent.fast_step` with the EFE term evaluated as one
+    fused fleet-kernel launch instead of R vmapped einsums.  The control-step
+    logic is shared with the single-agent path (``pre_action`` /
+    ``apply_action``); only the selection sandwich differs.  The returned
+    ``StepInfo.efe`` carries the fused G and action probabilities; the
+    risk/ambiguity diagnostics are not split out by the fused kernel and
+    read zero.
+    """
+    if util_bins is None:
+        pre = jax.vmap(lambda s, o, e: agent_mod.pre_action(s, o, e, cfg))(
+            state, obs_bins, raw_error_rate)
+    else:
+        pre = jax.vmap(
+            lambda s, o, e, u: agent_mod.pre_action(s, o, e, cfg, u,
+                                                    util_valid))(
+            state, obs_bins, raw_error_rate, util_bins)
+    model, q_next, replay, error_ema, unstable = pre
+
+    g = efe_ops.fleet_efe(model.a_counts, model.b_counts, model.c_log,
+                          q_next, cfg, use_pallas=use_pallas)      # (R, A)
+    probs = jax.nn.softmax(-cfg.beta * g, axis=-1)
+    sampled = jax.vmap(
+        lambda k, p: jax.random.categorical(
+            k, jnp.log(jnp.maximum(p, 1e-30))))(keys, probs)
+
+    # apply_action is elementwise over the router axis — call it unbatched
+    new_state, action = agent_mod.apply_action(
+        state, model, q_next, replay, error_ema, unstable, sampled, cfg)
+
+    zeros = jnp.zeros_like(g)
+    cost = cfg.cost_weight * policies.policy_concentration_cost()
+    info = agent_mod.StepInfo(
+        action=action,
+        routing_weights=policies.routing_weights(action),
+        efe=efe_mod.EfeBreakdown(
+            g=g, risk=zeros, ambiguity=zeros,
+            cost=jnp.broadcast_to(cost, g.shape), action_probs=probs),
+        belief_entropy=jax.vmap(belief_mod.belief_entropy)(q_next),
+        unstable=unstable,
+        obs_bins=obs_bins,
+    )
+    return new_state, info
+
+
+def _select_learned(state, learned, do_learn):
+    """Per-router select of the slow-updated state (vmap-of-cond semantics)."""
+    def pick(a, b):
+        cond = do_learn.reshape(do_learn.shape + (1,) * (a.ndim - 1))
+        return jnp.where(cond, b, a)
+    return jax.tree_util.tree_map(pick, state, learned)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "fused", "use_pallas"))
 def fleet_tick(state: agent_mod.AgentState,
                obs_bins: jnp.ndarray,
                raw_error_rate: jnp.ndarray,
                keys: jax.Array,
-               cfg: generative.AifConfig):
-    """vmapped :func:`repro.core.agent.tick` over the router axis.
+               cfg: generative.AifConfig,
+               util_bins: jnp.ndarray | None = None,
+               util_valid=False,
+               *,
+               fused: bool = False,
+               use_pallas: bool = False):
+    """One control tick for the whole fleet.
 
     Args:
       state: batched AgentState (leading dim R on every leaf).
       obs_bins: (R, N_MODALITIES) int32.
       raw_error_rate: (R,) float32.
-      keys: (R, 2) uint32 PRNG keys (one per router).
+      keys: (R,) typed PRNG keys (one per router).
+      util_bins: optional (R, 3) int32 utilization scrape (u_H, u_M, u_L).
+      util_valid: scalar gate for util_bins (True on scrape ticks; traced ok).
+      fused: route the EFE evaluation through the fused fleet kernel
+        (:func:`repro.kernels.efe.ops.fleet_efe`) instead of vmapping the
+        per-router einsums.
+      use_pallas: with ``fused=True``, dispatch the Pallas TPU kernel rather
+        than the XLA oracle.
     """
+    if fused:
+        ks = jax.vmap(jax.random.split)(keys)              # (R, 2) keys
+        k_fast, k_slow = ks[:, 0], ks[:, 1]
+        state, info = _fused_fast_step(state, obs_bins, raw_error_rate,
+                                       k_fast, cfg, util_bins, util_valid,
+                                       use_pallas)
+        period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
+        do_learn = (state.t % period) == 0                 # (R,)
+        learned = jax.vmap(
+            lambda s, k: agent_mod.slow_step(s, k, cfg))(state, k_slow)
+        return _select_learned(state, learned, do_learn), info
+
+    if util_bins is None:
+        return jax.vmap(
+            lambda s, o, e, k: agent_mod.tick(s, o, e, k, cfg)
+        )(state, obs_bins, raw_error_rate, keys)
     return jax.vmap(
-        lambda s, o, e, k: agent_mod.tick(s, o, e, k, cfg)
-    )(state, obs_bins, raw_error_rate, keys)
+        lambda s, o, e, k, u: agent_mod.tick(s, o, e, k, cfg, u, util_valid)
+    )(state, obs_bins, raw_error_rate, keys, util_bins)
 
 
 def fleet_routing_weights(info) -> jnp.ndarray:
     """(R, 3) routing weights extracted from a batched StepInfo."""
     return info.routing_weights
+
+
+# ------------------------------------------------------------------- rollout
+class FleetTrace(NamedTuple):
+    """Per-window traces of a fleet rollout (leading time axis T)."""
+
+    actions: jnp.ndarray          # (T, R) int32 selected policies
+    routing_weights: jnp.ndarray  # (T, R, 3) applied weights
+    raw_obs: jnp.ndarray          # (T, R, 4) metrics the routers observed
+    unstable: jnp.ndarray         # (T, R) adaptive-preference mode flag
+    env: Any                      # environment info pytree (engine-specific)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("env_step", "n_steps", "cfg", "disc",
+                                    "util_edges", "util_period", "fused",
+                                    "use_pallas"))
+def fleet_rollout(agent_state: agent_mod.AgentState,
+                  env_state,
+                  env_step: Callable,
+                  n_steps: int,
+                  key: jax.Array,
+                  cfg: generative.AifConfig,
+                  disc: spaces.DiscretizationConfig | None = None,
+                  util_edges: tuple[float, float] = (0.5, 0.9),
+                  util_period: int = 10,
+                  *,
+                  fused: bool = False,
+                  use_pallas: bool = False):
+    """Closed-loop fleet experiment as one on-device ``lax.scan``.
+
+    Each of the ``n_steps`` control windows: discretize the previous window's
+    observations, run :func:`fleet_tick` (belief update → EFE → action), apply
+    the selected routing weights to the batched environment, observe.  The
+    observation plumbing mirrors :class:`repro.envsim.routers.AifRouter`
+    (same discretization, same 10-second utilization scrape in (H, M, L)
+    order) so a fleet cell behaves like the single-router harness.
+
+    Args:
+      agent_state: batched AgentState (leading dim R).
+      env_state: environment state pytree with leading cell dim R (e.g.
+        :class:`repro.envsim.batched.FluidState`).
+      env_step: ``(env_state, weights, t_idx, key) -> (env_state, info)``
+        where ``info.raw_obs`` is (R, 4) raw metrics and
+        ``info.tier_utilization`` is (R, 3) in (L, M, H) order — see
+        :func:`repro.envsim.batched.make_env_step`.
+      n_steps: number of control windows T (static).
+      cfg/disc: agent hyper-parameters and observation discretization.
+
+    Returns:
+      (final agent state, final env state, :class:`FleetTrace`).
+    """
+    disc = disc or spaces.DiscretizationConfig()
+    r = agent_state.belief.shape[0]
+    edges = jnp.asarray(util_edges, jnp.float32)
+
+    def step(carry, t_idx):
+        ast, est, raw_obs, tier_util, k = carry
+        k, k_env, k_agents = jax.random.split(k, 3)
+        keys = jax.random.split(k_agents, r)
+        obs_bins = spaces.discretize_observation(raw_obs, disc)
+        util_hml = tier_util[:, ::-1]                  # (L,M,H) -> (H,M,L)
+        util_bins = jnp.sum(util_hml[..., None] >= edges, axis=-1
+                            ).astype(jnp.int32)
+        util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
+        ast, info = fleet_tick(ast, obs_bins, raw_obs[:, 3], keys, cfg,
+                               util_bins, util_valid,
+                               fused=fused, use_pallas=use_pallas)
+        est, win = env_step(est, info.routing_weights, t_idx, k_env)
+        ys = FleetTrace(actions=info.action,
+                        routing_weights=info.routing_weights,
+                        raw_obs=raw_obs,
+                        unstable=info.unstable,
+                        env=win)
+        return (ast, est, win.raw_obs, win.tier_utilization, k), ys
+
+    obs0 = jnp.zeros((r, spaces.N_MODALITIES), jnp.float32)
+    util0 = jnp.zeros((r, spaces.N_TIERS), jnp.float32)
+    (ast, est, *_), trace = jax.lax.scan(
+        step, (agent_state, env_state, obs0, util0, key),
+        jnp.arange(n_steps, dtype=jnp.int32))
+    return ast, est, trace

@@ -1,10 +1,24 @@
-"""Calibrated discrete-event simulator of the paper's edge testbed."""
+"""Calibrated discrete-event simulator of the paper's edge testbed, plus the
+batched fluid engine and scenario library for fleet-scale experiments."""
+from repro.envsim.batched import (FluidParams, FluidResult, FluidState,
+                                  WindowInfo, fluid_window_step,
+                                  init_fluid_state, make_env_step,
+                                  params_from_config, run_fluid, summarize)
 from repro.envsim.config import SimConfig, TierConfig, default_tiers
 from repro.envsim.harness import (StrategySummary, evaluate_strategy, table1)
 from repro.envsim.routers import AifRouter
+from repro.envsim.scenarios import (SCENARIOS, Profile, ScenarioBatch,
+                                    build_scenario, compile_scenario, compose)
 from repro.envsim.simulator import (EdgeSimulator, MetricsSnapshot, RunResult,
                                     run_experiment)
 
 __all__ = ["SimConfig", "TierConfig", "default_tiers", "StrategySummary",
            "evaluate_strategy", "table1", "AifRouter", "EdgeSimulator",
-           "MetricsSnapshot", "RunResult", "run_experiment"]
+           "MetricsSnapshot", "RunResult", "run_experiment",
+           # batched fluid engine
+           "FluidParams", "FluidResult", "FluidState", "WindowInfo",
+           "fluid_window_step", "init_fluid_state", "make_env_step",
+           "params_from_config", "run_fluid", "summarize",
+           # scenarios
+           "SCENARIOS", "Profile", "ScenarioBatch", "build_scenario",
+           "compile_scenario", "compose"]

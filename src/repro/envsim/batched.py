@@ -1,0 +1,443 @@
+"""Batched discrete-time fluid engine for fleet-scale experiments.
+
+The event-driven simulator (:mod:`repro.envsim.simulator`) resolves every
+request individually through a Python heapq loop — faithful, but single
+threaded and host-bound, so a fleet experiment over hundreds of service cells
+is bottlenecked on Python.  This module replaces the per-request dynamics with
+a *fluid (mean-flow) approximation* advanced one control window at a time:
+
+* per tier, request mass flows in at ``w_i · λ(t)`` and drains at the tier's
+  service capacity ``c_i · μ_i``; the backlog (queued + in-flight mass) is a
+  single float per (cell, tier),
+* queue caps convert excess backlog into ``overflow`` failures, down pods
+  convert arrivals into ``refused`` failures, and the same saturation/shock
+  restart hazards as the event simulator kill the backlog (``restart``
+  failures) and take the tier down,
+* waiting time is backlog over capacity (Little's law), service variability
+  enters through the lognormal P95 factor.
+
+Everything is a pure ``jnp`` function of arrays: one window is
+:func:`fluid_window_step`, a whole run is a single :func:`jax.lax.scan`, and
+the leading cell axis R vmaps/shards for free.  A fleet of AIF routers plugs
+in through :func:`repro.core.fleet.fleet_rollout` via :func:`make_env_step` —
+zero Python in the loop, the whole experiment is one jitted program.
+
+Fidelity contract: under a static router the steady-state success rate stays
+within a few percentage points of the event-driven simulator and P95 within
+the same latency regime (tests/test_batched_env.py pins both); per-request
+effects (ordering, per-request timeout at dequeue) are intentionally averaged
+out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import N_TIERS
+from repro.envsim.config import SimConfig
+
+_EPS = 1e-9
+
+
+class FluidParams(NamedTuple):
+    """Static world description, broadcast over the cell axis R.
+
+    All per-tier leaves are (R, 3) float32; scalars are () float32.  Build
+    with :func:`params_from_config` (optionally heterogeneous per cell via
+    ``capacity_scale``).
+    """
+
+    servers: jnp.ndarray            # (R, 3) concurrent requests per tier
+    mu: jnp.ndarray                 # (R, 3) per-server service rate (req/s)
+    service_mean_s: jnp.ndarray     # (R, 3) mean service time
+    service_p95_factor: jnp.ndarray  # (R, 3) lognormal P95 / mean ratio
+    queue_cap: jnp.ndarray          # (R, 3) admission queue limit
+    timeout_s: jnp.ndarray          # () client timeout
+    unstable: jnp.ndarray           # (R, 3) 1.0 where the tier can restart
+    restart_base: jnp.ndarray       # (R, 3) spontaneous hazard (1/s)
+    restart_load: jnp.ndarray       # (R, 3) hazard per unit util over knee
+    restart_knee: jnp.ndarray       # (R, 3)
+    restart_shock: jnp.ndarray      # (R, 3) hazard per (Δrps / capacity)
+    restart_min_s: jnp.ndarray      # (R, 3)
+    restart_max_s: jnp.ndarray      # (R, 3)
+    latency_window_s: jnp.ndarray   # () observation EMA horizons
+    error_window_s: jnp.ndarray
+    rps_window_s: jnp.ndarray
+
+    @property
+    def n_cells(self) -> int:
+        return self.servers.shape[0]
+
+
+class FluidState(NamedTuple):
+    """Mutable world state; every leaf carries the leading cell axis R."""
+
+    backlog: jnp.ndarray          # (R, 3) request mass in system per tier
+    down_left: jnp.ndarray        # (R, 3) seconds of downtime remaining
+    util_accum: jnp.ndarray       # (R, 3) busy-fraction integral since scrape
+    util_scrape: jnp.ndarray      # (R, 3) last published 10 s utilization
+    prev_tier_rps: jnp.ndarray    # (R, 3) offered per-tier RPS last window
+    p95_ema: jnp.ndarray          # (R,) observed P95 (sliding-window approx)
+    rps_ema: jnp.ndarray          # (R,) observed offered RPS
+    err_ema: jnp.ndarray          # (R,) observed error rate
+    # cumulative accounting (floats: request *mass*)
+    n_requests: jnp.ndarray       # (R,)
+    n_success: jnp.ndarray        # (R,)
+    err_timeout: jnp.ndarray      # (R,)
+    err_overflow: jnp.ndarray     # (R,)
+    err_refused: jnp.ndarray      # (R,)
+    err_restart: jnp.ndarray      # (R,)
+    tier_requests: jnp.ndarray    # (R, 3)
+    tier_success: jnp.ndarray     # (R, 3)
+    n_restarts: jnp.ndarray       # (R, 3)
+
+
+class WindowInfo(NamedTuple):
+    """Per-window observables + diagnostics (what a router may see)."""
+
+    raw_obs: jnp.ndarray          # (R, 4): p95_s, rps, queue_depth, err_rate
+    tier_utilization: jnp.ndarray  # (R, 3) 10 s scrape (paper §3)
+    tier_up: jnp.ndarray          # (R, 3) liveness probe
+    tier_latency_s: jnp.ndarray   # (R, 3) mean latency of this window's flow
+    tier_p95_s: jnp.ndarray       # (R, 3)
+    tier_completed: jnp.ndarray   # (R, 3) successful mass this window
+    success: jnp.ndarray          # (R,)
+    failures: jnp.ndarray         # (R,)
+    restarted: jnp.ndarray        # (R, 3) 1.0 where a pod restarted
+
+
+class FluidResult(NamedTuple):
+    """Aggregate per-cell outcome of a rollout (mirrors RunResult)."""
+
+    n_requests: np.ndarray        # (R,)
+    n_success: np.ndarray         # (R,)
+    success_rate: np.ndarray      # (R,)
+    error_breakdown: dict         # cause -> (R,)
+    p95_ms: np.ndarray            # (R,) completion-weighted aggregate P95
+    p50_ms: np.ndarray            # (R,)
+    tier_requests: np.ndarray     # (R, 3)
+    tier_success: np.ndarray      # (R, 3)
+    n_restarts: np.ndarray        # (R, 3)
+
+
+# --------------------------------------------------------------------- build
+def params_from_config(cfg: SimConfig,
+                       n_cells: int,
+                       capacity_scale: np.ndarray | None = None) -> FluidParams:
+    """FluidParams for ``n_cells`` replicas of the event simulator's world.
+
+    Args:
+      cfg: the event simulator's configuration (single source of truth).
+      n_cells: number of independent service cells R.
+      capacity_scale: optional (R, 3) per-cell multiplier on tier capacity
+        (fractional server counts are meaningful in the fluid limit) — the
+        heterogeneous-fleet lever used by :mod:`repro.envsim.scenarios`.
+    """
+    def tiled(vals, dtype=np.float32):
+        return jnp.asarray(np.tile(np.asarray(vals, dtype), (n_cells, 1)))
+
+    tiers = cfg.tiers
+    servers = np.tile(np.asarray([t.servers for t in tiers], np.float32),
+                      (n_cells, 1))
+    if capacity_scale is not None:
+        servers = servers * np.asarray(capacity_scale, np.float32)
+    # lognormal P95/mean ratio: exp(mu + 1.645 sigma) / exp(mu + sigma^2/2)
+    p95f = []
+    for t in tiers:
+        sigma = np.sqrt(np.log(1.0 + t.service_cv ** 2))
+        p95f.append(float(np.exp(1.645 * sigma - 0.5 * sigma ** 2)))
+    inst = 1.0 if cfg.instability else 0.0
+    return FluidParams(
+        servers=jnp.asarray(servers),
+        mu=tiled([1.0 / t.mean_service_s for t in tiers]),
+        service_mean_s=tiled([t.mean_service_s for t in tiers]),
+        service_p95_factor=tiled(p95f),
+        queue_cap=tiled([t.queue_cap for t in tiers]),
+        timeout_s=jnp.float32(cfg.timeout_s),
+        unstable=tiled([inst * float(t.unstable) for t in tiers]),
+        restart_base=tiled([t.restart_base_hazard for t in tiers]),
+        restart_load=tiled([t.restart_load_hazard for t in tiers]),
+        restart_knee=tiled([t.restart_util_knee for t in tiers]),
+        restart_shock=tiled([t.restart_shock_hazard for t in tiers]),
+        restart_min_s=tiled([t.restart_min_s for t in tiers]),
+        restart_max_s=tiled([t.restart_max_s for t in tiers]),
+        latency_window_s=jnp.float32(cfg.latency_window_s),
+        error_window_s=jnp.float32(cfg.error_window_s),
+        rps_window_s=jnp.float32(cfg.rps_window_s),
+    )
+
+
+def init_fluid_state(params: FluidParams) -> FluidState:
+    r = params.n_cells
+    z = jnp.zeros((r,), jnp.float32)
+    zt = jnp.zeros((r, N_TIERS), jnp.float32)
+    return FluidState(
+        backlog=zt, down_left=zt, util_accum=zt, util_scrape=zt,
+        prev_tier_rps=zt, p95_ema=z, rps_ema=z, err_ema=z,
+        n_requests=z, n_success=z, err_timeout=z, err_overflow=z,
+        err_refused=z, err_restart=z, tier_requests=zt, tier_success=zt,
+        n_restarts=zt,
+    )
+
+
+# ---------------------------------------------------------------------- step
+def _weighted_p95(lat: jnp.ndarray, mass: jnp.ndarray) -> jnp.ndarray:
+    """Completion-weighted 95th percentile of the 3-atom tier latency mix.
+
+    Args:
+      lat: (..., 3) per-tier latency atoms.
+      mass: (..., 3) completion mass per atom.
+    """
+    order = jnp.argsort(lat, axis=-1)
+    lat_s = jnp.take_along_axis(lat, order, axis=-1)
+    m_s = jnp.take_along_axis(mass, order, axis=-1)
+    total = jnp.maximum(jnp.sum(m_s, axis=-1, keepdims=True), _EPS)
+    cum = jnp.cumsum(m_s, axis=-1) / total
+    # first atom whose cumulative share reaches 0.95
+    reach = cum >= 0.95
+    first = reach & ~jnp.concatenate(
+        [jnp.zeros_like(reach[..., :1]), reach[..., :-1]], axis=-1)
+    return jnp.sum(jnp.where(first, lat_s, 0.0), axis=-1)
+
+
+def fluid_window_step(params: FluidParams,
+                      state: FluidState,
+                      weights: jnp.ndarray,
+                      arrival_rate: jnp.ndarray,
+                      hazard_scale: jnp.ndarray,
+                      key: jax.Array,
+                      t_idx: jnp.ndarray,
+                      dt: float = 1.0,
+                      scrape_every: int = 10) -> tuple[FluidState, WindowInfo]:
+    """Advance every cell one control window under the given routing weights.
+
+    Args:
+      weights: (R, 3) routing weights (normalized internally).
+      arrival_rate: (R,) offered RPS this window (from the scenario schedule).
+      hazard_scale: (R, 3) multiplier on the restart hazard this window.
+      key: PRNG key (restart draws).
+      t_idx: () int32 window index (drives the 10 s utilization scrape).
+      dt: control-window length in seconds (static).
+      scrape_every: windows between utilization scrapes (static).
+    """
+    w = jnp.maximum(weights, 0.0)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
+
+    up = state.down_left <= _EPS                      # (R, 3) bool
+    upf = up.astype(jnp.float32)
+
+    lam = w * arrival_rate[:, None]                   # (R, 3) offered RPS
+    arr = lam * dt                                    # (R, 3) request mass
+    refused = jnp.sum(arr * (1.0 - upf), axis=-1)     # down pods 503 on arrival
+    admitted = arr * upf
+
+    cap_rate = params.servers * params.mu             # (R, 3) RPS at saturation
+    cap = cap_rate * dt * upf
+    backlog0 = state.backlog
+    avail = backlog0 + admitted
+    served = jnp.minimum(avail, cap)
+    backlog1 = avail - served
+
+    # admission limit: waiting mass above queue_cap is rejected (HTTP 503)
+    syscap = params.queue_cap + params.servers
+    over = jnp.maximum(backlog1 - syscap, 0.0)
+    backlog1 = backlog1 - over
+
+    # Little's law: waiting time ≈ mean backlog over the window / drain rate
+    wait = jnp.where(cap_rate > 0,
+                     0.5 * (backlog0 + backlog1) / jnp.maximum(cap_rate, _EPS),
+                     0.0)
+    tier_latency = wait + params.service_mean_s
+    tier_p95 = wait + params.service_mean_s * params.service_p95_factor
+    timed_out = jnp.where(tier_latency > params.timeout_s, served, 0.0)
+    completed = served - timed_out                    # (R, 3) successes
+
+    # utilization (busy-core fraction this window; down pods idle)
+    util = jnp.where(cap > 0, served / jnp.maximum(cap_rate * dt, _EPS), 0.0)
+    util_accum = state.util_accum + util * dt
+    scrape_now = ((t_idx + 1) % scrape_every) == 0
+    util_scrape = jnp.where(scrape_now,
+                            util_accum / (scrape_every * dt),
+                            state.util_scrape)
+    util_accum = jnp.where(scrape_now, 0.0, util_accum)
+
+    # restart hazard (same functional form as the event simulator)
+    rps_delta = lam - state.prev_tier_rps
+    hazard = hazard_scale * params.unstable * (
+        params.restart_base
+        + params.restart_load * jnp.maximum(0.0, util_scrape - params.restart_knee)
+        + params.restart_shock * jnp.maximum(0.0, rps_delta)
+        / jnp.maximum(cap_rate, _EPS))
+    p_restart = 1.0 - jnp.exp(-hazard * dt)
+    k_fire, k_dur = jax.random.split(key)
+    u = jax.random.uniform(k_fire, backlog1.shape)
+    restarted = (up & (u < p_restart)).astype(jnp.float32)
+    killed = backlog1 * restarted                     # in-system mass dies
+    backlog2 = backlog1 * (1.0 - restarted)
+    dur = params.restart_min_s + jax.random.uniform(k_dur, backlog1.shape) * (
+        params.restart_max_s - params.restart_min_s)
+    down_left = jnp.maximum(state.down_left - dt, 0.0)
+    down_left = jnp.where(restarted > 0, dur, down_left)
+
+    # ---- accounting -------------------------------------------------------
+    win_success = jnp.sum(completed, axis=-1)
+    win_fail = (refused + jnp.sum(over, axis=-1) + jnp.sum(timed_out, axis=-1)
+                + jnp.sum(killed, axis=-1))
+
+    # ---- router observables (EMA ≈ the event sim's sliding windows) -------
+    a_lat = jnp.minimum(1.0, 2.0 * dt / params.latency_window_s)
+    a_err = jnp.minimum(1.0, 2.0 * dt / params.error_window_s)
+    a_rps = jnp.minimum(1.0, 2.0 * dt / params.rps_window_s)
+
+    p95_win = _weighted_p95(tier_p95, completed)      # (R,)
+    any_done = win_success > _EPS
+    p95_ema = jnp.where(any_done,
+                        (1 - a_lat) * state.p95_ema + a_lat * p95_win,
+                        state.p95_ema)
+    total_win = win_success + win_fail
+    err_frac = win_fail / jnp.maximum(total_win, _EPS)
+    err_ema = jnp.where(total_win > _EPS,
+                        (1 - a_err) * state.err_ema + a_err * err_frac,
+                        state.err_ema)
+    rps_ema = (1 - a_rps) * state.rps_ema + a_rps * arrival_rate
+    queue_depth = jnp.sum(jnp.maximum(backlog2 - params.servers, 0.0), axis=-1)
+
+    new_state = FluidState(
+        backlog=backlog2,
+        down_left=down_left,
+        util_accum=util_accum,
+        util_scrape=util_scrape,
+        prev_tier_rps=lam,
+        p95_ema=p95_ema,
+        rps_ema=rps_ema,
+        err_ema=err_ema,
+        n_requests=state.n_requests + jnp.sum(arr, axis=-1),
+        n_success=state.n_success + win_success,
+        err_timeout=state.err_timeout + jnp.sum(timed_out, axis=-1),
+        err_overflow=state.err_overflow + jnp.sum(over, axis=-1),
+        err_refused=state.err_refused + refused,
+        err_restart=state.err_restart + jnp.sum(killed, axis=-1),
+        tier_requests=state.tier_requests + arr,
+        tier_success=state.tier_success + completed,
+        n_restarts=state.n_restarts + restarted,
+    )
+    info = WindowInfo(
+        raw_obs=jnp.stack([p95_ema, rps_ema, queue_depth, err_ema], axis=-1),
+        tier_utilization=util_scrape,
+        tier_up=(down_left <= _EPS).astype(jnp.float32),
+        tier_latency_s=tier_latency,
+        tier_p95_s=tier_p95,
+        tier_completed=completed,
+        success=win_success,
+        failures=win_fail,
+        restarted=restarted,
+    )
+    return new_state, info
+
+
+# ------------------------------------------------------------------ rollouts
+@functools.partial(jax.jit, static_argnames=("dt", "scrape_every"))
+def run_fluid(params: FluidParams,
+              arrival_rate: jnp.ndarray,
+              hazard_scale: jnp.ndarray,
+              weights: jnp.ndarray,
+              key: jax.Array,
+              dt: float = 1.0,
+              scrape_every: int = 10) -> tuple[FluidState, WindowInfo]:
+    """Static-router rollout: one ``lax.scan`` over T windows, no Python loop.
+
+    Args:
+      arrival_rate: (T, R) offered RPS schedule.
+      hazard_scale: (T, R, 3) restart-hazard multiplier schedule.
+      weights: (3,), (R, 3) or (T, R, 3) routing weights.
+      key: PRNG key.
+
+    Returns:
+      (final FluidState, stacked WindowInfo traces with leading T axis).
+    """
+    t_total = arrival_rate.shape[0]
+    r = params.n_cells
+    if weights.ndim == 1:
+        weights = jnp.broadcast_to(weights[None], (r, N_TIERS))
+    if weights.ndim == 2:
+        weights = jnp.broadcast_to(weights[None], (t_total, r, N_TIERS))
+    keys = jax.random.split(key, t_total)
+
+    def step(state, xs):
+        t_idx, rate, hz, w_t, k = xs
+        return fluid_window_step(params, state, w_t, rate, hz, k, t_idx,
+                                 dt=dt, scrape_every=scrape_every)
+
+    xs = (jnp.arange(t_total, dtype=jnp.int32), arrival_rate, hazard_scale,
+          weights, keys)
+    return jax.lax.scan(step, init_fluid_state(params), xs)
+
+
+def make_env_step(params: FluidParams,
+                  arrival_rate: jnp.ndarray,
+                  hazard_scale: jnp.ndarray,
+                  dt: float = 1.0,
+                  scrape_every: int = 10):
+    """Adapt the fluid engine to :func:`repro.core.fleet.fleet_rollout`.
+
+    Returns an ``env_step(env_state, weights, t_idx, key) -> (env_state,
+    WindowInfo)`` closure over the scenario schedules; the schedules are
+    closed-over jnp arrays indexed by the traced window counter, so the whole
+    rollout stays one jitted scan.
+    """
+    arrival_rate = jnp.asarray(arrival_rate)
+    hazard_scale = jnp.asarray(hazard_scale)
+
+    def env_step(env_state, weights, t_idx, key):
+        return fluid_window_step(params, env_state, weights,
+                                 arrival_rate[t_idx], hazard_scale[t_idx],
+                                 key, t_idx, dt=dt, scrape_every=scrape_every)
+
+    return env_step
+
+
+def summarize(final: FluidState, trace: WindowInfo) -> FluidResult:
+    """Host-side aggregation of a rollout into per-cell Table-1-style stats."""
+    lat = np.asarray(trace.tier_p95_s)        # (T, R, 3)
+    mean_lat = np.asarray(trace.tier_latency_s)
+    mass = np.asarray(trace.tier_completed)   # (T, R, 3)
+    t, r, k = lat.shape
+    lat_flat = np.moveaxis(lat, 1, 0).reshape(r, t * k)
+    mean_flat = np.moveaxis(mean_lat, 1, 0).reshape(r, t * k)
+    mass_flat = np.moveaxis(mass, 1, 0).reshape(r, t * k)
+    p95 = np.zeros(r)
+    p50 = np.zeros(r)
+    for i in range(r):
+        total = mass_flat[i].sum()
+        if total <= 0:
+            continue
+        order95 = np.argsort(lat_flat[i])
+        cum = np.cumsum(mass_flat[i][order95]) / total
+        p95[i] = lat_flat[i][order95][np.searchsorted(cum, 0.95)
+                                      .clip(0, t * k - 1)]
+        order50 = np.argsort(mean_flat[i])
+        cum50 = np.cumsum(mass_flat[i][order50]) / total
+        p50[i] = mean_flat[i][order50][np.searchsorted(cum50, 0.50)
+                                       .clip(0, t * k - 1)]
+    n_req = np.asarray(final.n_requests)
+    n_succ = np.asarray(final.n_success)
+    return FluidResult(
+        n_requests=n_req,
+        n_success=n_succ,
+        success_rate=n_succ / np.maximum(n_req, _EPS),
+        error_breakdown={
+            "timeout": np.asarray(final.err_timeout),
+            "overflow": np.asarray(final.err_overflow),
+            "refused": np.asarray(final.err_refused),
+            "restart": np.asarray(final.err_restart),
+        },
+        p95_ms=1000.0 * p95,
+        p50_ms=1000.0 * p50,
+        tier_requests=np.asarray(final.tier_requests),
+        tier_success=np.asarray(final.tier_success),
+        n_restarts=np.asarray(final.n_restarts),
+    )

@@ -1,0 +1,221 @@
+"""Named, composable load/instability scenarios for the batched fleet engine.
+
+A scenario is assembled from multiplicative :class:`Profile` primitives:
+
+* ``rate``     — (T, R) multiplier on the configured base RPS,
+* ``hazard``   — (T, R, 3) multiplier on the per-tier restart hazard,
+* ``capacity`` — (R, 3) per-cell multiplier on tier capacity.
+
+Primitives compose by elementwise product (:func:`compose`), so "diurnal load
+on a heterogeneous fleet with a mid-run flash crowd" is three primitives
+multiplied together.  :func:`compile_scenario` materializes the concrete
+(T, R) arrival-rate and (T, R, 3) hazard schedules the engine consumes, and
+:data:`SCENARIOS` names ready-made presets for benchmarks / examples / CLI.
+
+All builders are host-side numpy: schedules are *inputs* to the jitted scan,
+generated once per experiment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+from repro.envsim.config import SimConfig
+
+
+class ScenarioBatch(NamedTuple):
+    """Concrete schedules for one fleet rollout."""
+
+    arrival_rate: np.ndarray    # (T, R) offered RPS per window
+    hazard_scale: np.ndarray    # (T, R, 3) restart-hazard multiplier
+    capacity_scale: np.ndarray  # (R, 3) per-cell tier-capacity multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    """Multiplicative scenario component (any field may be None = neutral)."""
+
+    rate: np.ndarray | None = None      # (T, R)
+    hazard: np.ndarray | None = None    # (T, R, 3)
+    capacity: np.ndarray | None = None  # (R, 3)
+
+
+def _mul(a: np.ndarray | None, b: np.ndarray | None) -> np.ndarray | None:
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return a * b
+
+
+def compose(*profiles: Profile) -> Profile:
+    """Elementwise product of profiles (None fields stay neutral)."""
+    out = Profile()
+    for p in profiles:
+        out = Profile(rate=_mul(out.rate, p.rate),
+                      hazard=_mul(out.hazard, p.hazard),
+                      capacity=_mul(out.capacity, p.capacity))
+    return out
+
+
+def compile_scenario(profile: Profile, cfg: SimConfig, n_cells: int,
+                     n_windows: int) -> ScenarioBatch:
+    """Materialize a profile into the engine's concrete schedules.
+
+    Schedules are per *window*; any real-time scaling belongs in the
+    primitive builders (which take ``window_s``), not here.
+    """
+    t, r = n_windows, n_cells
+    rate = np.ones((t, r), np.float32) if profile.rate is None else (
+        np.broadcast_to(profile.rate, (t, r)).astype(np.float32))
+    hazard = np.ones((t, r, 3), np.float32) if profile.hazard is None else (
+        np.broadcast_to(profile.hazard, (t, r, 3)).astype(np.float32))
+    cap = np.ones((r, 3), np.float32) if profile.capacity is None else (
+        np.broadcast_to(profile.capacity, (r, 3)).astype(np.float32))
+    return ScenarioBatch(arrival_rate=cfg.rps * rate,
+                         hazard_scale=hazard,
+                         capacity_scale=cap)
+
+
+# ----------------------------------------------------------------- primitives
+def steady() -> Profile:
+    """Flat offered load at the configured base RPS (paper: 50)."""
+    return Profile()
+
+
+def paper_bursts(cfg: SimConfig, n_windows: int, n_cells: int,
+                 window_s: float = 1.0) -> Profile:
+    """The event simulator's burst cycle, sampled per control window.
+
+    Matches ``EdgeSimulator._rate_at`` exactly (same duty cycle / factors) so
+    parity tests can drive both engines with the same offered-load shape.
+    """
+    t = (np.arange(n_windows, dtype=np.float64) + 0.5) * window_s
+    phase = (t % cfg.burst_period_s) / cfg.burst_period_s
+    mult = np.where(phase < cfg.burst_duty, cfg.burst_factor,
+                    cfg.off_burst_factor())
+    return Profile(rate=np.tile(mult[:, None].astype(np.float32),
+                                (1, n_cells)))
+
+
+def diurnal(n_windows: int, n_cells: int, window_s: float = 1.0,
+            period_s: float = 600.0, amplitude: float = 0.5,
+            phase_spread: float = 0.0) -> Profile:
+    """Sinusoidal load: 1 + amplitude·sin(2πt/period), optional per-cell phase.
+
+    ``phase_spread`` in [0, 1] staggers cell phases across one period —
+    regional fleets don't peak simultaneously.
+    """
+    t = (np.arange(n_windows, dtype=np.float64) + 0.5) * window_s
+    phases = phase_spread * 2.0 * math.pi * (
+        np.arange(n_cells, dtype=np.float64) / max(n_cells, 1))
+    mult = 1.0 + amplitude * np.sin(
+        2.0 * math.pi * t[:, None] / period_s + phases[None, :])
+    return Profile(rate=np.maximum(mult, 0.05).astype(np.float32))
+
+
+def flash_crowd(n_windows: int, n_cells: int, window_s: float = 1.0,
+                start_s: float = 120.0, duration_s: float = 60.0,
+                magnitude: float = 3.0, stagger_s: float = 0.0) -> Profile:
+    """A sudden load spike (×magnitude), optionally sweeping across cells."""
+    t = (np.arange(n_windows, dtype=np.float64) + 0.5) * window_s
+    starts = start_s + stagger_s * np.arange(n_cells, dtype=np.float64)
+    inside = (t[:, None] >= starts[None, :]) & (
+        t[:, None] < starts[None, :] + duration_s)
+    mult = np.where(inside, magnitude, 1.0)
+    return Profile(rate=mult.astype(np.float32))
+
+
+def cascading_restarts(n_windows: int, n_cells: int, window_s: float = 1.0,
+                       start_s: float = 60.0, wave_interval_s: float = 5.0,
+                       tiers: tuple[int, ...] = (0, 1),
+                       boost: float = 1e6) -> Profile:
+    """A restart wave rolling across the fleet's edge tiers.
+
+    Cell r gets a one-window hazard boost at ``start_s + r·wave_interval_s``
+    on the selected tiers, reproducing correlated edge outages (rolling
+    firmware updates, zone-wide thermal events).  The boost multiplies the
+    tier's own hazard; the default saturates even the bare base hazard
+    (light tier: 1e6 · ~7e-5/s ⇒ p_restart ≈ 1 − e⁻⁷⁰ ≈ 1) so the wave is
+    deterministic, not a high-probability draw.
+    """
+    hz = np.ones((n_windows, n_cells, 3), np.float64)
+    for r in range(n_cells):
+        k = int((start_s + r * wave_interval_s) / window_s)
+        if 0 <= k < n_windows:
+            for tier in tiers:
+                hz[k, r, tier] = boost
+    return Profile(hazard=hz.astype(np.float32))
+
+
+def heterogeneous_capacity(n_cells: int, spread: float = 0.35,
+                           seed: int = 0) -> Profile:
+    """Per-cell lognormal tier-capacity multipliers (heterogeneous fleet)."""
+    rng = np.random.default_rng(seed)
+    cap = np.exp(rng.normal(0.0, spread, size=(n_cells, 3)))
+    return Profile(capacity=cap.astype(np.float32))
+
+
+# ------------------------------------------------------------------- registry
+# Presets take (cfg, n_cells, n_windows, window_s, seed) -> ScenarioBatch.
+def _steady(cfg, r, t, w, seed):
+    return compile_scenario(steady(), cfg, r, t)
+
+
+def _paper_burst(cfg, r, t, w, seed):
+    return compile_scenario(paper_bursts(cfg, t, r, w), cfg, r, t)
+
+
+def _diurnal(cfg, r, t, w, seed):
+    return compile_scenario(
+        diurnal(t, r, w, period_s=max(600.0, t * w / 3), phase_spread=0.5),
+        cfg, r, t)
+
+
+def _flash(cfg, r, t, w, seed):
+    return compile_scenario(
+        compose(paper_bursts(cfg, t, r, w),
+                flash_crowd(t, r, w, start_s=t * w * 0.3,
+                            duration_s=max(30.0, t * w * 0.1),
+                            magnitude=2.5)),
+        cfg, r, t)
+
+
+def _cascade(cfg, r, t, w, seed):
+    return compile_scenario(
+        compose(paper_bursts(cfg, t, r, w),
+                cascading_restarts(t, r, w, start_s=t * w * 0.2,
+                                   wave_interval_s=max(1.0, t * w * 0.5 / max(r, 1)))),
+        cfg, r, t)
+
+
+def _hetero_diurnal(cfg, r, t, w, seed):
+    return compile_scenario(
+        compose(heterogeneous_capacity(r, seed=seed),
+                diurnal(t, r, w, period_s=max(600.0, t * w / 3),
+                        phase_spread=0.5)),
+        cfg, r, t)
+
+
+SCENARIOS: dict[str, Callable[..., ScenarioBatch]] = {
+    "steady": _steady,
+    "paper-burst": _paper_burst,
+    "diurnal": _diurnal,
+    "flash-crowd": _flash,
+    "cascade": _cascade,
+    "hetero-diurnal": _hetero_diurnal,
+}
+
+
+def build_scenario(name: str, cfg: SimConfig, n_cells: int, n_windows: int,
+                   window_s: float = 1.0, seed: int = 0) -> ScenarioBatch:
+    """Look up and materialize a named scenario preset."""
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {sorted(SCENARIOS)}") from None
+    return builder(cfg, n_cells, n_windows, window_s, seed)

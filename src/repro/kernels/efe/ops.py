@@ -38,7 +38,7 @@ def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
 def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
               c_log: jnp.ndarray, beliefs: jnp.ndarray,
               cfg: generative.AifConfig, *,
-              use_pallas: bool = True, interpret: bool = True,
+              use_pallas: bool = True, interpret: bool | None = None,
               block_r: int = 8) -> jnp.ndarray:
     """G (R, A) for a fleet of routers.
 
@@ -47,9 +47,14 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
       b_counts: (R, A, S, S) transition pseudo-counts.
       c_log:    (R, M, MAX_BINS) current log-preferences.
       beliefs:  (R, S) posteriors.
+      interpret: None (default) auto-detects — compiled kernel on TPU,
+        interpret-mode emulation elsewhere (Pallas does not lower to CPU).
     """
     nb, na, logc, amb, cost = _normalized_inputs(a_counts, b_counts, c_log,
                                                  beliefs, cfg)
+    if interpret is None:
+        from repro.kernels.attention.ops import on_tpu
+        interpret = not on_tpu()
     if use_pallas:
         r = beliefs.shape[0]
         br = block_r

@@ -7,7 +7,52 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings  # noqa: E402
+try:
+    from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ImportError:
+    # hypothesis is an optional dev dependency: without it the property tests
+    # must *skip* (with a reason), not kill collection.  A stub module keeps
+    # `from hypothesis import given, strategies as st` importable; `given`
+    # marks the test as skipped and swallows the strategy arguments.
+    import types
+
+    import pytest
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed (optional "
+                                    "dev dependency; pip install -e .[dev])")
+
+    def _given(*_args, **_kwargs):
+        def decorate(fn):
+            def skipped():   # drop the strategy-driven arguments
+                pass
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return _SKIP(skipped)
+        return decorate
+
+    class _Anything:
+        """Stands in for any strategy constructor / combinator.
+
+        Decorator usage (e.g. ``@settings(deadline=None)``) must pass the
+        test function through unchanged — returning ``self`` would silently
+        swallow the test instead of letting it skip.
+        """
+
+        def __call__(self, *args, **kwargs):
+            if len(args) == 1 and not kwargs and callable(args[0]):
+                return args[0]
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    hypothesis = types.ModuleType("hypothesis")
+    hypothesis.given = _given
+    hypothesis.strategies = _Anything()
+    hypothesis.settings = _Anything()
+    hypothesis.__stub__ = True
+    sys.modules["hypothesis"] = hypothesis
+    sys.modules["hypothesis.strategies"] = hypothesis.strategies

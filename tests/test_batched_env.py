@@ -1,0 +1,160 @@
+"""Batched fluid engine: invariants, scenarios, and parity with the
+event-driven simulator under static routing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import CapacityRouter, UniformRouter
+from repro.envsim import SimConfig, run_experiment
+from repro.envsim import batched, scenarios
+
+
+def _static_run(cfg, weights, r=8, t=300, scenario="paper-burst", seed=0):
+    sc = scenarios.build_scenario(scenario, cfg, r, t)
+    params = batched.params_from_config(cfg, r, sc.capacity_scale)
+    final, trace = batched.run_fluid(
+        params, jnp.asarray(sc.arrival_rate), jnp.asarray(sc.hazard_scale),
+        jnp.asarray(weights, jnp.float32), jax.random.key(seed))
+    return params, final, trace
+
+
+# ------------------------------------------------------------------ invariants
+def test_mass_conservation():
+    cfg = SimConfig()
+    _, final, _ = _static_run(cfg, UniformRouter().weights, r=4, t=200)
+    total_err = (np.asarray(final.err_timeout) + np.asarray(final.err_overflow)
+                 + np.asarray(final.err_refused)
+                 + np.asarray(final.err_restart))
+    in_system = np.asarray(final.backlog).sum(-1)
+    lhs = np.asarray(final.n_requests)
+    rhs = np.asarray(final.n_success) + total_err + in_system
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_determinism_same_key():
+    cfg = SimConfig()
+    _, f1, _ = _static_run(cfg, UniformRouter().weights, r=4, t=120, seed=3)
+    _, f2, _ = _static_run(cfg, UniformRouter().weights, r=4, t=120, seed=3)
+    np.testing.assert_array_equal(np.asarray(f1.n_success),
+                                  np.asarray(f2.n_success))
+    np.testing.assert_array_equal(np.asarray(f1.n_restarts),
+                                  np.asarray(f2.n_restarts))
+
+
+def test_instability_off_removes_restarts():
+    cfg = dataclasses.replace(SimConfig(), instability=False)
+    _, final, _ = _static_run(cfg, UniformRouter().weights, r=4, t=300)
+    assert np.asarray(final.n_restarts).sum() == 0
+    assert np.asarray(final.err_restart).sum() == 0
+    assert np.asarray(final.err_refused).sum() == 0
+
+
+def test_capacity_weights_beat_uniform():
+    cfg = SimConfig()
+    _, f_uni, _ = _static_run(cfg, UniformRouter().weights, r=8, t=400)
+    _, f_cap, _ = _static_run(cfg, CapacityRouter().weights, r=8, t=400)
+    uni = np.asarray(f_uni.n_success) / np.asarray(f_uni.n_requests)
+    cap = np.asarray(f_cap.n_success) / np.asarray(f_cap.n_requests)
+    assert cap.mean() > uni.mean()
+
+
+def test_cells_are_independent():
+    """Per-cell weights: cell 0 overloads the light tier, cell 1 routes by
+    capacity — outcomes must diverge inside one batched rollout."""
+    cfg = SimConfig()
+    sc = scenarios.build_scenario("steady", cfg, 2, 300)
+    params = batched.params_from_config(cfg, 2, sc.capacity_scale)
+    w = jnp.asarray([[1.0, 0.0, 0.0], [0.15, 0.23, 0.62]], jnp.float32)
+    final, _ = batched.run_fluid(params, jnp.asarray(sc.arrival_rate),
+                                 jnp.asarray(sc.hazard_scale), w,
+                                 jax.random.key(0))
+    succ = np.asarray(final.n_success) / np.asarray(final.n_requests)
+    assert succ[1] > succ[0] + 0.2
+
+
+# --------------------------------------------------------------------- parity
+@pytest.mark.slow
+def test_parity_with_event_simulator_static_router():
+    """Steady-state parity under static routing: the fluid engine's success
+    rate must sit within 5 pp of the event-driven simulator, and P95 in the
+    same latency regime (acceptance criterion of the fleet engine)."""
+    cfg = SimConfig()
+    t = 600
+    for router in (UniformRouter(), CapacityRouter()):
+        ev = [run_experiment(type(router)(), cfg, float(t), seed=s)
+              for s in range(3)]
+        ev_succ = np.mean([e.success_rate for e in ev])
+        ev_p95 = np.mean([e.p95_ms for e in ev])
+        _, final, trace = _static_run(cfg, router.weights, r=16, t=t)
+        res = batched.summarize(final, trace)
+        fl_succ = res.success_rate.mean()
+        fl_p95 = res.p95_ms.mean()
+        assert abs(fl_succ - ev_succ) < 0.05, (
+            f"{router.name}: fluid {fl_succ:.3f} vs event {ev_succ:.3f}")
+        # P95 within the same regime (fluid averages out per-request noise)
+        assert fl_p95 < max(2.0 * ev_p95, ev_p95 + 1500.0)
+        assert fl_p95 > 0.35 * ev_p95
+
+
+# ------------------------------------------------------------------ scenarios
+def test_scenario_registry_shapes():
+    cfg = SimConfig()
+    r, t = 3, 50
+    for name in scenarios.SCENARIOS:
+        sc = scenarios.build_scenario(name, cfg, r, t)
+        assert sc.arrival_rate.shape == (t, r), name
+        assert sc.hazard_scale.shape == (t, r, 3), name
+        assert sc.capacity_scale.shape == (r, 3), name
+        assert np.all(sc.arrival_rate >= 0), name
+    with pytest.raises(KeyError):
+        scenarios.build_scenario("nope", cfg, r, t)
+
+
+def test_flash_crowd_spikes_load():
+    cfg = SimConfig()
+    p = scenarios.flash_crowd(100, 2, start_s=40.0, duration_s=20.0,
+                              magnitude=3.0)
+    sc = scenarios.compile_scenario(p, cfg, 2, 100)
+    assert sc.arrival_rate[:40].max() == pytest.approx(cfg.rps)
+    assert sc.arrival_rate[45].max() == pytest.approx(3.0 * cfg.rps)
+
+
+def test_cascading_restarts_force_downtime():
+    cfg = SimConfig()
+    r, t = 4, 120
+    p = scenarios.compose(
+        scenarios.cascading_restarts(t, r, start_s=20.0, wave_interval_s=10.0))
+    sc = scenarios.compile_scenario(p, cfg, r, t)
+    params = batched.params_from_config(cfg, r, sc.capacity_scale)
+    final, trace = batched.run_fluid(
+        params, jnp.asarray(sc.arrival_rate), jnp.asarray(sc.hazard_scale),
+        jnp.asarray(UniformRouter().weights, jnp.float32), jax.random.key(0))
+    restarts = np.asarray(final.n_restarts)
+    # every cell's light tier restarted (hazard boost makes it near-certain)
+    assert np.all(restarts[:, 0] >= 1)
+    # the wave is staggered: cells restart at different windows
+    light_restarts = np.asarray(trace.restarted)[:, :, 0]   # (T, R)
+    first = light_restarts.argmax(axis=0)
+    assert len(set(first.tolist())) > 1
+
+
+def test_heterogeneous_capacity_varies_cells():
+    p = scenarios.heterogeneous_capacity(8, spread=0.4, seed=1)
+    assert p.capacity is not None
+    assert p.capacity.std() > 0.1
+    cfg = SimConfig()
+    sc = scenarios.compile_scenario(p, cfg, 8, 10)
+    params = batched.params_from_config(cfg, 8, sc.capacity_scale)
+    assert not np.allclose(np.asarray(params.servers[0]),
+                           np.asarray(params.servers[1]))
+
+
+def test_compose_multiplies():
+    a = scenarios.diurnal(60, 2, amplitude=0.5)
+    b = scenarios.flash_crowd(60, 2, start_s=10.0, duration_s=5.0,
+                              magnitude=2.0)
+    c = scenarios.compose(a, b)
+    np.testing.assert_allclose(c.rate, a.rate * b.rate)

@@ -144,7 +144,7 @@ def test_mini_multidevice_dryrun_subprocess():
         print("MINI-DRYRUN-OK")
     """)
     out = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, timeout=300,
+                         capture_output=True, text=True, timeout=900,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root"},
                          cwd="/root/repo")
