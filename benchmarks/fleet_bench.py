@@ -13,7 +13,9 @@ loop):
 
 Reports compile time and steady-state throughput per configuration as CSV on
 stdout; ``--json out.json`` additionally writes the rows for the CI benchmark
-artifact trajectory.
+artifact trajectory plus a ``BENCH_fleet.json`` summary at the repo root
+(schema ``{name, config, cell_windows_per_s, wall_s}``) so the perf
+trajectory accumulates across PRs.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--json PATH]
 """
@@ -21,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import jax
@@ -111,6 +114,19 @@ def _print_row(row: dict) -> None:
           f"{row['cell_windows_per_s']}cw/s", flush=True)
 
 
+def _bench_summary(rows: list[dict]) -> dict:
+    """Repo-root BENCH_fleet.json row: the acceptance workload headline."""
+    env_rows = [r for r in rows if r["workload"] == "env"]
+    head = max(env_rows, key=lambda r: r["r"] * r["t"]) if env_rows else rows[-1]
+    return {
+        "name": "fleet_bench",
+        "config": {k: head[k] for k in ("workload", "r", "t")
+                   if k in head} | {"device": str(jax.devices()[0])},
+        "cell_windows_per_s": head["cell_windows_per_s"],
+        "wall_s": head["run_s"],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -127,6 +143,11 @@ def main() -> None:
                        "device": str(jax.devices()[0]),
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
+        bench_path = pathlib.Path(__file__).resolve().parent.parent / (
+            "BENCH_fleet.json")
+        with open(bench_path, "w") as f:
+            json.dump(_bench_summary(rows), f, indent=2)
+        print(f"wrote {bench_path}")
 
 
 if __name__ == "__main__":

@@ -36,12 +36,13 @@ def _time(fn, *args, iters=5):
 
 def bench_efe(quick: bool = False) -> tuple[str, float, str]:
     cfg = AifConfig()
+    topo = cfg.topology
     r = 8 if quick else 64
     key = jax.random.key(0)
-    S, A = spaces.N_STATES, policies.N_ACTIONS
-    M, NB = spaces.N_MODALITIES, spaces.MAX_BINS
+    S, A = topo.n_states, policies.n_actions(topo)
+    M, NB = topo.n_modalities, topo.max_bins
     a_counts = (jax.random.uniform(key, (r, M, NB, S)) + 0.1) * \
-        spaces.bins_mask()[None, :, :, None]
+        spaces.bins_mask(topo)[None, :, :, None]
     b_counts = jax.random.uniform(jax.random.fold_in(key, 1),
                                   (r, A, S, S)) + 0.01
     c_log = jnp.tile(generative.nominal_c_log(cfg)[None], (r, 1, 1))

@@ -5,8 +5,11 @@ batched fluid engine — agents and environment advance together inside one
 jitted ``lax.scan`` — and compares against the static capacity-aware router
 on the same schedules.  ~30 s wall on CPU, most of it XLA compilation.
 
-    PYTHONPATH=src python examples/fleet_quickstart.py
+    PYTHONPATH=src python examples/fleet_quickstart.py [--quick]
+
+``--quick`` runs a smaller fleet / shorter horizon (CI smoke).
 """
+import argparse
 import time
 
 import jax
@@ -18,7 +21,11 @@ from repro.envsim import SimConfig, batched, scenarios
 
 
 def main():
-    r, t = 8, 420
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet / short horizon for CI smoke runs")
+    args = ap.parse_args()
+    r, t = (4, 120) if args.quick else (8, 420)
     cfg = AifConfig()
     scfg = SimConfig()
     print(f"fleet of {r} AIF routers x {t} control windows, "
@@ -51,8 +58,8 @@ def main():
           f"P95 {res.p95_ms.mean():.0f} ms   [{wall:.1f}s wall, "
           f"{r * t / wall:.0f} cell-windows/s incl. compile]")
 
-    tbl = np.asarray(policies.policy_table())
-    weights = tbl[np.asarray(trace.actions)]          # (T, R, 3)
+    tbl = policies.generate_policy_table(cfg.topology)
+    weights = tbl[np.asarray(trace.actions)]          # (T, R, K)
     for lo, hi in ((0, t // 3), (t // 3, 2 * t // 3), (2 * t // 3, t)):
         w = weights[lo:hi].mean((0, 1))
         print(f"  windows {lo:3d}..{hi:3d}: fleet-mean weights "

@@ -3,41 +3,50 @@
 Runs the paper's router for 10 simulated minutes against the 3-tier
 continuum and prints what it learned.  ~30 s wall on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--quick]
+
+``--quick`` runs a 2-minute horizon (CI smoke).
 """
+import argparse
 import collections
 
 import numpy as np
 
-from repro.core import policies
+from repro.core import default_topology, policies
 from repro.envsim import AifRouter, SimConfig, run_experiment
 from repro.baselines import UniformRouter
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short horizon for CI smoke runs")
+    args = ap.parse_args()
+    duration = 120 if args.quick else 600
     cfg = SimConfig()
     print(f"testbed: capacity {cfg.capacity_rps:.0f} RPS "
           f"(weights-if-you-knew {np.round(cfg.capacity_weights(), 2)}), "
           f"offered {cfg.rps:.0f} RPS bursty")
 
     print("\n-- uniform baseline (the paper's comparison) --")
-    uni = run_experiment(UniformRouter(), cfg, 600, seed=0)
+    uni = run_experiment(UniformRouter(), cfg, duration, seed=0)
     print(f"success {100*uni.success_rate:.1f}%  P50 {uni.p50_ms:.0f} ms  "
           f"P95 {uni.p95_ms:.0f} ms")
 
     print("\n-- AIF-Router (zero-shot, learns online) --")
     router = AifRouter(seed=0)
-    res = run_experiment(router, cfg, 600, seed=0)
+    res = run_experiment(router, cfg, duration, seed=0)
     print(f"success {100*res.success_rate:.1f}%  P50 {res.p50_ms:.0f} ms  "
           f"P95 {res.p95_ms:.0f} ms")
 
     acts = res.action_trace
-    tbl = np.asarray(policies.policy_table())
+    tbl = policies.generate_policy_table(default_topology())
+    seg_len = max(duration // 3, 1)
     for q in range(3):
-        seg = acts[q * 200:(q + 1) * 200]
+        seg = acts[q * seg_len:(q + 1) * seg_len]
         w = tbl[seg].mean(0)
         top = collections.Counter(seg.tolist()).most_common(3)
-        print(f"  t={q*200:4d}s..{(q+1)*200}s  mean weights L/M/H "
+        print(f"  t={q*seg_len:4d}s..{(q+1)*seg_len}s  mean weights L/M/H "
               f"{np.round(w, 2)}  top policies {top}")
     print(f"  tier share of successes L/M/H: "
           f"{np.round(res.tier_share_of_success(), 3)}")

@@ -2,9 +2,9 @@
 
 These are the "lightweight RL" alternatives the related-work section
 discusses: faster to converge than deep RL but needing explicit reward
-engineering.  Arms = the same 20 discrete routing policies as AIF-Router, so
-the comparison isolates the *decision rule* (EFE vs. bandit) rather than the
-action space.
+engineering.  Arms = the same generated routing-policy set as AIF-Router
+(20 policies for the paper topology), so the comparison isolates the
+*decision rule* (EFE vs. bandit) rather than the action space.
 
 Reward: ``r = success_rate − λ · normalized_p95`` per control window,
 attributed to the arm that was active — exactly the hand-crafted reward
@@ -15,17 +15,20 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import policies
+from repro.core.topology import Topology, default_topology
 
 
 class ThompsonRouter:
-    """Gaussian Thompson sampling over the 20 discrete policies."""
+    """Gaussian Thompson sampling over the topology's discrete policies."""
 
     name = "thompson"
 
     def __init__(self, seed: int = 0, latency_scale_s: float = 5.0,
-                 latency_weight: float = 0.5, obs_noise: float = 0.25):
+                 latency_weight: float = 0.5, obs_noise: float = 0.25,
+                 topology: Topology | None = None):
         self.rng = np.random.default_rng(seed)
-        self.table = np.asarray(policies.policy_table())
+        self.table = policies.generate_policy_table(
+            topology or default_topology())
         n = self.table.shape[0]
         self.mu = np.zeros(n)
         self.var = np.ones(n)           # prior N(0, 1) per arm
@@ -52,13 +55,15 @@ class ThompsonRouter:
 
 
 class UcbRouter:
-    """UCB1 over the 20 discrete policies."""
+    """UCB1 over the topology's discrete policies."""
 
     name = "ucb"
 
     def __init__(self, c: float = 1.0, latency_scale_s: float = 5.0,
-                 latency_weight: float = 0.5):
-        self.table = np.asarray(policies.policy_table())
+                 latency_weight: float = 0.5,
+                 topology: Topology | None = None):
+        self.table = policies.generate_policy_table(
+            topology or default_topology())
         n = self.table.shape[0]
         self.counts = np.zeros(n)
         self.sums = np.zeros(n)

@@ -14,14 +14,21 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import policies
+
 
 class UniformRouter:
-    """Fixed uniform weights — the paper's baseline strategy."""
+    """Fixed uniform weights — the paper's baseline strategy.
+
+    Defaults to the paper's 3-tier split (0.33, 0.33, 0.34); for deeper
+    topologies pass ``n_tiers`` (two-decimal rounding, remainder on the
+    heaviest tier, matching the generated balanced policy).
+    """
 
     name = "uniform"
 
-    def __init__(self):
-        self.weights = np.asarray([0.33, 0.33, 0.34])
+    def __init__(self, n_tiers: int = 3):
+        self.weights = policies.balanced_weights(n_tiers)
 
     def __call__(self, snapshot) -> np.ndarray:
         return self.weights

@@ -1,36 +1,47 @@
 """AIF-Router core: the paper's Active Inference routing engine.
 
 Public API:
-  AifConfig, GenerativeModel     — repro.core.generative
+  Topology, PolicySpec, presets   — repro.core.topology
+  AifConfig, GenerativeModel      — repro.core.generative
   AgentState, init_agent_state,
-  fast_step, slow_step, tick     — repro.core.agent
-  expected_free_energy           — repro.core.efe
-  update_belief                  — repro.core.belief
-  policy_table, routing_weights  — repro.core.policies
-  DiscretizationConfig           — repro.core.spaces
-  init_fleet_state, fleet_tick   — repro.core.fleet
+  fast_step, slow_step, tick      — repro.core.agent
+  expected_free_energy            — repro.core.efe
+  update_belief                   — repro.core.belief
+  policy_table, routing_weights   — repro.core.policies (topology-generated)
+  DiscretizationConfig            — repro.core.spaces
+  init_fleet_state, fleet_tick,
+  fleet_rollout, FleetGroup,
+  hetero_fleet_rollout            — repro.core.fleet
+
+Every shape (tier count K, |S|, action count A, modalities/bins) derives
+from a :class:`~repro.core.topology.Topology`; ``default_topology()`` is the
+paper's 3-tier testbed.
 """
 from repro.core.agent import (AgentState, StepInfo, fast_step,
                               init_agent_state, slow_step, tick)
 from repro.core.belief import update_belief
 from repro.core.efe import EfeBreakdown, expected_free_energy, select_action
-from repro.core.fleet import (FleetTrace, fleet_rollout, fleet_tick,
+from repro.core.fleet import (FleetGroup, FleetTrace, fleet_rollout,
+                              fleet_tick, hetero_fleet_rollout,
                               init_fleet_state)
 from repro.core.generative import (AifConfig, GenerativeModel,
                                    init_generative_model)
 from repro.core.learning import ReplayBuffer, init_replay, slow_update
-from repro.core.policies import (BALANCED_ACTION, N_ACTIONS, policy_table,
-                                 routing_weights)
-from repro.core.spaces import (MODALITIES, N_MODALITIES, N_STATES, N_TIERS,
-                               DiscretizationConfig, discretize_observation)
+from repro.core.policies import (BALANCED_ACTION, generate_policy_table,
+                                 n_actions, policy_table, routing_weights)
+from repro.core.spaces import DiscretizationConfig, discretize_observation
+from repro.core.topology import (TOPOLOGIES, PolicySpec, Topology,
+                                 default_topology, five_tier_topology,
+                                 get_topology)
 
 __all__ = [
     "AgentState", "StepInfo", "fast_step", "init_agent_state", "slow_step",
     "tick", "update_belief", "EfeBreakdown", "expected_free_energy",
-    "select_action", "FleetTrace", "fleet_rollout", "fleet_tick",
-    "init_fleet_state", "AifConfig",
+    "select_action", "FleetGroup", "FleetTrace", "fleet_rollout",
+    "fleet_tick", "hetero_fleet_rollout", "init_fleet_state", "AifConfig",
     "GenerativeModel", "init_generative_model", "ReplayBuffer", "init_replay",
-    "slow_update", "BALANCED_ACTION", "N_ACTIONS", "policy_table",
-    "routing_weights", "MODALITIES", "N_MODALITIES", "N_STATES", "N_TIERS",
-    "DiscretizationConfig", "discretize_observation",
+    "slow_update", "BALANCED_ACTION", "generate_policy_table", "n_actions",
+    "policy_table", "routing_weights", "DiscretizationConfig",
+    "discretize_observation", "TOPOLOGIES", "PolicySpec", "Topology",
+    "default_topology", "five_tier_topology", "get_topology",
 ]

@@ -27,7 +27,7 @@ from repro.core import generative, learning, policies, preferences, spaces
 
 class AgentState(NamedTuple):
     model: generative.GenerativeModel
-    belief: jnp.ndarray              # (N_STATES,) current posterior q(s_t)
+    belief: jnp.ndarray              # (S,) current posterior q(s_t)
     replay: learning.ReplayBuffer
     prev_action: jnp.ndarray         # () int32 — action currently applied
     dt_since_change: jnp.ndarray     # () float32 — seconds since action change
@@ -40,7 +40,7 @@ class StepInfo(NamedTuple):
     """Diagnostics emitted by each fast step (all per-step scalars/vectors)."""
 
     action: jnp.ndarray
-    routing_weights: jnp.ndarray     # (3,) applied (w_L, w_M, w_H)
+    routing_weights: jnp.ndarray     # (K,) applied weights, lightest first
     efe: efe_mod.EfeBreakdown
     belief_entropy: jnp.ndarray
     unstable: jnp.ndarray
@@ -52,7 +52,7 @@ def init_agent_state(cfg: generative.AifConfig) -> AgentState:
     return AgentState(
         model=model,
         belief=model.d_prior,
-        replay=learning.init_replay(cfg.replay_capacity),
+        replay=learning.init_replay(cfg.replay_capacity, cfg.topology),
         prev_action=jnp.asarray(policies.BALANCED_ACTION, jnp.int32),
         dt_since_change=jnp.zeros((), jnp.float32),
         error_ema=jnp.zeros((), jnp.float32),
@@ -82,7 +82,8 @@ def pre_action(state: AgentState,
 
     q_prev = state.belief
     q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
-                                      obs_bins, util_bins, util_valid)
+                                      obs_bins, cfg.topology, util_bins,
+                                      util_valid)
 
     replay = learning.push_transition(
         state.replay, q_prev, q_next, obs_bins, state.prev_action,
@@ -138,13 +139,14 @@ def fast_step(state: AgentState,
 
     Args:
       state: current agent state.
-      obs_bins: (N_MODALITIES,) int32 discretized observation o_t.
+      obs_bins: (M,) int32 discretized observation o_t.
       raw_error_rate: () float — undiscretized error rate for the EMA that
         drives adaptive preferences (the discretized bin is too coarse).
       key: PRNG key for action sampling.
-      cfg: static hyper-parameters.
-      util_bins: optional (3,) int32 utilization scrape in (u_H, u_M, u_L)
-        order — the paper's 10-second resource-metric query (§3).
+      cfg: static hyper-parameters (carries the topology).
+      util_bins: optional (K,) int32 utilization scrape in state-factor
+        order (heaviest tier first) — the paper's 10-second resource-metric
+        query (§3).
       util_valid: gate for util_bins (True on scrape ticks only).
     """
     model, q_next, replay, error_ema, unstable = pre_action(
@@ -157,7 +159,7 @@ def fast_step(state: AgentState,
 
     info = StepInfo(
         action=action,
-        routing_weights=policies.routing_weights(action),
+        routing_weights=policies.routing_weights(action, cfg.topology),
         efe=bd,
         belief_entropy=belief_mod.belief_entropy(q_next),
         unstable=unstable,

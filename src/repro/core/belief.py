@@ -1,19 +1,21 @@
 """Fast-loop Bayesian state inference (paper §4.4, Eq. 2).
 
-Every second the router updates its belief over the 243 hidden states:
+Every second the router updates its belief over the topology's hidden
+states (243 for the paper's default):
 
     q(s_t | o_{1:t})  ∝  p(o_t | s_t) · p(s_t | o_{1:t-1})
     p(s_t | o_{1:t-1}) = B_{a_{t-1}} · q(s_{t-1})
 
-The likelihood factorizes over the four observation modalities.  Everything
+The likelihood factorizes over the observation modalities.  Everything
 is a plain function of arrays so it jits, vmaps (fleet mode) and differentiates
-cleanly.
+cleanly; shapes derive from the :class:`~repro.core.topology.Topology`.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core import generative, spaces
+from repro.core.topology import Topology
 
 
 def predict_prior(b_counts: jnp.ndarray, belief: jnp.ndarray,
@@ -24,39 +26,43 @@ def predict_prior(b_counts: jnp.ndarray, belief: jnp.ndarray,
     return prior / jnp.maximum(jnp.sum(prior), 1e-30)
 
 
-def log_likelihood(a_counts: jnp.ndarray, obs_bins: jnp.ndarray) -> jnp.ndarray:
+def log_likelihood(a_counts: jnp.ndarray, obs_bins: jnp.ndarray,
+                   topo: Topology) -> jnp.ndarray:
     """``log p(o_t | s)`` for every state, summed over modalities.
 
     Args:
-      a_counts: (M, MAX_BINS, S) observation-model pseudo-counts.
+      a_counts: (M, max_bins, S) observation-model pseudo-counts.
       obs_bins: (M,) int observation bin per modality.
+      topo: the topology (bin mask / shapes).
 
     Returns:
       (S,) log-likelihood vector.
     """
-    a = generative.normalize_a(a_counts)                   # (M, MAX_BINS, S)
-    onehot = spaces.one_hot_observation(obs_bins)          # (M, MAX_BINS)
+    a = generative.normalize_a(a_counts, topo)             # (M, max_bins, S)
+    onehot = spaces.one_hot_observation(obs_bins, topo.max_bins)  # (M, B)
     per_modality = jnp.einsum("mb,mbs->ms", onehot, a)     # p(o_m | s)
     return jnp.sum(jnp.log(jnp.maximum(per_modality, 1e-16)), axis=0)
 
 
-def util_log_likelihood(util_bins: jnp.ndarray,
+def util_log_likelihood(util_bins: jnp.ndarray, topo: Topology,
                         eps: float = 0.15) -> jnp.ndarray:
     """Log-likelihood of the 10-second per-tier utilization scrape (paper §3).
 
     The router "queries aggregated resource metrics (per-tier CPU
-    utilization) every 10 seconds to enrich state representation".  The state
-    factors (u_H, u_M, u_L) are directly the discretized utilizations, so the
-    scrape is a noisy direct reading of state factors 2..4:
-    ``p(û = b | s) = 1-eps`` if the factor level matches, else ``eps/2``.
+    utilization) every 10 seconds to enrich state representation".  The
+    per-tier state factors are directly the discretized utilizations, so the
+    scrape is a noisy direct reading of state factors 2..2+K:
+    ``p(û = b | s) = 1-eps`` if the factor level matches, else spread over
+    the other levels.
 
     Args:
-      util_bins: (3,) int32 utilization bins in state-factor order
-        (heavy, medium, light).
+      util_bins: (K,) int32 utilization bins in state-factor order
+        (heaviest tier first).
     """
-    tbl = jnp.asarray(spaces.state_factor_table())        # (S, 5)
-    match = tbl[:, 2:5] == util_bins[None, :]             # (S, 3)
-    p = jnp.where(match, 1.0 - eps, eps / 2.0)
+    k = topo.n_tiers
+    tbl = jnp.asarray(spaces.state_factor_table(topo))    # (S, 2+K)
+    match = tbl[:, 2:2 + k] == util_bins[None, :]         # (S, K)
+    p = jnp.where(match, 1.0 - eps, eps / (topo.n_levels - 1))
     return jnp.sum(jnp.log(p), axis=-1)                   # (S,)
 
 
@@ -64,6 +70,7 @@ def update_belief(model: generative.GenerativeModel,
                   belief: jnp.ndarray,
                   prev_action,
                   obs_bins: jnp.ndarray,
+                  topo: Topology,
                   util_bins: jnp.ndarray | None = None,
                   util_valid=False) -> jnp.ndarray:
     """Posterior ``q(s_t) ∝ p(o_t|s_t) · B_{a_{t-1}} q(s_{t-1})`` (Eq. 2).
@@ -73,11 +80,11 @@ def update_belief(model: generative.GenerativeModel,
     factors; ``util_valid`` gates it jit-safely.
     """
     prior = predict_prior(model.b_counts, belief, prev_action)
-    logp = log_likelihood(model.a_counts, obs_bins) + jnp.log(
+    logp = log_likelihood(model.a_counts, obs_bins, topo) + jnp.log(
         jnp.maximum(prior, 1e-30))
     if util_bins is not None:
         logp = logp + jnp.where(util_valid,
-                                util_log_likelihood(util_bins), 0.0)
+                                util_log_likelihood(util_bins, topo), 0.0)
     logp = logp - jnp.max(logp)
     q = jnp.exp(logp)
     return q / jnp.maximum(jnp.sum(q), 1e-30)

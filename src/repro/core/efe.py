@@ -3,21 +3,21 @@
     G(a) = Risk(a) + Ambiguity(a) + Cost(a)
     p(a) ∝ exp(−β · G(a)),  β = 5.0
 
-For each candidate action the router rolls the belief one step through the
-transition model, predicts the observation distribution per modality, and
-scores it:
+For each candidate action (the topology's generated policy set) the router
+rolls the belief one step through the transition model, predicts the
+observation distribution per modality, and scores it:
 
   Risk(a)      = Σ_m KL( ô_m(a) ‖ σ(C_m) )        — divergence from preferred
                                                      observations (goal term)
   Ambiguity(a) = Σ_m Σ_s ŝ_a(s) · H[A_m(· | s)]    — expected observation
                                                      entropy (exploration term:
                                                      low in well-learned states)
-  Cost(a)      = λ · (log 3 − H(w_a))              — regularizer against
+  Cost(a)      = λ · (log K − H(w_a))              — regularizer against
                                                      extreme routing policies
 
 This module is the pure-jnp oracle; :mod:`repro.kernels.efe` provides the
 fused Pallas TPU kernel for fleet-scale batches of routers and
-``assert_allclose``-matches these functions.
+``assert_allclose``-matches these functions for every topology.
 """
 from __future__ import annotations
 
@@ -27,35 +27,38 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import generative, policies, spaces
+from repro.core.topology import Topology
 
 
 class EfeBreakdown(NamedTuple):
-    g: jnp.ndarray          # (N_ACTIONS,) expected free energy
-    risk: jnp.ndarray       # (N_ACTIONS,)
-    ambiguity: jnp.ndarray  # (N_ACTIONS,)
-    cost: jnp.ndarray       # (N_ACTIONS,)
-    action_probs: jnp.ndarray  # (N_ACTIONS,) softmax(−β G)
+    g: jnp.ndarray          # (A,) expected free energy
+    risk: jnp.ndarray       # (A,)
+    ambiguity: jnp.ndarray  # (A,)
+    cost: jnp.ndarray       # (A,)
+    action_probs: jnp.ndarray  # (A,) softmax(−β G)
 
 
 def predicted_states(b_counts: jnp.ndarray,
                      belief: jnp.ndarray) -> jnp.ndarray:
-    """ŝ_a = B_a · q for every action.  -> (N_ACTIONS, N_STATES)."""
+    """ŝ_a = B_a · q for every action.  -> (A, S)."""
     b = generative.normalize_b(b_counts)                  # (A, S', S)
     pred = jnp.einsum("ats,s->at", b, belief)
     return pred / jnp.maximum(jnp.sum(pred, axis=-1, keepdims=True), 1e-30)
 
 
 def predicted_observations(a_counts: jnp.ndarray,
-                           s_pred: jnp.ndarray) -> jnp.ndarray:
-    """ô_m(a) = A_m · ŝ_a.  -> (N_ACTIONS, N_MODALITIES, MAX_BINS)."""
-    a = generative.normalize_a(a_counts)                  # (M, B, S)
+                           s_pred: jnp.ndarray,
+                           topo: Topology) -> jnp.ndarray:
+    """ô_m(a) = A_m · ŝ_a.  -> (A, M, max_bins)."""
+    a = generative.normalize_a(a_counts, topo)            # (M, B, S)
     return jnp.einsum("mbs,as->amb", a, s_pred)
 
 
-def ambiguity_per_state(a_counts: jnp.ndarray) -> jnp.ndarray:
-    """Σ_m H[A_m(· | s)] for every state.  -> (N_STATES,)."""
-    a = generative.normalize_a(a_counts)                  # (M, B, S)
-    mask = spaces.bins_mask()[:, :, None]
+def ambiguity_per_state(a_counts: jnp.ndarray,
+                        topo: Topology) -> jnp.ndarray:
+    """Σ_m H[A_m(· | s)] for every state.  -> (S,)."""
+    a = generative.normalize_a(a_counts, topo)            # (M, B, S)
+    mask = spaces.bins_mask(topo)[:, :, None]
     h = -jnp.sum(jnp.where(mask > 0, a * jnp.log(jnp.maximum(a, 1e-16)), 0.0),
                  axis=1)                                  # (M, S)
     return jnp.sum(h, axis=0)
@@ -64,23 +67,24 @@ def ambiguity_per_state(a_counts: jnp.ndarray) -> jnp.ndarray:
 def expected_free_energy(model: generative.GenerativeModel,
                          belief: jnp.ndarray,
                          cfg: generative.AifConfig) -> EfeBreakdown:
-    """G(a) for all 20 candidate actions (Eq. 1)."""
-    s_pred = predicted_states(model.b_counts, belief)        # (A, S)
-    o_pred = predicted_observations(model.a_counts, s_pred)  # (A, M, B)
+    """G(a) for all candidate actions (Eq. 1)."""
+    topo = cfg.topology
+    s_pred = predicted_states(model.b_counts, belief)              # (A, S)
+    o_pred = predicted_observations(model.a_counts, s_pred, topo)  # (A, M, B)
 
     # Risk: KL(ô ‖ σ(C)) per modality, summed.
-    c = generative.c_probs(model.c_log)                      # (M, B)
-    mask = spaces.bins_mask()                                # (M, B)
+    c = generative.c_probs(model.c_log, topo)                # (M, B)
+    mask = spaces.bins_mask(topo)                            # (M, B)
     log_ratio = jnp.log(jnp.maximum(o_pred, 1e-16)) - jnp.log(
         jnp.maximum(c, 1e-16))[None]
     risk = jnp.sum(jnp.where(mask[None] > 0, o_pred * log_ratio, 0.0),
                    axis=(1, 2))                              # (A,)
 
     # Ambiguity: expected conditional observation entropy under ŝ_a.
-    amb_s = ambiguity_per_state(model.a_counts)              # (S,)
+    amb_s = ambiguity_per_state(model.a_counts, topo)        # (S,)
     ambiguity = s_pred @ amb_s                               # (A,)
 
-    cost = cfg.cost_weight * policies.policy_concentration_cost()
+    cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
 
     g = risk + ambiguity + cost
     probs = jax.nn.softmax(-cfg.beta * g)

@@ -86,10 +86,10 @@ def _fused_fast_step(state: agent_mod.AgentState,
         state, model, q_next, replay, error_ema, unstable, sampled, cfg)
 
     zeros = jnp.zeros_like(g)
-    cost = cfg.cost_weight * policies.policy_concentration_cost()
+    cost = cfg.cost_weight * policies.policy_concentration_cost(cfg.topology)
     info = agent_mod.StepInfo(
         action=action,
-        routing_weights=policies.routing_weights(action),
+        routing_weights=policies.routing_weights(action, cfg.topology),
         efe=efe_mod.EfeBreakdown(
             g=g, risk=zeros, ambiguity=zeros,
             cost=jnp.broadcast_to(cost, g.shape), action_probs=probs),
@@ -124,10 +124,11 @@ def fleet_tick(state: agent_mod.AgentState,
 
     Args:
       state: batched AgentState (leading dim R on every leaf).
-      obs_bins: (R, N_MODALITIES) int32.
+      obs_bins: (R, M) int32.
       raw_error_rate: (R,) float32.
       keys: (R,) typed PRNG keys (one per router).
-      util_bins: optional (R, 3) int32 utilization scrape (u_H, u_M, u_L).
+      util_bins: optional (R, K) int32 utilization scrape in state-factor
+        order (heaviest tier first).
       util_valid: scalar gate for util_bins (True on scrape ticks; traced ok).
       fused: route the EFE evaluation through the fused fleet kernel
         (:func:`repro.kernels.efe.ops.fleet_efe`) instead of vmapping the
@@ -166,8 +167,8 @@ class FleetTrace(NamedTuple):
     """Per-window traces of a fleet rollout (leading time axis T)."""
 
     actions: jnp.ndarray          # (T, R) int32 selected policies
-    routing_weights: jnp.ndarray  # (T, R, 3) applied weights
-    raw_obs: jnp.ndarray          # (T, R, 4) metrics the routers observed
+    routing_weights: jnp.ndarray  # (T, R, K) applied weights
+    raw_obs: jnp.ndarray          # (T, R, M) metrics the routers observed
     unstable: jnp.ndarray         # (T, R) adaptive-preference mode flag
     env: Any                      # environment info pytree (engine-specific)
 
@@ -183,7 +184,7 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
                   key: jax.Array,
                   cfg: generative.AifConfig,
                   disc: spaces.DiscretizationConfig | None = None,
-                  util_edges: tuple[float, float] = (0.5, 0.9),
+                  util_edges: tuple[float, ...] | None = None,
                   util_period: int = 10,
                   *,
                   fused: bool = False,
@@ -202,17 +203,34 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
       env_state: environment state pytree with leading cell dim R (e.g.
         :class:`repro.envsim.batched.FluidState`).
       env_step: ``(env_state, weights, t_idx, key) -> (env_state, info)``
-        where ``info.raw_obs`` is (R, 4) raw metrics and
-        ``info.tier_utilization`` is (R, 3) in (L, M, H) order — see
-        :func:`repro.envsim.batched.make_env_step`.
+        where ``info.raw_obs`` is (R, M) raw metrics and
+        ``info.tier_utilization`` is (R, K) in tier order (lightest first) —
+        see :func:`repro.envsim.batched.make_env_step`.
       n_steps: number of control windows T (static).
-      cfg/disc: agent hyper-parameters and observation discretization.
+      cfg/disc: agent hyper-parameters and observation discretization; the
+        disc edge rows and the env's ``raw_obs`` columns must both match the
+        topology's modalities (the fluid engine emits the default four).
+      util_edges: raw-utilization level edges (default: the topology's).
 
     Returns:
       (final agent state, final env state, :class:`FleetTrace`).
     """
+    topo = cfg.topology
     disc = disc or spaces.DiscretizationConfig()
+    if len(disc.modality_edges()) != topo.n_modalities:
+        raise ValueError(
+            f"DiscretizationConfig covers {len(disc.modality_edges())} "
+            f"modalities but the topology declares {topo.n_modalities} "
+            f"({topo.modalities}); pass disc with matching `edges` (and an "
+            f"env_step whose raw_obs has one column per modality)")
     r = agent_state.belief.shape[0]
+    util_edges = topo.util_edges if util_edges is None else tuple(util_edges)
+    if len(util_edges) != topo.n_levels - 1:
+        raise ValueError(
+            f"util_edges needs {topo.n_levels - 1} edges for "
+            f"{topo.n_levels}-level state factors, got {util_edges} "
+            f"(out-of-range bins would make the utilization scrape match "
+            f"no state)")
     edges = jnp.asarray(util_edges, jnp.float32)
 
     def step(carry, t_idx):
@@ -220,7 +238,7 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
         k, k_env, k_agents = jax.random.split(k, 3)
         keys = jax.random.split(k_agents, r)
         obs_bins = spaces.discretize_observation(raw_obs, disc)
-        util_hml = tier_util[:, ::-1]                  # (L,M,H) -> (H,M,L)
+        util_hml = tier_util[:, ::-1]      # tier order -> state-factor order
         util_bins = jnp.sum(util_hml[..., None] >= edges, axis=-1
                             ).astype(jnp.int32)
         util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
@@ -235,9 +253,60 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
                         env=win)
         return (ast, est, win.raw_obs, win.tier_utilization, k), ys
 
-    obs0 = jnp.zeros((r, spaces.N_MODALITIES), jnp.float32)
-    util0 = jnp.zeros((r, spaces.N_TIERS), jnp.float32)
+    obs0 = jnp.zeros((r, topo.n_modalities), jnp.float32)
+    util0 = jnp.zeros((r, topo.n_tiers), jnp.float32)
     (ast, est, *_), trace = jax.lax.scan(
         step, (agent_state, env_state, obs0, util0, key),
         jnp.arange(n_steps, dtype=jnp.int32))
     return ast, est, trace
+
+
+# ------------------------------------------------------- heterogeneous fleet
+class FleetGroup(NamedTuple):
+    """One topology-homogeneous shard of a heterogeneous fleet.
+
+    Array shapes differ across topologies (|S|, A, K), so cells of different
+    topologies cannot share one batched scan.  A heterogeneous fleet is
+    therefore *statically sharded*: cells are grouped by topology and each
+    group runs its own jitted ``fleet_rollout`` (its own scan / kernel
+    shapes); groups are independent programs that XLA can dispatch
+    concurrently (or pjit onto different mesh shards).
+    """
+
+    name: str
+    cfg: generative.AifConfig
+    agent_state: agent_mod.AgentState    # batched, leading dim R_g
+    env_state: Any
+    env_step: Callable
+    # Per-shard EFE execution path (a 5-tier shard can run the fused kernel
+    # while a 3-tier shard stays on the vmapped reference).
+    fused: bool = False
+    use_pallas: bool = False
+    # Per-shard observation discretization (None = paper defaults); shards
+    # serving different offered loads need different bin edges.
+    disc: spaces.DiscretizationConfig | None = None
+
+
+def hetero_fleet_rollout(groups, n_steps: int, key: jax.Array,
+                         **kwargs) -> dict:
+    """Run a heterogeneous fleet: one :func:`fleet_rollout` per topology group.
+
+    Args:
+      groups: sequence of :class:`FleetGroup` (cells pre-grouped by
+        topology; each carries its own EFE execution path).
+      n_steps: shared number of control windows.
+      key: PRNG key; folded per group so groups stay independent.
+
+    Returns:
+      dict group name -> (final agent state, final env state, FleetTrace).
+    """
+    names = [g.name for g in groups]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate FleetGroup names: {names}")
+    out = {}
+    for i, g in enumerate(groups):
+        out[g.name] = fleet_rollout(
+            g.agent_state, g.env_state, g.env_step, n_steps,
+            jax.random.fold_in(key, i), g.cfg, disc=g.disc,
+            fused=g.fused, use_pallas=g.use_pallas, **kwargs)
+    return out

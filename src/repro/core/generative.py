@@ -1,12 +1,12 @@
 """Generative model of AIF-Router (paper §4.2): A, B, C (+ initial prior D).
 
-Observation model **A** — ``p(o_t | s_t)`` factorized over the four metric
-modalities; per modality an ``(MAX_BINS, N_STATES)`` likelihood matrix (padded
-bins carry zero mass).  Stored as Dirichlet *pseudo-counts*; the normalized
-likelihood is recovered on demand.  Initialized (near-)uniform — "reflecting
-no prior knowledge".
+Observation model **A** — ``p(o_t | s_t)`` factorized over the metric
+modalities; per modality an ``(max_bins, n_states)`` likelihood matrix
+(padded bins carry zero mass).  Stored as Dirichlet *pseudo-counts*; the
+normalized likelihood is recovered on demand.  Initialized (near-)uniform —
+"reflecting no prior knowledge".
 
-Transition model **B** — ``p(s_{t+1} | s_t, a)``; one ``(N_STATES, N_STATES)``
+Transition model **B** — ``p(s_{t+1} | s_t, a)``; one ``(n_states, n_states)``
 column-stochastic matrix per action (``B[a][s', s]``).  Also pseudo-counts.
 Initialized with a weak sticky-identity prior: with no experience the best
 guess is "the system stays roughly where it is", which keeps early belief
@@ -16,6 +16,10 @@ Preference distribution **C** — per-modality log-preferences over observation
 bins.  ``C_latency`` strongly prefers low-latency bins, ``C_error`` strongly
 prefers the low-error bin (−3.0 normally, −11.5 on the high-error bin during
 instability — see :mod:`repro.core.preferences`).
+
+All shapes derive from ``AifConfig.topology``
+(:class:`~repro.core.topology.Topology`); the default reproduces the paper's
+3-tier setup exactly.
 """
 from __future__ import annotations
 
@@ -27,20 +31,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policies, spaces
+from repro.core.topology import Topology, default_topology
 
 
 class GenerativeModel(NamedTuple):
     """Learnable pseudo-count parameters + current preferences (a pytree)."""
 
-    a_counts: jnp.ndarray   # (N_MODALITIES, MAX_BINS, N_STATES) Dirichlet counts
-    b_counts: jnp.ndarray   # (N_ACTIONS, N_STATES, N_STATES) Dirichlet counts
-    c_log: jnp.ndarray      # (N_MODALITIES, MAX_BINS) log-preferences
-    d_prior: jnp.ndarray    # (N_STATES,) initial state prior
+    a_counts: jnp.ndarray   # (M, max_bins, S) Dirichlet counts
+    b_counts: jnp.ndarray   # (A, S, S) Dirichlet counts
+    c_log: jnp.ndarray      # (M, max_bins) log-preferences
+    d_prior: jnp.ndarray    # (S,) initial state prior
 
 
 @dataclasses.dataclass(frozen=True)
 class AifConfig:
-    """Static hyper-parameters (all defaults = paper values)."""
+    """Static hyper-parameters (all defaults = paper values).
+
+    ``topology`` carries every shape (tier count, state/observation layout,
+    generated policy set); it is part of the config so one static jit
+    argument pins the whole program shape.
+    """
+
+    topology: Topology = dataclasses.field(default_factory=default_topology)
 
     # Action selection (paper §4.3)
     beta: float = 5.0                     # softmax inverse temperature
@@ -71,7 +83,8 @@ class AifConfig:
     b_prior_uniform: float = 0.1          # uniform floor on B columns
     b_prior_sticky: float = 1.0           # identity (stay-put) prior on B
 
-    # Preferences (log space; see preferences.py for the adaptive shift)
+    # Preferences (log space, by modality name; see preferences.py for the
+    # adaptive shift).  Modalities without an entry get a flat preference.
     c_latency: tuple[float, float, float] = (0.0, -1.5, -4.0)
     c_rps: tuple[float, float, float] = (-1.0, -0.25, 0.0)
     c_queue: tuple[float, float, float] = (0.0, -1.0, -3.0)
@@ -83,25 +96,46 @@ class AifConfig:
 
     @property
     def n_states(self) -> int:
-        return spaces.N_STATES
+        return self.topology.n_states
 
     @property
     def n_actions(self) -> int:
-        return policies.N_ACTIONS
+        return policies.n_actions(self.topology)
+
+
+def _fit_prefs(prefs: tuple[float, ...], n_bins: int) -> tuple[float, ...]:
+    """Truncate / extend a preference tuple to exactly ``n_bins`` entries.
+
+    A topology may declare more bins than the named defaults cover; the tail
+    extends the last (most extreme) preference rather than falling through
+    to the -30 padding value, which would make a *valid* bin look
+    catastrophically dispreferred.
+    """
+    if not prefs:
+        return tuple(0.0 for _ in range(n_bins))
+    return (prefs + (prefs[-1],) * n_bins)[:n_bins]
+
+
+def _modality_prefs(cfg: AifConfig, name: str,
+                    n_bins: int) -> tuple[float, ...]:
+    """Nominal preference row for one modality (flat for unknown names)."""
+    table = {"latency": cfg.c_latency, "rps": cfg.c_rps,
+             "queue": cfg.c_queue, "error": cfg.c_error_ok}
+    return _fit_prefs(tuple(table.get(name, ())), n_bins)
 
 
 def _nominal_c_rows(cfg: AifConfig) -> np.ndarray:
     """Pure-numpy nominal log-preference table (safe to call under tracing)."""
-    rows = np.full((spaces.N_MODALITIES, spaces.MAX_BINS), -30.0,
-                   dtype=np.float32)
-    for m, prefs in enumerate((cfg.c_latency, cfg.c_rps, cfg.c_queue,
-                               cfg.c_error_ok)):
+    topo = cfg.topology
+    rows = np.full((topo.n_modalities, topo.max_bins), -30.0, dtype=np.float32)
+    for m, name in enumerate(topo.modalities):
+        prefs = _modality_prefs(cfg, name, topo.n_bins[m])
         rows[m, : len(prefs)] = prefs
     return rows
 
 
 def nominal_c_log(cfg: AifConfig) -> jnp.ndarray:
-    """(N_MODALITIES, MAX_BINS) nominal log-preferences, padded bins = -inf-ish.
+    """(M, max_bins) nominal log-preferences, padded bins = -inf-ish.
 
     Padded bins get a large negative value but are additionally masked out of
     every expectation by ``spaces.bins_mask()``; the value never leaks.
@@ -111,25 +145,32 @@ def nominal_c_log(cfg: AifConfig) -> jnp.ndarray:
 
 def unstable_c_log(cfg: AifConfig) -> jnp.ndarray:
     """Log-preferences during instability: deep error avoidance, relaxed lat."""
+    topo = cfg.topology
     rows = _nominal_c_rows(cfg).copy()
-    rows[0, : len(cfg.c_latency)] = (
-        np.asarray(cfg.c_latency, dtype=np.float32) * cfg.latency_relax_factor)
-    rows[3, : len(cfg.c_error_unstable)] = cfg.c_error_unstable
+    for m, name in enumerate(topo.modalities):
+        if name == "latency":
+            prefs = _modality_prefs(cfg, name, topo.n_bins[m])
+            rows[m, : len(prefs)] = (
+                np.asarray(prefs, dtype=np.float32) * cfg.latency_relax_factor)
+        elif name == "error":
+            prefs = _fit_prefs(tuple(cfg.c_error_unstable), topo.n_bins[m])
+            rows[m, : len(prefs)] = prefs
     return jnp.asarray(rows)
 
 
 def init_generative_model(cfg: AifConfig) -> GenerativeModel:
     """Paper-faithful initialization: uniform A, weakly-sticky B, uniform D."""
-    mask = np.asarray(spaces.BINS_MASK)                     # (M, MAX_BINS)
+    topo = cfg.topology
+    s, a_n = topo.n_states, policies.n_actions(topo)
+    mask = spaces.bins_mask_np(topo)                        # (M, max_bins)
     a0 = cfg.a_prior_count * mask[:, :, None] * np.ones(
-        (spaces.N_MODALITIES, spaces.MAX_BINS, spaces.N_STATES),
-        dtype=np.float32)
+        (topo.n_modalities, topo.max_bins, s), dtype=np.float32)
 
-    eye = np.eye(spaces.N_STATES, dtype=np.float32)
-    b0 = (cfg.b_prior_uniform / spaces.N_STATES
-          + cfg.b_prior_sticky * eye)[None].repeat(policies.N_ACTIONS, axis=0)
+    eye = np.eye(s, dtype=np.float32)
+    b0 = (cfg.b_prior_uniform / s
+          + cfg.b_prior_sticky * eye)[None].repeat(a_n, axis=0)
 
-    d0 = np.full((spaces.N_STATES,), 1.0 / spaces.N_STATES, dtype=np.float32)
+    d0 = np.full((s,), 1.0 / s, dtype=np.float32)
 
     return GenerativeModel(
         a_counts=jnp.asarray(a0),
@@ -142,9 +183,9 @@ def init_generative_model(cfg: AifConfig) -> GenerativeModel:
 # ---------------------------------------------------------------------------
 # Normalization helpers (pseudo-counts -> distributions)
 # ---------------------------------------------------------------------------
-def normalize_a(a_counts: jnp.ndarray) -> jnp.ndarray:
+def normalize_a(a_counts: jnp.ndarray, topo: Topology) -> jnp.ndarray:
     """p(o_m = i | s): normalize counts over bins per (modality, state)."""
-    mask = spaces.bins_mask()[:, :, None]
+    mask = spaces.bins_mask(topo)[:, :, None]
     counts = a_counts * mask
     denom = jnp.sum(counts, axis=1, keepdims=True)
     return counts / jnp.maximum(denom, 1e-30)
@@ -156,8 +197,8 @@ def normalize_b(b_counts: jnp.ndarray) -> jnp.ndarray:
     return b_counts / jnp.maximum(denom, 1e-30)
 
 
-def c_probs(c_log: jnp.ndarray) -> jnp.ndarray:
+def c_probs(c_log: jnp.ndarray, topo: Topology) -> jnp.ndarray:
     """Normalized preference distribution sigma(C) per modality (masked)."""
-    mask = spaces.bins_mask()
+    mask = spaces.bins_mask(topo)
     logits = jnp.where(mask > 0, c_log, -jnp.inf)
     return jax.nn.softmax(logits, axis=-1)

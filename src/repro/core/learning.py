@@ -27,23 +27,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import generative, spaces
+from repro.core.topology import Topology
 
 
 class ReplayBuffer(NamedTuple):
     """Fixed-capacity ring buffer of transitions (a pytree of arrays)."""
 
-    q_prev: jnp.ndarray      # (cap, N_STATES) posterior at t
-    q_next: jnp.ndarray      # (cap, N_STATES) posterior at t+1
-    obs_bins: jnp.ndarray    # (cap, N_MODALITIES) int32 observation at t+1
+    q_prev: jnp.ndarray      # (cap, S) posterior at t
+    q_next: jnp.ndarray      # (cap, S) posterior at t+1
+    obs_bins: jnp.ndarray    # (cap, M) int32 observation at t+1
     action: jnp.ndarray      # (cap,) int32 action taken at t
     dt_since_change: jnp.ndarray  # (cap,) float32 seconds since action change
     cursor: jnp.ndarray      # () int32 next write slot
     size: jnp.ndarray        # () int32 number of valid entries
 
 
-def init_replay(capacity: int) -> ReplayBuffer:
-    s = spaces.N_STATES
-    m = spaces.N_MODALITIES
+def init_replay(capacity: int, topo: Topology) -> ReplayBuffer:
+    s = topo.n_states
+    m = topo.n_modalities
     return ReplayBuffer(
         q_prev=jnp.zeros((capacity, s), jnp.float32),
         q_next=jnp.zeros((capacity, s), jnp.float32),
@@ -102,12 +103,13 @@ def update_observation_model(a_counts: jnp.ndarray,
     """Batched ``A[m][o_m, :] += α · q(s)`` (posterior-weighted counts).
 
     Args:
-      a_counts: (M, MAX_BINS, S).
+      a_counts: (M, max_bins, S).
       q_next:   (batch, S) posteriors.
       obs_bins: (batch, M) observed bins.
       weight:   (batch,) 0/1 validity weights.
     """
-    onehot = spaces.one_hot_observation(obs_bins)          # (batch, M, B)
+    onehot = spaces.one_hot_observation(
+        obs_bins, cfg.topology.max_bins)                   # (batch, M, B)
     upd = jnp.einsum("nmb,ns->mbs", onehot * weight[:, None, None], q_next)
     return a_counts + cfg.alpha_a * upd
 

@@ -1,92 +1,95 @@
-"""State / action / observation space design (paper §4.1).
+"""State / action / observation space design (paper §4.1), topology-generic.
 
 State space
 -----------
-``s_t = (ell, r, u_H, u_M, u_L) in {0,1,2}^5`` — latency level, request-rate
-level and per-tier CPU-utilization level (idle / moderate / saturated), giving
-``|S| = 3^5 = 243`` discrete states.  States are flattened row-major with the
-latency level as the most-significant digit.
+``s_t = (ell, r, u_{K-1}, ..., u_0)`` — latency level, request-rate level and
+one hidden per-tier utilization level per tier (reverse tier order, heaviest
+first), each over ``topology.n_levels`` levels.  For the paper's default
+3-tier topology this is ``(ell, r, u_H, u_M, u_L) in {0,1,2}^5`` with
+``|S| = 3^5 = 243``.  States are flattened row-major with the latency level
+as the most-significant digit.
 
 Observation space
 -----------------
-Every second the router observes ``o_t = (p95_latency, rps, queue_depth,
-error_rate)``, each discretized into 2-3 bins.  The per-tier utilizations are
-*hidden*: they must be inferred through the observation model A.
+Every second the router observes the topology's metric modalities (default:
+``(p95_latency, rps, queue_depth, error_rate)``), each discretized into the
+per-modality bin count.  The per-tier utilizations are *hidden*: they must
+be inferred through the observation model A.
 
-To keep every array statically shaped (jit / vmap / Pallas friendly) the four
-observation modalities are stored padded to ``MAX_BINS`` bins with a validity
-mask; padded bins carry zero probability everywhere.
+To keep every array statically shaped (jit / vmap / Pallas friendly) the
+observation modalities are stored padded to ``topology.max_bins`` bins with
+a validity mask; padded bins carry zero probability everywhere.
 
 Action space
 ------------
-20 discrete routing policies over the (light, medium, heavy) weight simplex —
-see :mod:`repro.core.policies`.
+Discrete routing policies over the K-tier weight simplex, generated from the
+topology's :class:`~repro.core.topology.PolicySpec` — see
+:mod:`repro.core.policies`.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.topology import Topology
+
+
 # ---------------------------------------------------------------------------
-# Static dimensions (paper constants)
+# Observation-bin mask
 # ---------------------------------------------------------------------------
-N_LEVELS = 3                      # low / medium / high per state factor
-N_STATE_FACTORS = 5               # (latency, rate, u_H, u_M, u_L)
-N_STATES = N_LEVELS ** N_STATE_FACTORS   # 243
-N_TIERS = 3                       # light / medium / heavy
-
-# Observation modalities and their bin counts (paper: "2-3 bins").
-MODALITIES = ("latency", "rps", "queue", "error")
-N_MODALITIES = len(MODALITIES)
-N_BINS = (3, 3, 3, 2)             # latency, rps, queue: 3 bins; error: 2 bins
-MAX_BINS = max(N_BINS)
-
-# Mask of valid observation bins, shape (N_MODALITIES, MAX_BINS).
-BINS_MASK = np.zeros((N_MODALITIES, MAX_BINS), dtype=np.float32)
-for _m, _nb in enumerate(N_BINS):
-    BINS_MASK[_m, :_nb] = 1.0
+@functools.lru_cache(maxsize=None)
+def bins_mask_np(topo: Topology) -> np.ndarray:
+    """(n_modalities, max_bins) float32 mask of valid observation bins."""
+    mask = np.zeros((topo.n_modalities, topo.max_bins), dtype=np.float32)
+    for m, nb in enumerate(topo.n_bins):
+        mask[m, :nb] = 1.0
+    mask.setflags(write=False)
+    return mask
 
 
-def bins_mask() -> jnp.ndarray:
-    """(N_MODALITIES, MAX_BINS) float mask of valid observation bins."""
-    return jnp.asarray(BINS_MASK)
+def bins_mask(topo: Topology) -> jnp.ndarray:
+    """(n_modalities, max_bins) device-array mask of valid observation bins."""
+    return jnp.asarray(bins_mask_np(topo))
 
 
 # ---------------------------------------------------------------------------
 # State indexing
 # ---------------------------------------------------------------------------
-def state_index(levels: Sequence[int]) -> int:
-    """Flatten a 5-tuple of levels into a state index in [0, 243)."""
+def state_index(levels: Sequence[int], topo: Topology) -> int:
+    """Flatten a factor-level tuple into a state index in [0, n_states)."""
     idx = 0
     for lv in levels:
-        idx = idx * N_LEVELS + int(lv)
+        idx = idx * topo.n_levels + int(lv)
     return idx
 
 
-def state_levels(index) -> jnp.ndarray:
+def state_levels(index, topo: Topology) -> jnp.ndarray:
     """Inverse of :func:`state_index`; works on traced ints too."""
     index = jnp.asarray(index)
     digits = []
-    for f in range(N_STATE_FACTORS):
-        power = N_LEVELS ** (N_STATE_FACTORS - 1 - f)
-        digits.append((index // power) % N_LEVELS)
+    for f in range(topo.n_state_factors):
+        power = topo.n_levels ** (topo.n_state_factors - 1 - f)
+        digits.append((index // power) % topo.n_levels)
     return jnp.stack(digits, axis=-1)
 
 
-def state_factor_table() -> np.ndarray:
-    """(N_STATES, N_STATE_FACTORS) int table: level of each factor per state.
+@functools.lru_cache(maxsize=None)
+def state_factor_table(topo: Topology) -> np.ndarray:
+    """(n_states, n_state_factors) int table: level of each factor per state.
 
     Used to build structured initial A-matrices and by tests.
     """
-    tbl = np.zeros((N_STATES, N_STATE_FACTORS), dtype=np.int32)
-    for s in range(N_STATES):
+    tbl = np.zeros((topo.n_states, topo.n_state_factors), dtype=np.int32)
+    for s in range(topo.n_states):
         x = s
-        for f in reversed(range(N_STATE_FACTORS)):
-            tbl[s, f] = x % N_LEVELS
-            x //= N_LEVELS
+        for f in reversed(range(topo.n_state_factors)):
+            tbl[s, f] = x % topo.n_levels
+            x //= topo.n_levels
+    tbl.setflags(write=False)
     return tbl
 
 
@@ -100,41 +103,52 @@ class DiscretizationConfig:
     Defaults are calibrated to the paper's testbed scale (P50 ~2-3 s at
     50 RPS on ResNet-50 CPU tiers).  ``latency_edges_s = (1.0, 3.0)`` means
     p95 < 1 s -> bin 0 (low), < 3 s -> bin 1 (medium), else bin 2 (high).
+
+    For non-default modality sets, pass ``edges`` explicitly — one edge
+    tuple per modality, in the topology's modality order (a modality with
+    ``n`` bins needs ``n - 1`` edges).
     """
 
     latency_edges_s: tuple[float, float] = (1.0, 3.0)
     rps_edges: tuple[float, float] = (48.0, 62.0)
     queue_edges: tuple[float, float] = (20.0, 80.0)
     error_edges: tuple[float, ...] = (0.15,)   # 2 bins: low / high error
+    edges: tuple[tuple[float, ...], ...] | None = None   # generic override
+
+    def modality_edges(self) -> tuple[tuple[float, ...], ...]:
+        if self.edges is not None:
+            return self.edges
+        return (self.latency_edges_s, self.rps_edges,
+                self.queue_edges, self.error_edges)
 
     def as_padded_edges(self) -> jnp.ndarray:
-        """(N_MODALITIES, MAX_BINS - 1) edge array padded with +inf."""
+        """(n_modalities, max_edges) edge array padded with +inf."""
+        all_edges = self.modality_edges()
+        width = max(len(e) for e in all_edges)
         rows = []
-        for edges in (self.latency_edges_s, self.rps_edges,
-                      self.queue_edges, self.error_edges):
-            row = list(edges) + [np.inf] * (MAX_BINS - 1 - len(edges))
-            rows.append(row)
+        for edges in all_edges:
+            rows.append(list(edges) + [np.inf] * (width - len(edges)))
         return jnp.asarray(rows, dtype=jnp.float32)
 
 
 def discretize_observation(raw: jnp.ndarray,
                            cfg: DiscretizationConfig) -> jnp.ndarray:
-    """Map raw metrics (latency_s, rps, queue_depth, error_rate) -> bin ids.
+    """Map raw metric values to per-modality observation bin ids.
 
     Args:
-      raw: (..., N_MODALITIES) float array of raw metric values.
+      raw: (..., n_modalities) float array of raw metric values.
       cfg: bin edges.
 
     Returns:
-      (..., N_MODALITIES) int32 array of observation bin indices.
+      (..., n_modalities) int32 array of observation bin indices.
     """
-    edges = cfg.as_padded_edges()                       # (M, MAX_BINS-1)
+    edges = cfg.as_padded_edges()                       # (M, width)
     raw = jnp.asarray(raw, dtype=jnp.float32)
     # bin = number of edges strictly below the value.
     return jnp.sum(raw[..., :, None] >= edges, axis=-1).astype(jnp.int32)
 
 
-def one_hot_observation(obs_bins: jnp.ndarray) -> jnp.ndarray:
-    """(..., M) int bins -> (..., M, MAX_BINS) one-hot (padded bins zero)."""
+def one_hot_observation(obs_bins: jnp.ndarray, max_bins: int) -> jnp.ndarray:
+    """(..., M) int bins -> (..., M, max_bins) one-hot (padded bins zero)."""
     return jnp.asarray(
-        obs_bins[..., None] == jnp.arange(MAX_BINS), dtype=jnp.float32)
+        obs_bins[..., None] == jnp.arange(max_bins), dtype=jnp.float32)

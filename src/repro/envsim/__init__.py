@@ -4,7 +4,9 @@ from repro.envsim.batched import (FluidParams, FluidResult, FluidState,
                                   WindowInfo, fluid_window_step,
                                   init_fluid_state, make_env_step,
                                   params_from_config, run_fluid, summarize)
-from repro.envsim.config import SimConfig, TierConfig, default_tiers
+from repro.envsim.config import (TIER_CLASSES, SimConfig, TierConfig,
+                                 default_tiers, discretization_for,
+                                 sim_config_for, tiers_for_topology)
 from repro.envsim.harness import (StrategySummary, evaluate_strategy, table1)
 from repro.envsim.routers import AifRouter
 from repro.envsim.scenarios import (SCENARIOS, Profile, ScenarioBatch,
@@ -12,7 +14,9 @@ from repro.envsim.scenarios import (SCENARIOS, Profile, ScenarioBatch,
 from repro.envsim.simulator import (EdgeSimulator, MetricsSnapshot, RunResult,
                                     run_experiment)
 
-__all__ = ["SimConfig", "TierConfig", "default_tiers", "StrategySummary",
+__all__ = ["SimConfig", "TierConfig", "default_tiers", "discretization_for",
+           "sim_config_for", "tiers_for_topology", "TIER_CLASSES",
+           "StrategySummary",
            "evaluate_strategy", "table1", "AifRouter", "EdgeSimulator",
            "MetricsSnapshot", "RunResult", "run_experiment",
            # batched fluid engine

@@ -6,7 +6,7 @@ threaded and host-bound, so a fleet experiment over hundreds of service cells
 is bottlenecked on Python.  This module replaces the per-request dynamics with
 a *fluid (mean-flow) approximation* advanced one control window at a time:
 
-* per tier, request mass flows in at ``w_i · λ(t)`` and drains at the tier's
+* per tier (any tier count K), request mass flows in at ``w_i · λ(t)`` and drains at the tier's
   service capacity ``c_i · μ_i``; the backlog (queued + in-flight mass) is a
   single float per (cell, tier),
 * queue caps convert excess backlog into ``overflow`` failures, down pods
@@ -37,7 +37,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spaces import N_TIERS
 from repro.envsim.config import SimConfig
 
 _EPS = 1e-9
@@ -46,24 +45,24 @@ _EPS = 1e-9
 class FluidParams(NamedTuple):
     """Static world description, broadcast over the cell axis R.
 
-    All per-tier leaves are (R, 3) float32; scalars are () float32.  Build
-    with :func:`params_from_config` (optionally heterogeneous per cell via
-    ``capacity_scale``).
+    All per-tier leaves are (R, K) float32 (K tiers, lightest first);
+    scalars are () float32.  Build with :func:`params_from_config`
+    (optionally heterogeneous per cell via ``capacity_scale``).
     """
 
-    servers: jnp.ndarray            # (R, 3) concurrent requests per tier
-    mu: jnp.ndarray                 # (R, 3) per-server service rate (req/s)
-    service_mean_s: jnp.ndarray     # (R, 3) mean service time
-    service_p95_factor: jnp.ndarray  # (R, 3) lognormal P95 / mean ratio
-    queue_cap: jnp.ndarray          # (R, 3) admission queue limit
+    servers: jnp.ndarray            # (R, K) concurrent requests per tier
+    mu: jnp.ndarray                 # (R, K) per-server service rate (req/s)
+    service_mean_s: jnp.ndarray     # (R, K) mean service time
+    service_p95_factor: jnp.ndarray  # (R, K) lognormal P95 / mean ratio
+    queue_cap: jnp.ndarray          # (R, K) admission queue limit
     timeout_s: jnp.ndarray          # () client timeout
-    unstable: jnp.ndarray           # (R, 3) 1.0 where the tier can restart
-    restart_base: jnp.ndarray       # (R, 3) spontaneous hazard (1/s)
-    restart_load: jnp.ndarray       # (R, 3) hazard per unit util over knee
-    restart_knee: jnp.ndarray       # (R, 3)
-    restart_shock: jnp.ndarray      # (R, 3) hazard per (Δrps / capacity)
-    restart_min_s: jnp.ndarray      # (R, 3)
-    restart_max_s: jnp.ndarray      # (R, 3)
+    unstable: jnp.ndarray           # (R, K) 1.0 where the tier can restart
+    restart_base: jnp.ndarray       # (R, K) spontaneous hazard (1/s)
+    restart_load: jnp.ndarray       # (R, K) hazard per unit util over knee
+    restart_knee: jnp.ndarray       # (R, K)
+    restart_shock: jnp.ndarray      # (R, K) hazard per (Δrps / capacity)
+    restart_min_s: jnp.ndarray      # (R, K)
+    restart_max_s: jnp.ndarray      # (R, K)
     latency_window_s: jnp.ndarray   # () observation EMA horizons
     error_window_s: jnp.ndarray
     rps_window_s: jnp.ndarray
@@ -72,15 +71,19 @@ class FluidParams(NamedTuple):
     def n_cells(self) -> int:
         return self.servers.shape[0]
 
+    @property
+    def n_tiers(self) -> int:
+        return self.servers.shape[1]
+
 
 class FluidState(NamedTuple):
     """Mutable world state; every leaf carries the leading cell axis R."""
 
-    backlog: jnp.ndarray          # (R, 3) request mass in system per tier
-    down_left: jnp.ndarray        # (R, 3) seconds of downtime remaining
-    util_accum: jnp.ndarray       # (R, 3) busy-fraction integral since scrape
-    util_scrape: jnp.ndarray      # (R, 3) last published 10 s utilization
-    prev_tier_rps: jnp.ndarray    # (R, 3) offered per-tier RPS last window
+    backlog: jnp.ndarray          # (R, K) request mass in system per tier
+    down_left: jnp.ndarray        # (R, K) seconds of downtime remaining
+    util_accum: jnp.ndarray       # (R, K) busy-fraction integral since scrape
+    util_scrape: jnp.ndarray      # (R, K) last published 10 s utilization
+    prev_tier_rps: jnp.ndarray    # (R, K) offered per-tier RPS last window
     p95_ema: jnp.ndarray          # (R,) observed P95 (sliding-window approx)
     rps_ema: jnp.ndarray          # (R,) observed offered RPS
     err_ema: jnp.ndarray          # (R,) observed error rate
@@ -91,23 +94,23 @@ class FluidState(NamedTuple):
     err_overflow: jnp.ndarray     # (R,)
     err_refused: jnp.ndarray      # (R,)
     err_restart: jnp.ndarray      # (R,)
-    tier_requests: jnp.ndarray    # (R, 3)
-    tier_success: jnp.ndarray     # (R, 3)
-    n_restarts: jnp.ndarray       # (R, 3)
+    tier_requests: jnp.ndarray    # (R, K)
+    tier_success: jnp.ndarray     # (R, K)
+    n_restarts: jnp.ndarray       # (R, K)
 
 
 class WindowInfo(NamedTuple):
     """Per-window observables + diagnostics (what a router may see)."""
 
-    raw_obs: jnp.ndarray          # (R, 4): p95_s, rps, queue_depth, err_rate
-    tier_utilization: jnp.ndarray  # (R, 3) 10 s scrape (paper §3)
-    tier_up: jnp.ndarray          # (R, 3) liveness probe
-    tier_latency_s: jnp.ndarray   # (R, 3) mean latency of this window's flow
-    tier_p95_s: jnp.ndarray       # (R, 3)
-    tier_completed: jnp.ndarray   # (R, 3) successful mass this window
+    raw_obs: jnp.ndarray          # (R, M): p95_s, rps, queue_depth, err_rate
+    tier_utilization: jnp.ndarray  # (R, K) 10 s scrape (paper §3)
+    tier_up: jnp.ndarray          # (R, K) liveness probe
+    tier_latency_s: jnp.ndarray   # (R, K) mean latency of this window's flow
+    tier_p95_s: jnp.ndarray       # (R, K)
+    tier_completed: jnp.ndarray   # (R, K) successful mass this window
     success: jnp.ndarray          # (R,)
     failures: jnp.ndarray         # (R,)
-    restarted: jnp.ndarray        # (R, 3) 1.0 where a pod restarted
+    restarted: jnp.ndarray        # (R, K) 1.0 where a pod restarted
 
 
 class FluidResult(NamedTuple):
@@ -119,9 +122,9 @@ class FluidResult(NamedTuple):
     error_breakdown: dict         # cause -> (R,)
     p95_ms: np.ndarray            # (R,) completion-weighted aggregate P95
     p50_ms: np.ndarray            # (R,)
-    tier_requests: np.ndarray     # (R, 3)
-    tier_success: np.ndarray      # (R, 3)
-    n_restarts: np.ndarray        # (R, 3)
+    tier_requests: np.ndarray     # (R, K)
+    tier_success: np.ndarray      # (R, K)
+    n_restarts: np.ndarray        # (R, K)
 
 
 # --------------------------------------------------------------------- build
@@ -130,10 +133,14 @@ def params_from_config(cfg: SimConfig,
                        capacity_scale: np.ndarray | None = None) -> FluidParams:
     """FluidParams for ``n_cells`` replicas of the event simulator's world.
 
+    Works for any tier count: shapes derive from ``len(cfg.tiers)`` (use
+    :func:`repro.envsim.config.sim_config_for` to build a config from a
+    :class:`~repro.core.topology.Topology`).
+
     Args:
       cfg: the event simulator's configuration (single source of truth).
       n_cells: number of independent service cells R.
-      capacity_scale: optional (R, 3) per-cell multiplier on tier capacity
+      capacity_scale: optional (R, K) per-cell multiplier on tier capacity
         (fractional server counts are meaningful in the fluid limit) — the
         heterogeneous-fleet lever used by :mod:`repro.envsim.scenarios`.
     """
@@ -174,7 +181,7 @@ def params_from_config(cfg: SimConfig,
 def init_fluid_state(params: FluidParams) -> FluidState:
     r = params.n_cells
     z = jnp.zeros((r,), jnp.float32)
-    zt = jnp.zeros((r, N_TIERS), jnp.float32)
+    zt = jnp.zeros((r, params.n_tiers), jnp.float32)
     return FluidState(
         backlog=zt, down_left=zt, util_accum=zt, util_scrape=zt,
         prev_tier_rps=zt, p95_ema=z, rps_ema=z, err_ema=z,
@@ -186,11 +193,11 @@ def init_fluid_state(params: FluidParams) -> FluidState:
 
 # ---------------------------------------------------------------------- step
 def _weighted_p95(lat: jnp.ndarray, mass: jnp.ndarray) -> jnp.ndarray:
-    """Completion-weighted 95th percentile of the 3-atom tier latency mix.
+    """Completion-weighted 95th percentile of the K-atom tier latency mix.
 
     Args:
-      lat: (..., 3) per-tier latency atoms.
-      mass: (..., 3) completion mass per atom.
+      lat: (..., K) per-tier latency atoms.
+      mass: (..., K) completion mass per atom.
     """
     order = jnp.argsort(lat, axis=-1)
     lat_s = jnp.take_along_axis(lat, order, axis=-1)
@@ -216,9 +223,9 @@ def fluid_window_step(params: FluidParams,
     """Advance every cell one control window under the given routing weights.
 
     Args:
-      weights: (R, 3) routing weights (normalized internally).
+      weights: (R, K) routing weights (normalized internally).
       arrival_rate: (R,) offered RPS this window (from the scenario schedule).
-      hazard_scale: (R, 3) multiplier on the restart hazard this window.
+      hazard_scale: (R, K) multiplier on the restart hazard this window.
       key: PRNG key (restart draws).
       t_idx: () int32 window index (drives the 10 s utilization scrape).
       dt: control-window length in seconds (static).
@@ -227,15 +234,15 @@ def fluid_window_step(params: FluidParams,
     w = jnp.maximum(weights, 0.0)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
 
-    up = state.down_left <= _EPS                      # (R, 3) bool
+    up = state.down_left <= _EPS                      # (R, K) bool
     upf = up.astype(jnp.float32)
 
-    lam = w * arrival_rate[:, None]                   # (R, 3) offered RPS
-    arr = lam * dt                                    # (R, 3) request mass
+    lam = w * arrival_rate[:, None]                   # (R, K) offered RPS
+    arr = lam * dt                                    # (R, K) request mass
     refused = jnp.sum(arr * (1.0 - upf), axis=-1)     # down pods 503 on arrival
     admitted = arr * upf
 
-    cap_rate = params.servers * params.mu             # (R, 3) RPS at saturation
+    cap_rate = params.servers * params.mu             # (R, K) RPS at saturation
     cap = cap_rate * dt * upf
     backlog0 = state.backlog
     avail = backlog0 + admitted
@@ -254,7 +261,7 @@ def fluid_window_step(params: FluidParams,
     tier_latency = wait + params.service_mean_s
     tier_p95 = wait + params.service_mean_s * params.service_p95_factor
     timed_out = jnp.where(tier_latency > params.timeout_s, served, 0.0)
-    completed = served - timed_out                    # (R, 3) successes
+    completed = served - timed_out                    # (R, K) successes
 
     # utilization (busy-core fraction this window; down pods idle)
     util = jnp.where(cap > 0, served / jnp.maximum(cap_rate * dt, _EPS), 0.0)
@@ -352,19 +359,19 @@ def run_fluid(params: FluidParams,
 
     Args:
       arrival_rate: (T, R) offered RPS schedule.
-      hazard_scale: (T, R, 3) restart-hazard multiplier schedule.
-      weights: (3,), (R, 3) or (T, R, 3) routing weights.
+      hazard_scale: (T, R, K) restart-hazard multiplier schedule.
+      weights: (K,), (R, K) or (T, R, K) routing weights.
       key: PRNG key.
 
     Returns:
       (final FluidState, stacked WindowInfo traces with leading T axis).
     """
     t_total = arrival_rate.shape[0]
-    r = params.n_cells
+    r, k = params.n_cells, params.n_tiers
     if weights.ndim == 1:
-        weights = jnp.broadcast_to(weights[None], (r, N_TIERS))
+        weights = jnp.broadcast_to(weights[None], (r, k))
     if weights.ndim == 2:
-        weights = jnp.broadcast_to(weights[None], (t_total, r, N_TIERS))
+        weights = jnp.broadcast_to(weights[None], (t_total, r, k))
     keys = jax.random.split(key, t_total)
 
     def step(state, xs):
@@ -402,9 +409,9 @@ def make_env_step(params: FluidParams,
 
 def summarize(final: FluidState, trace: WindowInfo) -> FluidResult:
     """Host-side aggregation of a rollout into per-cell Table-1-style stats."""
-    lat = np.asarray(trace.tier_p95_s)        # (T, R, 3)
+    lat = np.asarray(trace.tier_p95_s)        # (T, R, K)
     mean_lat = np.asarray(trace.tier_latency_s)
-    mass = np.asarray(trace.tier_completed)   # (T, R, 3)
+    mass = np.asarray(trace.tier_completed)   # (T, R, K)
     t, r, k = lat.shape
     lat_flat = np.moveaxis(lat, 1, 0).reshape(r, t * k)
     mean_flat = np.moveaxis(mean_lat, 1, 0).reshape(r, t * k)

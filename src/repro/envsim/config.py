@@ -65,6 +65,63 @@ def default_tiers() -> tuple[TierConfig, TierConfig, TierConfig]:
     return (light, medium, heavy)
 
 
+# ---------------------------------------------------------------------------
+# Capacity classes: named tier templates resolved from Topology.tier_classes
+# ---------------------------------------------------------------------------
+#: Capacity-class registry.  ``edge-light`` / ``edge-medium`` / ``server``
+#: are exactly the paper's three tiers; the ``device`` ... ``cloud`` ladder
+#: extends the continuum for deeper topologies (capacity roughly doubles per
+#: rung, instability concentrates at the edge — SynergAI-style hierarchy).
+TIER_CLASSES: dict[str, TierConfig] = {
+    "edge-light": default_tiers()[0],
+    "edge-medium": default_tiers()[1],
+    "server": default_tiers()[2],
+    # Deeper-continuum rungs (lightest -> heaviest).
+    "device": TierConfig(
+        name="device", servers=1, mean_service_s=0.30, queue_cap=16,
+        unstable=True, restart_base_hazard=1.0 / 7200.0,
+        restart_load_hazard=0.006, restart_util_knee=0.85,
+        restart_shock_hazard=0.005,
+    ),
+    "far-edge": TierConfig(
+        name="far-edge", servers=2, mean_service_s=0.18, queue_cap=36,
+        unstable=True, restart_base_hazard=1.0 / 14400.0,
+        restart_load_hazard=0.004, restart_util_knee=0.90,
+        restart_shock_hazard=0.003,
+    ),
+    "metro": TierConfig(
+        name="metro", servers=4, mean_service_s=0.20, queue_cap=80,
+        unstable=True, restart_base_hazard=1.0 / 43200.0,
+        restart_load_hazard=0.002, restart_util_knee=0.92,
+        restart_shock_hazard=0.002,
+    ),
+    "regional": TierConfig(
+        name="regional", servers=8, mean_service_s=0.23, queue_cap=160,
+        unstable=False,
+    ),
+    "cloud": TierConfig(
+        name="cloud", servers=16, mean_service_s=0.26, queue_cap=320,
+        unstable=False,
+    ),
+}
+
+
+def tiers_for_topology(topo) -> tuple[TierConfig, ...]:
+    """Resolve a Topology's per-tier capacity classes into TierConfigs.
+
+    Tier names come from the topology, parameters from :data:`TIER_CLASSES`.
+    """
+    tiers = []
+    for name, cls in zip(topo.tier_names, topo.tier_classes):
+        try:
+            template = TIER_CLASSES[cls]
+        except KeyError:
+            raise KeyError(f"unknown tier class {cls!r}; "
+                           f"available: {sorted(TIER_CLASSES)}") from None
+        tiers.append(dataclasses.replace(template, name=name))
+    return tuple(tiers)
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     tiers: tuple[TierConfig, ...] = dataclasses.field(
@@ -97,3 +154,37 @@ class SimConfig:
         """Rate multiplier outside bursts such that the mean rate == rps."""
         return (1.0 - self.burst_duty * self.burst_factor) / (
             1.0 - self.burst_duty)
+
+
+def discretization_for(cfg: SimConfig):
+    """Observation bin edges calibrated to this config's offered load.
+
+    The paper defaults (``rps_edges = (48, 62)``) are tuned to its 50 RPS
+    testbed; a continuum serving a different load (e.g. the 5-tier preset at
+    ~118 RPS) would otherwise pin the rps modality at its top bin and learn
+    nothing from it.  Scales the rps edges to the same ±~25% band around the
+    configured base rate; the latency/queue/error edges are regime-driven
+    (timeout, backlog seconds) and stay at the paper values.
+    """
+    from repro.core.spaces import DiscretizationConfig
+    base = DiscretizationConfig()
+    scale = cfg.rps / 50.0
+    return DiscretizationConfig(
+        rps_edges=tuple(round(e * scale, 1) for e in base.rps_edges))
+
+
+def sim_config_for(topo, rps: float | None = None,
+                   load_fraction: float = 0.9, **overrides) -> SimConfig:
+    """SimConfig for an arbitrary :class:`~repro.core.topology.Topology`.
+
+    Tier parameters come from the capacity-class registry; the offered load
+    defaults to ``load_fraction`` of the continuum's aggregate capacity —
+    the same "just under saturation" regime that makes routing matter in
+    the paper's testbed (50 RPS against ~56 RPS capacity).  For the default
+    3-tier topology with ``rps=50`` this reproduces ``SimConfig()`` exactly.
+    """
+    tiers = tiers_for_topology(topo)
+    if rps is None:
+        capacity = sum(t.servers / t.mean_service_s for t in tiers)
+        rps = round(load_fraction * capacity, 1)
+    return SimConfig(tiers=tiers, rps=rps, **overrides)

@@ -36,10 +36,13 @@ class StrategySummary:
 
     def row(self) -> str:
         ts = self.tier_share_mean * 100
+        # heaviest tier first, matching the paper's Table 1 column order
+        share = " ".join(f"t{i}={ts[i]:4.1f}%"
+                         for i in range(len(ts) - 1, -1, -1))
         return (f"{self.name:<14} {self.success_pct_mean:6.1f}±{self.success_pct_std:4.2f}  "
                 f"{self.p50_ms_mean:7.0f}±{self.p50_ms_std:<5.0f} "
                 f"{self.p95_ms_mean:7.0f}±{self.p95_ms_std:<5.0f} "
-                f"H={ts[2]:4.1f}% M={ts[1]:4.1f}% L={ts[0]:4.1f}%")
+                f"{share}")
 
 
 def evaluate_strategy(make_router: Callable[[int], Callable],

@@ -1,9 +1,12 @@
 """Router adapters connecting decision policies to the simulator.
 
 ``AifRouter`` wraps the core Active Inference agent: every control window it
-discretizes the metrics snapshot into the paper's observation tuple, runs one
-``tick`` (belief update → EFE action selection → online learning on the slow
-cadence) and returns the selected policy's routing weights.
+discretizes the metrics snapshot into the topology's observation tuple, runs
+one ``tick`` (belief update → EFE action selection → online learning on the
+slow cadence) and returns the selected policy's routing weights.  The tier
+count, state space and policy set all derive from the agent config's
+:class:`~repro.core.topology.Topology`, so the same adapter drives the
+paper's 3-tier testbed and deeper continua.
 """
 from __future__ import annotations
 
@@ -26,14 +29,16 @@ class AifRouter:
                  seed: int = 0,
                  adaptive_preferences: bool = True,
                  use_util_scrape: bool = True,
-                 util_edges: tuple[float, float] = (0.5, 0.9)):
+                 util_edges: tuple[float, ...] | None = None):
         self.cfg = cfg or core.AifConfig()
+        self.topo = self.cfg.topology
         self.disc = disc or core.DiscretizationConfig()
         self.state = core.init_agent_state(self.cfg)
         self.key = jax.random.key(seed)
         self.adaptive_preferences = adaptive_preferences
         self.use_util_scrape = use_util_scrape
-        self.util_edges = np.asarray(util_edges)
+        self.util_edges = np.asarray(
+            self.topo.util_edges if util_edges is None else util_edges)
         self.ticks = 0
         self.actions: list[int] = []
         self.unstable_trace: list[bool] = []
@@ -49,11 +54,12 @@ class AifRouter:
         # Ablation lever: freeze the error EMA at 0 to disable adaptation.
         err = raw[3] if self.adaptive_preferences else jnp.zeros(())
         # The paper's 10-second resource scrape: per-tier CPU utilization,
-        # reordered (light, medium, heavy) -> state-factor order (H, M, L).
-        util_lmh = snapshot.tier_utilization
+        # reordered from tier order (lightest first) -> state-factor order
+        # (heaviest first).
+        util_rev = snapshot.tier_utilization[::-1]
         util_bins = jnp.asarray(
-            np.sum(util_lmh[[2, 1, 0], None] >= self.util_edges[None, :],
-                   axis=-1), dtype=jnp.int32)
+            np.sum(util_rev[:, None] >= self.util_edges[None, :], axis=-1),
+            dtype=jnp.int32)
         util_valid = bool(self.use_util_scrape and self.ticks % 10 == 0
                           and self.ticks > 0)
         self.key, k = jax.random.split(self.key)

@@ -3,13 +3,16 @@
 A scenario is assembled from multiplicative :class:`Profile` primitives:
 
 * ``rate``     — (T, R) multiplier on the configured base RPS,
-* ``hazard``   — (T, R, 3) multiplier on the per-tier restart hazard,
-* ``capacity`` — (R, 3) per-cell multiplier on tier capacity.
+* ``hazard``   — (T, R, K) multiplier on the per-tier restart hazard,
+* ``capacity`` — (R, K) per-cell multiplier on tier capacity,
+
+where K is the tier count of the simulator config (any topology; build one
+with :func:`repro.envsim.config.sim_config_for`).
 
 Primitives compose by elementwise product (:func:`compose`), so "diurnal load
 on a heterogeneous fleet with a mid-run flash crowd" is three primitives
 multiplied together.  :func:`compile_scenario` materializes the concrete
-(T, R) arrival-rate and (T, R, 3) hazard schedules the engine consumes, and
+(T, R) arrival-rate and (T, R, K) hazard schedules the engine consumes, and
 :data:`SCENARIOS` names ready-made presets for benchmarks / examples / CLI.
 
 All builders are host-side numpy: schedules are *inputs* to the jitted scan,
@@ -30,8 +33,8 @@ class ScenarioBatch(NamedTuple):
     """Concrete schedules for one fleet rollout."""
 
     arrival_rate: np.ndarray    # (T, R) offered RPS per window
-    hazard_scale: np.ndarray    # (T, R, 3) restart-hazard multiplier
-    capacity_scale: np.ndarray  # (R, 3) per-cell tier-capacity multiplier
+    hazard_scale: np.ndarray    # (T, R, K) restart-hazard multiplier
+    capacity_scale: np.ndarray  # (R, K) per-cell tier-capacity multiplier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,8 +42,8 @@ class Profile:
     """Multiplicative scenario component (any field may be None = neutral)."""
 
     rate: np.ndarray | None = None      # (T, R)
-    hazard: np.ndarray | None = None    # (T, R, 3)
-    capacity: np.ndarray | None = None  # (R, 3)
+    hazard: np.ndarray | None = None    # (T, R, K)
+    capacity: np.ndarray | None = None  # (R, K)
 
 
 def _mul(a: np.ndarray | None, b: np.ndarray | None) -> np.ndarray | None:
@@ -68,13 +71,13 @@ def compile_scenario(profile: Profile, cfg: SimConfig, n_cells: int,
     Schedules are per *window*; any real-time scaling belongs in the
     primitive builders (which take ``window_s``), not here.
     """
-    t, r = n_windows, n_cells
+    t, r, k = n_windows, n_cells, len(cfg.tiers)
     rate = np.ones((t, r), np.float32) if profile.rate is None else (
         np.broadcast_to(profile.rate, (t, r)).astype(np.float32))
-    hazard = np.ones((t, r, 3), np.float32) if profile.hazard is None else (
-        np.broadcast_to(profile.hazard, (t, r, 3)).astype(np.float32))
-    cap = np.ones((r, 3), np.float32) if profile.capacity is None else (
-        np.broadcast_to(profile.capacity, (r, 3)).astype(np.float32))
+    hazard = np.ones((t, r, k), np.float32) if profile.hazard is None else (
+        np.broadcast_to(profile.hazard, (t, r, k)).astype(np.float32))
+    cap = np.ones((r, k), np.float32) if profile.capacity is None else (
+        np.broadcast_to(profile.capacity, (r, k)).astype(np.float32))
     return ScenarioBatch(arrival_rate=cfg.rps * rate,
                          hazard_scale=hazard,
                          capacity_scale=cap)
@@ -132,7 +135,7 @@ def flash_crowd(n_windows: int, n_cells: int, window_s: float = 1.0,
 def cascading_restarts(n_windows: int, n_cells: int, window_s: float = 1.0,
                        start_s: float = 60.0, wave_interval_s: float = 5.0,
                        tiers: tuple[int, ...] = (0, 1),
-                       boost: float = 1e6) -> Profile:
+                       boost: float = 1e6, n_tiers: int = 3) -> Profile:
     """A restart wave rolling across the fleet's edge tiers.
 
     Cell r gets a one-window hazard boost at ``start_s + r·wave_interval_s``
@@ -142,7 +145,7 @@ def cascading_restarts(n_windows: int, n_cells: int, window_s: float = 1.0,
     (light tier: 1e6 · ~7e-5/s ⇒ p_restart ≈ 1 − e⁻⁷⁰ ≈ 1) so the wave is
     deterministic, not a high-probability draw.
     """
-    hz = np.ones((n_windows, n_cells, 3), np.float64)
+    hz = np.ones((n_windows, n_cells, n_tiers), np.float64)
     for r in range(n_cells):
         k = int((start_s + r * wave_interval_s) / window_s)
         if 0 <= k < n_windows:
@@ -152,10 +155,10 @@ def cascading_restarts(n_windows: int, n_cells: int, window_s: float = 1.0,
 
 
 def heterogeneous_capacity(n_cells: int, spread: float = 0.35,
-                           seed: int = 0) -> Profile:
+                           seed: int = 0, n_tiers: int = 3) -> Profile:
     """Per-cell lognormal tier-capacity multipliers (heterogeneous fleet)."""
     rng = np.random.default_rng(seed)
-    cap = np.exp(rng.normal(0.0, spread, size=(n_cells, 3)))
+    cap = np.exp(rng.normal(0.0, spread, size=(n_cells, n_tiers)))
     return Profile(capacity=cap.astype(np.float32))
 
 
@@ -188,13 +191,14 @@ def _cascade(cfg, r, t, w, seed):
     return compile_scenario(
         compose(paper_bursts(cfg, t, r, w),
                 cascading_restarts(t, r, w, start_s=t * w * 0.2,
-                                   wave_interval_s=max(1.0, t * w * 0.5 / max(r, 1)))),
+                                   wave_interval_s=max(1.0, t * w * 0.5 / max(r, 1)),
+                                   n_tiers=len(cfg.tiers))),
         cfg, r, t)
 
 
 def _hetero_diurnal(cfg, r, t, w, seed):
     return compile_scenario(
-        compose(heterogeneous_capacity(r, seed=seed),
+        compose(heterogeneous_capacity(r, seed=seed, n_tiers=len(cfg.tiers)),
                 diurnal(t, r, w, period_s=max(600.0, t * w / 3),
                         phase_spread=0.5)),
         cfg, r, t)

@@ -1,4 +1,4 @@
-"""Event-driven simulator of the paper's 3-tier edge testbed.
+"""Event-driven simulator of the paper's edge testbed (any tier count).
 
 Request lifecycle: Poisson (burst-modulated) arrival → routed to a tier by the
 current routing weights → served by one of the tier's ``servers`` cores
@@ -50,9 +50,9 @@ class MetricsSnapshot:
     rps: float                    # completion throughput (short window)
     queue_depth: float            # total queued requests (all tiers)
     error_rate: float             # errors / (errors+successes), sliding window
-    tier_utilization: np.ndarray  # (3,) busy-core fraction, 10 s cadence
-    tier_queue_depth: np.ndarray  # (3,) per-tier queue depth (JSQ baselines)
-    tier_up: np.ndarray           # (3,) bool — liveness probe
+    tier_utilization: np.ndarray  # (K,) busy-core fraction, 10 s cadence
+    tier_queue_depth: np.ndarray  # (K,) per-tier queue depth (JSQ baselines)
+    tier_up: np.ndarray           # (K,) bool — liveness probe
 
 
 @dataclasses.dataclass
@@ -65,10 +65,10 @@ class RunResult:
     error_breakdown: dict
     p50_ms: float
     p95_ms: float
-    tier_requests: np.ndarray        # (3,) routed counts (incl. failures)
-    tier_success: np.ndarray         # (3,) successful completions per tier
-    n_restarts: np.ndarray           # (3,) pod restarts per tier
-    weights_trace: np.ndarray        # (T, 3) applied weights per window
+    tier_requests: np.ndarray        # (K,) routed counts (incl. failures)
+    tier_success: np.ndarray         # (K,) successful completions per tier
+    n_restarts: np.ndarray           # (K,) pod restarts per tier
+    weights_trace: np.ndarray        # (T, K) applied weights per window
     p95_trace: np.ndarray            # (T,) observed P95 per window
     error_trace: np.ndarray          # (T,) observed error rate per window
     action_trace: Optional[np.ndarray] = None   # router-specific diagnostics
@@ -130,27 +130,28 @@ class EdgeSimulator:
         self.cfg = cfg
         self.rng = np.random.default_rng(seed)
         self.tiers = [_Tier(tc, self.rng) for tc in cfg.tiers]
+        k = len(self.tiers)
         self.events: list = []
         self.seq = 0
         self.t = 0.0
-        self.weights = np.asarray([1 / 3, 1 / 3, 1 / 3])
+        self.weights = np.full(k, 1.0 / k)
         # outcome accounting
         self.n_requests = 0
         self.n_success = 0
         self.errors = {"timeout": 0, "overflow": 0, "refused": 0, "restart": 0}
-        self.tier_requests = np.zeros(3, dtype=np.int64)
-        self.tier_success = np.zeros(3, dtype=np.int64)
+        self.tier_requests = np.zeros(k, dtype=np.int64)
+        self.tier_success = np.zeros(k, dtype=np.int64)
         # sliding windows for router observability
         self.completions: deque = deque()   # (t_done, latency_s)
         self.arrivals: deque = deque()      # t of recent arrivals (for RPS)
         self.outcomes: deque = deque()      # (t, success: bool)
         self.all_latencies: list = []       # successful latencies (for P50/P95)
         # per-tier utilization scrape (10 s cadence)
-        self.util_scrape = np.zeros(3)
+        self.util_scrape = np.zeros(k)
         self._last_scrape_t = 0.0
         # per-window offered load per tier (for the load-shock hazard)
-        self.window_tier_arrivals = np.zeros(3, dtype=np.int64)
-        self.prev_tier_rps = np.zeros(3)
+        self.window_tier_arrivals = np.zeros(k, dtype=np.int64)
+        self.prev_tier_rps = np.zeros(k)
         self._schedule_next_arrival()
 
     # ------------------------------------------------------------------ events
@@ -244,7 +245,7 @@ class EdgeSimulator:
         tier_rps = self.window_tier_arrivals / max(window_s, 1e-9)
         rps_delta = tier_rps - self.prev_tier_rps
         self.prev_tier_rps = tier_rps
-        self.window_tier_arrivals = np.zeros(3, dtype=np.int64)
+        self.window_tier_arrivals = np.zeros(len(self.tiers), dtype=np.int64)
         if not self.cfg.instability:
             return
         for i, tier in enumerate(self.tiers):
@@ -343,11 +344,11 @@ def run_experiment(router: Callable[[MetricsSnapshot], np.ndarray],
     """Drive one (router, world) pair for ``duration_s`` simulated seconds.
 
     ``router`` is called once per control window with the current metrics
-    snapshot and returns routing weights (w_L, w_M, w_H).
+    snapshot and returns routing weights (one per tier, lightest first).
     """
     sim = EdgeSimulator(cfg, seed=seed)
     n_windows = int(round(duration_s / window_s))
-    weights_trace = np.zeros((n_windows, 3))
+    weights_trace = np.zeros((n_windows, len(cfg.tiers)))
     p95_trace = np.zeros(n_windows)
     error_trace = np.zeros(n_windows)
     for k in range(n_windows):

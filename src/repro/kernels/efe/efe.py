@@ -1,15 +1,20 @@
-"""Fused fleet-EFE Pallas TPU kernel.
+"""Fused fleet-EFE Pallas TPU kernel, shape-generic over (S, A, M, bins).
 
 The paper's action-selection hot loop — ``B_a·q → A·ŝ → risk/ambiguity`` —
 batched over a fleet of R routers (one per service cell) at 1 Hz.  Per
 (router-block, action) grid step the kernel keeps one action's transition
-tile (BR, S̄, S̄) in VMEM (S̄ = 243 padded to 256 for lane alignment), does
-the batched mat-vec on the MXU, and fuses the observation projection +
-risk/ambiguity reductions so predicted state/observation distributions never
-round-trip to HBM.
+tile (BR, S̄, S̄) in VMEM, does the batched mat-vec on the MXU, and fuses the
+observation projection + risk/ambiguity reductions so predicted
+state/observation distributions never round-trip to HBM.
 
-VMEM budget at BR=8: B tile 8·256·256·4B = 2.1 MB (+ small operands) —
-comfortably under the ~16 MB/core budget, with the (S̄×S̄) mat-vec dims
+Every dimension derives from the input shapes, which in turn derive from the
+:class:`~repro.core.topology.Topology`: the state count S is padded to the
+next lane-width multiple S̄ (243 → 256 for the paper's 3-tier topology,
+128 → 128 for the binary-level 5-tier preset), and the router block size is
+chosen so the B tile stays well under the VMEM budget.
+
+VMEM budget at BR=8, S̄=256: B tile 8·256·256·4B = 2.1 MB (+ small operands)
+— comfortably under the ~16 MB/core budget, with the (S̄×S̄) mat-vec dims
 128-aligned for the MXU.
 """
 from __future__ import annotations
@@ -20,7 +25,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-S_PAD = 256          # 243 states padded to the lane width multiple
+_LANES = 128         # TPU lane width: pad S to a multiple of this
+
+# Keep the per-step B tile at or below this many bytes when auto-sizing BR.
+_VMEM_TILE_BUDGET = 4 * 1024 * 1024
+
+
+def pad_states(s: int) -> int:
+    """S rounded up to the lane-width multiple the kernel tiles on."""
+    return max(_LANES, -(-s // _LANES) * _LANES)
+
+
+def default_block_r(r: int, s: int) -> int:
+    """Largest power-of-two router block that divides R and fits the VMEM
+    tile budget for this topology's padded state count."""
+    s_pad = pad_states(s)
+    budget = max(1, _VMEM_TILE_BUDGET // (s_pad * s_pad * 4))
+    br = 1
+    while br * 2 <= min(budget, 8) and r % (br * 2) == 0:
+        br *= 2
+    return br
 
 
 def _efe_kernel(b_ref, q_ref, a_ref, logc_ref, amb_ref, cost_ref, out_ref):
@@ -70,11 +94,17 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
                      amb: jnp.ndarray, cost: jnp.ndarray,
                      *, block_r: int = 8,
                      interpret: bool = True) -> jnp.ndarray:
-    """G (R, A) for a fleet.  See ref.py for input semantics."""
+    """G (R, A) for a fleet.  See ref.py for input semantics.
+
+    Shape-generic: works for any (R, A, S, S) / (R, M, NB, S) operands; S is
+    padded to the lane-width multiple internally.  ``block_r`` must divide R
+    (:func:`repro.kernels.efe.ops.fleet_efe` picks a valid one).
+    """
     r, a, s, _ = b_norm.shape
     m, nb = a_norm.shape[1], a_norm.shape[2]
     assert r % block_r == 0, (r, block_r)
-    pad = S_PAD - s
+    s_pad = pad_states(s)
+    pad = s_pad - s
     if pad > 0:
         b_norm = jnp.pad(b_norm, ((0, 0), (0, 0), (0, pad), (0, pad)))
         q = jnp.pad(q, ((0, 0), (0, pad)))
@@ -86,12 +116,12 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
         _efe_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_r, 1, S_PAD, S_PAD),
+            pl.BlockSpec((block_r, 1, s_pad, s_pad),
                          lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((block_r, S_PAD), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_r, m, nb, S_PAD), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
             pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((block_r, S_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),

@@ -3,7 +3,9 @@
 ``fleet_efe`` adapts a batched generative model (pseudo-counts, as carried by
 :class:`repro.core.agent.AgentState`) into the kernel's normalized inputs and
 dispatches to the Pallas kernel (TPU) or the pure-jnp oracle (CPU/unit
-tests).  Matches ``repro.core.efe.expected_free_energy`` term-for-term.
+tests).  Matches ``repro.core.efe.expected_free_energy`` term-for-term for
+every :class:`~repro.core.topology.Topology` (shapes come from the config's
+topology, block sizes from the operand shapes).
 """
 from __future__ import annotations
 
@@ -11,19 +13,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import generative, policies, spaces
-from repro.kernels.efe.efe import efe_fleet_pallas
+from repro.kernels.efe.efe import default_block_r, efe_fleet_pallas
 from repro.kernels.efe.ref import efe_fleet_ref
+
+
+def largest_pow2_divisor(n: int) -> int:
+    """Largest power of two dividing ``n`` (1 for odd ``n``; ``n >= 1``)."""
+    return n & -n
 
 
 def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
                        c_log: jnp.ndarray, beliefs: jnp.ndarray,
                        cfg: generative.AifConfig):
     """Batched (R, ...) counts -> kernel inputs (normalized, fused terms)."""
-    na = jax.vmap(generative.normalize_a)(a_counts)    # (R, M, NB, S)
+    topo = cfg.topology
+    na = jax.vmap(lambda a: generative.normalize_a(a, topo))(a_counts)
     nb = jax.vmap(generative.normalize_b)(b_counts)    # (R, A, S', S)
     # kernel computes B_a q with contraction over the last dim: transpose so
     # that out[s'] = sum_s b[s', s] q[s]  — already (S', S) ✓
-    mask = spaces.bins_mask()
+    mask = spaces.bins_mask(topo)
     logits = jnp.where(mask > 0, c_log, -jnp.inf)
     logc = jax.nn.log_softmax(logits, axis=-1)
     logc = jnp.where(mask > 0, logc, -60.0)            # padded bins
@@ -31,7 +39,7 @@ def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
                            na * jnp.log(jnp.maximum(na, 1e-16)), 0.0),
                  axis=2)                               # (R, M, S)
     amb = jnp.sum(h, axis=1)                           # (R, S)
-    cost = cfg.cost_weight * policies.policy_concentration_cost()
+    cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
     return nb, na, logc, amb, cost
 
 
@@ -39,16 +47,20 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
               c_log: jnp.ndarray, beliefs: jnp.ndarray,
               cfg: generative.AifConfig, *,
               use_pallas: bool = True, interpret: bool | None = None,
-              block_r: int = 8) -> jnp.ndarray:
+              block_r: int | None = None) -> jnp.ndarray:
     """G (R, A) for a fleet of routers.
 
     Args:
-      a_counts: (R, M, MAX_BINS, S) observation-model pseudo-counts.
+      a_counts: (R, M, max_bins, S) observation-model pseudo-counts.
       b_counts: (R, A, S, S) transition pseudo-counts.
-      c_log:    (R, M, MAX_BINS) current log-preferences.
+      c_log:    (R, M, max_bins) current log-preferences.
       beliefs:  (R, S) posteriors.
       interpret: None (default) auto-detects — compiled kernel on TPU,
         interpret-mode emulation elsewhere (Pallas does not lower to CPU).
+      block_r: router block size; honored as-is when it divides R, else
+        reduced to the largest power-of-two divisor of R (1 for odd/prime
+        R, which degrades throughput but stays correct).  None picks a
+        power-of-two divisor within the kernel's VMEM budget.
     """
     nb, na, logc, amb, cost = _normalized_inputs(a_counts, b_counts, c_log,
                                                  beliefs, cfg)
@@ -57,9 +69,13 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
         interpret = not on_tpu()
     if use_pallas:
         r = beliefs.shape[0]
-        br = block_r
-        while r % br:
-            br //= 2
+        s = beliefs.shape[-1]
+        if block_r is None:
+            br = default_block_r(r, s)
+        elif block_r > 0 and r % block_r == 0:
+            br = block_r
+        else:
+            br = min(largest_pow2_divisor(r), largest_pow2_divisor(block_r))
         return efe_fleet_pallas(nb, beliefs, na, logc, amb, cost,
                                 block_r=max(br, 1), interpret=interpret)
     return efe_fleet_ref(nb, beliefs, na, logc, amb, cost)

@@ -1,11 +1,13 @@
 """Multi-tier serving: AIF-Router as the control plane over model tiers.
 
 This is the paper's deployment pattern transplanted to the datacenter: the
-three heterogeneous tiers are *model variants* (small / medium / large) of
+K heterogeneous tiers are *model variants* (e.g. small / medium / large) of
 one family, each behind its own :class:`ServingEngine`, and the Active
 Inference router splits incoming traffic across them from aggregated
 observations only — no prior knowledge of tier capacity, exactly the paper's
-research question.
+research question.  Any tier count works: pair an
+:class:`~repro.envsim.routers.AifRouter` whose topology has K tiers with K
+``TierRuntime`` entries.
 
 Time is discretized into control ticks (1 tick ≡ the paper's 1-second fast
 loop).  Per tick: requests arrive (Poisson), get dispatched by the current

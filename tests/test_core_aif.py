@@ -12,34 +12,35 @@ from repro.core import generative, learning, policies, spaces
 
 
 CFG = core.AifConfig()
+TOPO = CFG.topology
+S, A = TOPO.n_states, policies.n_actions(TOPO)
+M, NB = TOPO.n_modalities, TOPO.max_bins
 
 
 def _rand_model(key, sharp=False):
     ks = jax.random.split(key, 2)
-    a = jax.random.uniform(ks[0], (spaces.N_MODALITIES, spaces.MAX_BINS,
-                                   spaces.N_STATES), minval=0.05, maxval=3.0)
-    a = a * spaces.bins_mask()[:, :, None]
+    a = jax.random.uniform(ks[0], (M, NB, S), minval=0.05, maxval=3.0)
+    a = a * spaces.bins_mask(TOPO)[:, :, None]
     if sharp:
         a = a ** 8
-    b = jax.random.uniform(ks[1], (policies.N_ACTIONS, spaces.N_STATES,
-                                   spaces.N_STATES), minval=0.01, maxval=1.0)
+    b = jax.random.uniform(ks[1], (A, S, S), minval=0.01, maxval=1.0)
     m = generative.init_generative_model(CFG)
     return m._replace(a_counts=a, b_counts=b)
 
 
 # ---------------------------------------------------------------- spaces
 def test_state_space_size():
-    assert spaces.N_STATES == 243 and spaces.N_LEVELS ** 5 == 243
+    assert S == 243 and TOPO.n_levels ** TOPO.n_state_factors == 243
 
 
 def test_state_index_roundtrip():
-    tbl = spaces.state_factor_table()
+    tbl = spaces.state_factor_table(TOPO)
     for s in (0, 1, 42, 242):
-        assert spaces.state_index(tbl[s]) == s
+        assert spaces.state_index(tbl[s], TOPO) == s
 
 
 def test_policy_table_paper_constants():
-    t = np.asarray(policies.policy_table())
+    t = np.asarray(policies.policy_table(TOPO))
     assert t.shape == (20, 3)
     np.testing.assert_allclose(t.sum(1), 1.0, atol=1e-6)
     np.testing.assert_allclose(t[0], [0.33, 0.33, 0.34])      # balanced
@@ -63,11 +64,9 @@ def test_discretization_edges():
 def test_belief_update_is_distribution(seed):
     key = jax.random.key(seed)
     m = _rand_model(key)
-    q0 = jax.random.dirichlet(jax.random.fold_in(key, 1),
-                              jnp.ones(spaces.N_STATES))
-    obs = jax.random.randint(jax.random.fold_in(key, 2),
-                             (spaces.N_MODALITIES,), 0, 2)
-    q1 = belief_mod.update_belief(m, q0, 3, obs)
+    q0 = jax.random.dirichlet(jax.random.fold_in(key, 1), jnp.ones(S))
+    obs = jax.random.randint(jax.random.fold_in(key, 2), (M,), 0, 2)
+    q1 = belief_mod.update_belief(m, q0, 3, obs, TOPO)
     q1 = np.asarray(q1)
     assert np.all(q1 >= 0)
     assert abs(q1.sum() - 1.0) < 1e-4
@@ -77,16 +76,16 @@ def test_belief_update_is_distribution(seed):
 def test_sharp_likelihood_reduces_entropy():
     key = jax.random.key(0)
     m = _rand_model(key, sharp=True)
-    q0 = jnp.ones(spaces.N_STATES) / spaces.N_STATES
+    q0 = jnp.ones(S) / S
     obs = jnp.asarray([1, 1, 1, 0])
-    q1 = belief_mod.update_belief(m, q0, 0, obs)
+    q1 = belief_mod.update_belief(m, q0, 0, obs, TOPO)
     assert float(belief_mod.belief_entropy(q1)) < float(
         belief_mod.belief_entropy(q0))
 
 
 def test_util_scrape_concentrates_on_matching_states():
-    logp = belief_mod.util_log_likelihood(jnp.asarray([2, 1, 0]))
-    tbl = spaces.state_factor_table()
+    logp = belief_mod.util_log_likelihood(jnp.asarray([2, 1, 0]), TOPO)
+    tbl = spaces.state_factor_table(TOPO)
     best = np.argmax(np.asarray(logp))
     assert tbl[best][2] == 2 and tbl[best][3] == 1 and tbl[best][4] == 0
 
@@ -96,8 +95,7 @@ def test_util_scrape_concentrates_on_matching_states():
 def test_efe_finite_and_probs_normalized(seed):
     key = jax.random.key(seed)
     m = _rand_model(key)
-    q = jax.random.dirichlet(jax.random.fold_in(key, 7),
-                             jnp.ones(spaces.N_STATES))
+    q = jax.random.dirichlet(jax.random.fold_in(key, 7), jnp.ones(S))
     bd = efe_mod.expected_free_energy(m, q, CFG)
     assert np.isfinite(np.asarray(bd.g)).all()
     assert np.all(np.asarray(bd.ambiguity) >= -1e-5)   # entropy is >= 0
@@ -108,26 +106,25 @@ def test_risk_prefers_matching_preferences():
     """An action whose predicted obs match C must have lower risk."""
     m = generative.init_generative_model(CFG)
     # craft A: state 0 emits the preferred bins w.p. ~1, state 242 the worst
-    a = np.full((spaces.N_MODALITIES, spaces.MAX_BINS, spaces.N_STATES),
-                1e-3, np.float32) * np.asarray(spaces.BINS_MASK)[:, :, None]
+    a = np.full((M, NB, S), 1e-3, np.float32) * spaces.bins_mask_np(
+        TOPO)[:, :, None]
     good = [0, 2, 0, 0]   # low latency, high rps, low queue, low err
     bad = [2, 0, 2, 1]
     for mod in range(4):
         a[mod, good[mod], 0] = 1.0
         a[mod, bad[mod], 242] = 1.0
     # B: action 0 -> state 0; action 1 -> state 242
-    b = np.full((policies.N_ACTIONS, spaces.N_STATES, spaces.N_STATES),
-                1e-6, np.float32)
+    b = np.full((A, S, S), 1e-6, np.float32)
     b[0, 0, :] = 1.0
     b[1, 242, :] = 1.0
     m = m._replace(a_counts=jnp.asarray(a), b_counts=jnp.asarray(b))
-    q = jnp.ones(spaces.N_STATES) / spaces.N_STATES
+    q = jnp.ones(S) / S
     bd = efe_mod.expected_free_energy(m, q, CFG)
     assert float(bd.risk[0]) < float(bd.risk[1])
 
 
 def test_cost_zero_for_balanced_max_for_extreme():
-    c = np.asarray(policies.policy_concentration_cost())
+    c = np.asarray(policies.policy_concentration_cost(TOPO))
     assert c[0] < 1e-3
     assert abs(c[5] - np.log(3)) < 1e-5
     assert np.all(c >= -1e-6)
@@ -144,9 +141,9 @@ def test_settle_weight_sigmoid_shape():
 
 
 def test_replay_ring_buffer():
-    buf = learning.init_replay(8)
+    buf = learning.init_replay(8, TOPO)
     for i in range(11):
-        q = jnp.zeros(spaces.N_STATES).at[i % spaces.N_STATES].set(1.0)
+        q = jnp.zeros(S).at[i % S].set(1.0)
         buf = learning.push_transition(buf, q, q, jnp.zeros(4, jnp.int32),
                                        i % 20, float(i))
     assert int(buf.size) == 8
@@ -158,14 +155,14 @@ def test_replay_ring_buffer():
 def test_slow_update_moves_counts_toward_observations():
     key = jax.random.key(0)
     m = generative.init_generative_model(CFG)
-    buf = learning.init_replay(CFG.replay_capacity)
-    q = jnp.zeros(spaces.N_STATES).at[5].set(1.0)
+    buf = learning.init_replay(CFG.replay_capacity, TOPO)
+    q = jnp.zeros(S).at[5].set(1.0)
     obs = jnp.asarray([2, 1, 0, 1], jnp.int32)
     for _ in range(50):
         buf = learning.push_transition(buf, q, q, obs, 7, 10.0)
     m2 = learning.slow_update(key, m, buf, CFG)
-    a0 = np.asarray(generative.normalize_a(m.a_counts))
-    a1 = np.asarray(generative.normalize_a(m2.a_counts))
+    a0 = np.asarray(generative.normalize_a(m.a_counts, TOPO))
+    a1 = np.asarray(generative.normalize_a(m2.a_counts, TOPO))
     assert a1[0, 2, 5] > a0[0, 2, 5]          # latency bin 2 more likely
     b0 = np.asarray(generative.normalize_b(m.b_counts))
     b1 = np.asarray(generative.normalize_b(m2.b_counts))

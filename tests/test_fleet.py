@@ -117,7 +117,7 @@ def test_fleet_rollout_closed_loop_shapes_and_sanity():
     assert trace.routing_weights.shape == (t, r, 3)
     assert trace.raw_obs.shape == (t, r, 4)
     acts = np.asarray(trace.actions)
-    assert acts.min() >= 0 and acts.max() < core.N_ACTIONS
+    assert acts.min() >= 0 and acts.max() < core.n_actions(CFG.topology)
     res = batched.summarize(est, trace.env)
     assert np.all(res.n_requests > 0)
     assert np.all(res.success_rate > 0.3)

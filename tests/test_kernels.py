@@ -20,12 +20,13 @@ KEY = jax.random.key(0)
 @pytest.mark.parametrize("r", [4, 16])
 def test_efe_kernel_matches_ref_and_core(r):
     cfg = generative.AifConfig()
+    topo = cfg.topology
     ks = jax.random.split(KEY, 3)
-    S, A = spaces.N_STATES, policies.N_ACTIONS
-    M, NB = spaces.N_MODALITIES, spaces.MAX_BINS
+    S, A = topo.n_states, policies.n_actions(topo)
+    M, NB = topo.n_modalities, topo.max_bins
     a_counts = (jax.random.uniform(ks[0], (r, M, NB, S), minval=0.1,
                                    maxval=2.0)
-                * spaces.bins_mask()[None, :, :, None])
+                * spaces.bins_mask(topo)[None, :, :, None])
     b_counts = jax.random.uniform(ks[1], (r, A, S, S), minval=0.01,
                                   maxval=1.0)
     c_log = jnp.tile(generative.nominal_c_log(cfg)[None], (r, 1, 1))
