@@ -1,0 +1,101 @@
+"""Perf-smoke gate: fail CI when fleet throughput regresses.
+
+Compares a freshly-measured ``BENCH_fleet.json`` against the committed
+baseline entry-by-entry (matched on workload name and R × T config; entries
+present on only one side are skipped, so quick-mode runs gate only the rows
+they measure) and exits non-zero when any matched entry's cell-windows/s
+drops more than ``--threshold`` (default 30%).
+
+Machine calibration: raw throughput tracks the runner's CPU as much as the
+code, so when both runs measured the largest common ``env`` row (the fluid
+engine alone — a hot path the AIF-side changes never touch), every other
+entry's baseline is rescaled by the observed env-speed ratio before
+comparison.  A slower runner then shifts *all* rows together and passes,
+while a fleet-loop regression shows up against the same-run anchor.  Pass
+``--no-calibrate`` for raw absolute comparison.
+
+    python benchmarks/check_perf_regression.py \
+        --baseline /tmp/BENCH_fleet.baseline.json --current BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _entries(path: str) -> dict[tuple, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if "entries" not in data:
+        # pre-PR3 schema: a single headline row
+        data = {"entries": [data]}
+    out = {}
+    for e in data["entries"]:
+        cfg = e.get("config", {})
+        out[(e["name"], cfg.get("r"), cfg.get("t"))] = e
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_fleet.json (copy it aside before "
+                         "the bench overwrites the repo-root file)")
+    ap.add_argument("--current", required=True,
+                    help="BENCH_fleet.json written by the fresh bench run")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional cell-windows/s drop")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip env-row machine-speed calibration")
+    args = ap.parse_args()
+
+    base = _entries(args.baseline)
+    cur = _entries(args.current)
+    matched = sorted(set(base) & set(cur))
+    if not matched:
+        print("no matching entries between baseline and current run; "
+              "nothing to gate")
+        return 0
+
+    scale = 1.0
+    anchor = None
+    if not args.no_calibrate:
+        env_keys = [k for k in matched if k[0] == "env"]
+        if env_keys:
+            anchor = max(env_keys, key=lambda k: (k[1] or 0) * (k[2] or 0))
+            b_env = base[anchor]["cell_windows_per_s"]
+            c_env = cur[anchor]["cell_windows_per_s"]
+            if b_env > 0 and c_env > 0:
+                scale = c_env / b_env
+            print(f"calibrating on env r={anchor[1]} t={anchor[2]}: "
+                  f"machine-speed ratio current/baseline = {scale:.3f}")
+
+    failed = False
+    for key in matched:
+        b = base[key]["cell_windows_per_s"]
+        c = cur[key]["cell_windows_per_s"]
+        expected = b * scale       # the anchor row passes by construction
+        drop = (expected - c) / expected if expected > 0 else 0.0
+        status = "OK"
+        if drop > args.threshold:
+            status, failed = "REGRESSION", True
+        name, r, t = key
+        print(f"{status:>10}  {name:<20} r={r:<5} t={t:<5} "
+              f"baseline={b:>12.1f} expected={expected:>12.1f} "
+              f"current={c:>12.1f} ({-100 * drop:+.1f}%)")
+    for key in sorted(set(base) ^ set(cur)):
+        side = "baseline-only" if key in base else "current-only"
+        print(f"{'skipped':>10}  {key[0]:<20} r={key[1]} t={key[2]} "
+              f"({side})")
+    if failed:
+        print(f"\nFAIL: cell-windows/s dropped more than "
+              f"{100 * args.threshold:.0f}% on at least one entry "
+              f"(after machine calibration)")
+        return 1
+    print("\nperf smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,11 +21,12 @@ from repro.core.agent import (AgentState, StepInfo, fast_step,
                               init_agent_state, slow_step, tick)
 from repro.core.belief import update_belief
 from repro.core.efe import EfeBreakdown, expected_free_energy, select_action
-from repro.core.fleet import (FleetGroup, FleetTrace, fleet_rollout,
-                              fleet_tick, hetero_fleet_rollout,
-                              init_fleet_state)
-from repro.core.generative import (AifConfig, GenerativeModel,
-                                   init_generative_model)
+from repro.core.fleet import (FleetGroup, FleetTrace, fleet_fast_step,
+                              fleet_light_step, fleet_rollout,
+                              fleet_slow_step, fleet_tick,
+                              hetero_fleet_rollout, init_fleet_state)
+from repro.core.generative import (AifConfig, GenerativeModel, ModelCache,
+                                   derive_cache, init_generative_model)
 from repro.core.learning import ReplayBuffer, init_replay, slow_update
 from repro.core.policies import (BALANCED_ACTION, generate_policy_table,
                                  n_actions, policy_table, routing_weights)
@@ -37,8 +38,10 @@ from repro.core.topology import (TOPOLOGIES, PolicySpec, Topology,
 __all__ = [
     "AgentState", "StepInfo", "fast_step", "init_agent_state", "slow_step",
     "tick", "update_belief", "EfeBreakdown", "expected_free_energy",
-    "select_action", "FleetGroup", "FleetTrace", "fleet_rollout",
-    "fleet_tick", "hetero_fleet_rollout", "init_fleet_state", "AifConfig",
+    "select_action", "FleetGroup", "FleetTrace", "fleet_fast_step",
+    "fleet_light_step", "fleet_rollout", "fleet_slow_step", "fleet_tick",
+    "hetero_fleet_rollout", "init_fleet_state", "AifConfig", "ModelCache",
+    "derive_cache",
     "GenerativeModel", "init_generative_model", "ReplayBuffer", "init_replay",
     "slow_update", "BALANCED_ACTION", "generate_policy_table", "n_actions",
     "policy_table", "routing_weights", "DiscretizationConfig",

@@ -27,6 +27,9 @@ from repro.core import generative, learning, policies, preferences, spaces
 
 class AgentState(NamedTuple):
     model: generative.GenerativeModel
+    # Quasi-static normalized model (refreshed by slow_step only — the fast
+    # loop reads it instead of re-normalizing pseudo-counts every tick).
+    cache: generative.ModelCache
     belief: jnp.ndarray              # (S,) current posterior q(s_t)
     replay: learning.ReplayBuffer
     prev_action: jnp.ndarray         # () int32 — action currently applied
@@ -51,7 +54,11 @@ def init_agent_state(cfg: generative.AifConfig) -> AgentState:
     model = generative.init_generative_model(cfg)
     return AgentState(
         model=model,
-        belief=model.d_prior,
+        cache=generative.derive_cache(model, cfg.topology),
+        # materialized copy: belief and d_prior must be distinct buffers or
+        # donating the state through tick/fleet_rollout would donate one
+        # buffer twice
+        belief=jnp.array(model.d_prior, copy=True),
         replay=learning.init_replay(cfg.replay_capacity, cfg.topology),
         prev_action=jnp.asarray(policies.BALANCED_ACTION, jnp.int32),
         dt_since_change=jnp.zeros((), jnp.float32),
@@ -83,7 +90,7 @@ def pre_action(state: AgentState,
     q_prev = state.belief
     q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
                                       obs_bins, cfg.topology, util_bins,
-                                      util_valid)
+                                      util_valid, cache=state.cache)
 
     replay = learning.push_transition(
         state.replay, q_prev, q_next, obs_bins, state.prev_action,
@@ -116,6 +123,7 @@ def apply_action(state: AgentState,
 
     new_state = AgentState(
         model=model,
+        cache=state.cache,
         belief=q_next,
         replay=replay,
         prev_action=action.astype(jnp.int32),
@@ -153,7 +161,7 @@ def fast_step(state: AgentState,
         state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
 
     # --- action selection via EFE (Eq. 1) ----------------------------------
-    sampled, bd = efe_mod.select_action(key, model, q_next, cfg)
+    sampled, bd = efe_mod.select_action(key, model, q_next, cfg, state.cache)
     new_state, action = apply_action(state, model, q_next, replay, error_ema,
                                      unstable, sampled, cfg)
 
@@ -171,12 +179,19 @@ def fast_step(state: AgentState,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def slow_step(state: AgentState, key: jax.Array,
               cfg: generative.AifConfig) -> AgentState:
-    """One 10-second model-learning step (replay batch update of A, B)."""
+    """One 10-second model-learning step (replay batch update of A, B).
+
+    The only in-loop writer of the pseudo-counts — refreshing the normalized
+    :class:`~repro.core.generative.ModelCache` here keeps the fast loop's
+    cached tensors consistent by construction.
+    """
     model = learning.slow_update(key, state.model, state.replay, cfg)
-    return state._replace(model=model)
+    return state._replace(model=model,
+                          cache=generative.derive_cache(model, cfg.topology))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("state",))
 def tick(state: AgentState,
          obs_bins: jnp.ndarray,
          raw_error_rate: jnp.ndarray,

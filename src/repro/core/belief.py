@@ -20,9 +20,21 @@ from repro.core.topology import Topology
 
 def predict_prior(b_counts: jnp.ndarray, belief: jnp.ndarray,
                   prev_action) -> jnp.ndarray:
-    """One-step state prediction ``B_{a} · q`` (the filter's prior)."""
-    b = generative.normalize_b(b_counts)[prev_action]      # (S', S)
-    prior = b @ belief
+    """One-step state prediction ``B_{a} · q`` (the filter's prior).
+
+    Slices the one action row *before* normalizing, so only (S, S) counts are
+    touched instead of the full (A, S, S) tensor (bit-identical result: the
+    per-column normalization is elementwise in the action axis).
+    """
+    row = b_counts[prev_action]                            # (S', S)
+    b = row / jnp.maximum(jnp.sum(row, axis=0, keepdims=True), 1e-30)
+    return prior_from_normalized(b, belief)
+
+
+def prior_from_normalized(b_row: jnp.ndarray,
+                          belief: jnp.ndarray) -> jnp.ndarray:
+    """``B_a · q`` for an already-normalized (S', S) transition row."""
+    prior = b_row @ belief
     return prior / jnp.maximum(jnp.sum(prior), 1e-30)
 
 
@@ -39,9 +51,20 @@ def log_likelihood(a_counts: jnp.ndarray, obs_bins: jnp.ndarray,
       (S,) log-likelihood vector.
     """
     a = generative.normalize_a(a_counts, topo)             # (M, max_bins, S)
-    onehot = spaces.one_hot_observation(obs_bins, topo.max_bins)  # (M, B)
-    per_modality = jnp.einsum("mb,mbs->ms", onehot, a)     # p(o_m | s)
-    return jnp.sum(jnp.log(jnp.maximum(per_modality, 1e-16)), axis=0)
+    return log_likelihood_from_normalized(a, obs_bins)
+
+
+def log_likelihood_from_normalized(na: jnp.ndarray,
+                                   obs_bins: jnp.ndarray) -> jnp.ndarray:
+    """``log p(o_t | s)`` from an already-normalized A (any batch shape).
+
+    Args:
+      na: (..., M, max_bins, S) normalized observation model.
+      obs_bins: (..., M) int observation bin per modality.
+    """
+    per_modality = jnp.take_along_axis(
+        na, obs_bins[..., None, None], axis=-2)[..., 0, :]   # (..., M, S)
+    return jnp.sum(jnp.log(jnp.maximum(per_modality, 1e-16)), axis=-2)
 
 
 def util_log_likelihood(util_bins: jnp.ndarray, topo: Topology,
@@ -66,28 +89,42 @@ def util_log_likelihood(util_bins: jnp.ndarray, topo: Topology,
     return jnp.sum(jnp.log(p), axis=-1)                   # (S,)
 
 
+def posterior_from_logp(logp: jnp.ndarray) -> jnp.ndarray:
+    """Normalize a log-posterior into a distribution (shared by all paths)."""
+    logp = logp - jnp.max(logp)
+    q = jnp.exp(logp)
+    return q / jnp.maximum(jnp.sum(q), 1e-30)
+
+
 def update_belief(model: generative.GenerativeModel,
                   belief: jnp.ndarray,
                   prev_action,
                   obs_bins: jnp.ndarray,
                   topo: Topology,
                   util_bins: jnp.ndarray | None = None,
-                  util_valid=False) -> jnp.ndarray:
+                  util_valid=False,
+                  cache: generative.ModelCache | None = None) -> jnp.ndarray:
     """Posterior ``q(s_t) ∝ p(o_t|s_t) · B_{a_{t-1}} q(s_{t-1})`` (Eq. 2).
 
     When a fresh utilization scrape is available (every 10th fast step) its
     likelihood multiplies in as additional evidence on the hidden per-tier
     factors; ``util_valid`` gates it jit-safely.
+
+    With ``cache`` (the quasi-static :class:`~repro.core.generative.ModelCache`
+    refreshed on slow-update ticks) the hot path reads pre-normalized tensors
+    instead of re-normalizing the full pseudo-count model every second.
     """
-    prior = predict_prior(model.b_counts, belief, prev_action)
-    logp = log_likelihood(model.a_counts, obs_bins, topo) + jnp.log(
-        jnp.maximum(prior, 1e-30))
+    if cache is not None:
+        prior = prior_from_normalized(cache.nb[prev_action], belief)
+        loglik = log_likelihood_from_normalized(cache.na, obs_bins)
+    else:
+        prior = predict_prior(model.b_counts, belief, prev_action)
+        loglik = log_likelihood(model.a_counts, obs_bins, topo)
+    logp = loglik + jnp.log(jnp.maximum(prior, 1e-30))
     if util_bins is not None:
         logp = logp + jnp.where(util_valid,
                                 util_log_likelihood(util_bins, topo), 0.0)
-    logp = logp - jnp.max(logp)
-    q = jnp.exp(logp)
-    return q / jnp.maximum(jnp.sum(q), 1e-30)
+    return posterior_from_logp(logp)
 
 
 def belief_entropy(belief: jnp.ndarray) -> jnp.ndarray:

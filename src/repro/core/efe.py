@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import generative, policies, spaces
-from repro.core.topology import Topology
 
 
 class EfeBreakdown(NamedTuple):
@@ -38,39 +37,28 @@ class EfeBreakdown(NamedTuple):
     action_probs: jnp.ndarray  # (A,) softmax(−β G)
 
 
-def predicted_states(b_counts: jnp.ndarray,
-                     belief: jnp.ndarray) -> jnp.ndarray:
-    """ŝ_a = B_a · q for every action.  -> (A, S)."""
-    b = generative.normalize_b(b_counts)                  # (A, S', S)
-    pred = jnp.einsum("ats,s->at", b, belief)
-    return pred / jnp.maximum(jnp.sum(pred, axis=-1, keepdims=True), 1e-30)
-
-
-def predicted_observations(a_counts: jnp.ndarray,
-                           s_pred: jnp.ndarray,
-                           topo: Topology) -> jnp.ndarray:
-    """ô_m(a) = A_m · ŝ_a.  -> (A, M, max_bins)."""
-    a = generative.normalize_a(a_counts, topo)            # (M, B, S)
-    return jnp.einsum("mbs,as->amb", a, s_pred)
-
-
-def ambiguity_per_state(a_counts: jnp.ndarray,
-                        topo: Topology) -> jnp.ndarray:
-    """Σ_m H[A_m(· | s)] for every state.  -> (S,)."""
-    a = generative.normalize_a(a_counts, topo)            # (M, B, S)
-    mask = spaces.bins_mask(topo)[:, :, None]
-    h = -jnp.sum(jnp.where(mask > 0, a * jnp.log(jnp.maximum(a, 1e-16)), 0.0),
-                 axis=1)                                  # (M, S)
-    return jnp.sum(h, axis=0)
-
-
 def expected_free_energy(model: generative.GenerativeModel,
                          belief: jnp.ndarray,
-                         cfg: generative.AifConfig) -> EfeBreakdown:
-    """G(a) for all candidate actions (Eq. 1)."""
+                         cfg: generative.AifConfig,
+                         cache: generative.ModelCache | None = None
+                         ) -> EfeBreakdown:
+    """G(a) for all candidate actions (Eq. 1).
+
+    With ``cache`` the quasi-static normalized model (nb, na, amb) is read
+    instead of re-derived from pseudo-counts; only the preference term, which
+    tracks the per-tick adaptive ``c_log``, is computed fresh.
+    """
     topo = cfg.topology
-    s_pred = predicted_states(model.b_counts, belief)              # (A, S)
-    o_pred = predicted_observations(model.a_counts, s_pred, topo)  # (A, M, B)
+    if cache is not None:
+        nb, na, amb_s = cache.nb, cache.na, cache.amb
+    else:
+        nb = generative.normalize_b(model.b_counts)
+        na = generative.normalize_a(model.a_counts, topo)
+        amb_s = generative.ambiguity_from_normalized(na, topo)
+    s_pred = jnp.einsum("ats,s->at", nb, belief)                   # (A, S)
+    s_pred = s_pred / jnp.maximum(jnp.sum(s_pred, axis=-1, keepdims=True),
+                                  1e-30)
+    o_pred = jnp.einsum("mbs,as->amb", na, s_pred)                 # (A, M, B)
 
     # Risk: KL(ô ‖ σ(C)) per modality, summed.
     c = generative.c_probs(model.c_log, topo)                # (M, B)
@@ -81,7 +69,6 @@ def expected_free_energy(model: generative.GenerativeModel,
                    axis=(1, 2))                              # (A,)
 
     # Ambiguity: expected conditional observation entropy under ŝ_a.
-    amb_s = ambiguity_per_state(model.a_counts, topo)        # (S,)
     ambiguity = s_pred @ amb_s                               # (A,)
 
     cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
@@ -95,9 +82,10 @@ def expected_free_energy(model: generative.GenerativeModel,
 def select_action(key: jax.Array,
                   model: generative.GenerativeModel,
                   belief: jnp.ndarray,
-                  cfg: generative.AifConfig):
+                  cfg: generative.AifConfig,
+                  cache: generative.ModelCache | None = None):
     """Sample ``a ~ softmax(−β G)``.  Returns (action, EfeBreakdown)."""
-    bd = expected_free_energy(model, belief, cfg)
+    bd = expected_free_energy(model, belief, cfg, cache)
     action = jax.random.categorical(key, jnp.log(
         jnp.maximum(bd.action_probs, 1e-30)))
     return action, bd

@@ -9,17 +9,28 @@ onto the MXU via the fused Pallas EFE kernel (:mod:`repro.kernels.efe`).
 
 Two execution paths for one control tick:
 
-* ``fleet_tick(..., fused=False)`` — ``jax.vmap`` of the single-agent
-  :func:`repro.core.agent.tick` (reference semantics),
-* ``fleet_tick(..., fused=True)`` — the same math with the EFE evaluation
-  routed through :func:`repro.kernels.efe.ops.fleet_efe`, i.e. one fused
-  (R, A, S, S) kernel launch instead of R independent einsums
-  (``use_pallas=True`` selects the Pallas TPU kernel, else the XLA oracle).
+* ``fused=False`` — ``jax.vmap`` of the single-agent
+  :func:`repro.core.agent.fast_step` (reference semantics),
+* ``fused=True`` — the same math with the belief update *and* the EFE
+  evaluation fused into one (R, A, S, S) launch
+  (:func:`repro.kernels.efe.ops.fleet_belief_efe`) instead of R independent
+  einsums (``use_pallas=True`` selects the Pallas TPU kernel, else the XLA
+  oracle).
 
-:func:`fleet_rollout` closes the loop on-device: a single ``jax.lax.scan``
-alternates fleet ticks with a batched environment step (e.g. the fluid engine
-in :mod:`repro.envsim.batched`), so a whole fleet-of-routers experiment runs
-jit-compiled end to end with zero Python in the loop.
+Both paths read the quasi-static :class:`~repro.core.generative.ModelCache`
+(normalized A/B + per-state ambiguity) that
+:func:`repro.core.agent.slow_step` refreshes once per slow period — the
+paper's 1 s / 10 s timescale separation (§4.4) means nothing else about the
+model changes between slow ticks, so the fast loop never re-normalizes
+pseudo-counts.
+
+:func:`fleet_rollout` closes the loop on-device as a *nested*
+``jax.lax.scan``: the outer scan walks slow periods, the inner scan runs the
+``slow_period_s / fast_period_s`` fast ticks of one period, and the slow
+learning step executes exactly once per period (instead of being
+computed-and-discarded every tick).  Agent and environment state buffers are
+donated through :func:`fleet_tick` / :func:`fleet_rollout`, so entering a
+tick never copies the (replay-buffer-dominated) fleet state.
 
 All functions below take/return a *batched* :class:`~repro.core.agent.AgentState`
 whose leaves carry a leading router dimension R.
@@ -31,11 +42,12 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import agent as agent_mod
 from repro.core import belief as belief_mod
 from repro.core import efe as efe_mod
-from repro.core import generative, policies, spaces
+from repro.core import generative, learning, policies, preferences, spaces
 from repro.kernels.efe import ops as efe_ops
 
 
@@ -48,6 +60,31 @@ def init_fleet_state(cfg: generative.AifConfig,
 
 
 # ------------------------------------------------------------------ one tick
+def _fused_evidence(state: agent_mod.AgentState,
+                    obs_bins: jnp.ndarray,
+                    raw_error_rate: jnp.ndarray,
+                    cfg: generative.AifConfig,
+                    util_bins, util_valid):
+    """Per-tick evidence shared by the fused selecting and held steps:
+    adaptive preferences (paper §4.2 — the only per-tick model change) and
+    the observation log-likelihood gathered from the cached normalized A.
+
+    Returns (model-with-updated-c_log, error_ema, unstable, loglik).
+    """
+    topo = cfg.topology
+    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
+    c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
+    model = state.model._replace(c_log=c_log)
+
+    loglik = belief_mod.log_likelihood_from_normalized(state.cache.na,
+                                                       obs_bins)
+    if util_bins is not None:
+        util_ll = jax.vmap(
+            lambda u: belief_mod.util_log_likelihood(u, topo))(util_bins)
+        loglik = loglik + jnp.where(util_valid, util_ll, 0.0)
+    return model, error_ema, unstable, loglik
+
+
 def _fused_fast_step(state: agent_mod.AgentState,
                      obs_bins: jnp.ndarray,
                      raw_error_rate: jnp.ndarray,
@@ -56,43 +93,159 @@ def _fused_fast_step(state: agent_mod.AgentState,
                      util_bins: jnp.ndarray | None,
                      util_valid,
                      use_pallas: bool):
-    """:func:`repro.core.agent.fast_step` with the EFE term evaluated as one
-    fused fleet-kernel launch instead of R vmapped einsums.  The control-step
-    logic is shared with the single-agent path (``pre_action`` /
-    ``apply_action``); only the selection sandwich differs.  The returned
-    ``StepInfo.efe`` carries the fused G and action probabilities; the
-    risk/ambiguity diagnostics are not split out by the fused kernel and
-    read zero.
+    """:func:`repro.core.agent.fast_step` with belief update *and* EFE fused
+    into one fleet-kernel launch (:func:`repro.kernels.efe.ops.fleet_belief_efe`)
+    reading the quasi-static model cache.  The control-step logic is shared
+    with the single-agent path (``apply_action``); only the
+    inference/selection sandwich differs.  The returned ``StepInfo.efe``
+    carries the fused G and action probabilities; the risk/ambiguity
+    diagnostics are not split out by the fused kernel and read zero.
     """
-    if util_bins is None:
-        pre = jax.vmap(lambda s, o, e: agent_mod.pre_action(s, o, e, cfg))(
-            state, obs_bins, raw_error_rate)
-    else:
-        pre = jax.vmap(
-            lambda s, o, e, u: agent_mod.pre_action(s, o, e, cfg, u,
-                                                    util_valid))(
-            state, obs_bins, raw_error_rate, util_bins)
-    model, q_next, replay, error_ema, unstable = pre
+    topo = cfg.topology
+    cache = state.cache
+    model, error_ema, unstable, loglik = _fused_evidence(
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
 
-    g = efe_ops.fleet_efe(model.a_counts, model.b_counts, model.c_log,
-                          q_next, cfg, use_pallas=use_pallas)      # (R, A)
+    # Fused Eq. 2 → Eq. 1: posterior + G in one launch, belief stays on-chip.
+    logc = generative.masked_log_c(model.c_log, topo)
+    g, q_next = efe_ops.fleet_belief_efe(
+        cache.nb, cache.na, logc, cache.amb, state.belief, state.prev_action,
+        loglik, cfg, use_pallas=use_pallas)                # (R, A), (R, S)
+
     probs = jax.nn.softmax(-cfg.beta * g, axis=-1)
     sampled = jax.vmap(
         lambda k, p: jax.random.categorical(
             k, jnp.log(jnp.maximum(p, 1e-30))))(keys, probs)
+
+    replay = jax.vmap(learning.push_transition)(
+        state.replay, state.belief, q_next, obs_bins, state.prev_action,
+        state.dt_since_change)
 
     # apply_action is elementwise over the router axis — call it unbatched
     new_state, action = agent_mod.apply_action(
         state, model, q_next, replay, error_ema, unstable, sampled, cfg)
 
     zeros = jnp.zeros_like(g)
-    cost = cfg.cost_weight * policies.policy_concentration_cost(cfg.topology)
+    cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
     info = agent_mod.StepInfo(
         action=action,
-        routing_weights=policies.routing_weights(action, cfg.topology),
+        routing_weights=policies.routing_weights(action, topo),
         efe=efe_mod.EfeBreakdown(
             g=g, risk=zeros, ambiguity=zeros,
             cost=jnp.broadcast_to(cost, g.shape), action_probs=probs),
+        belief_entropy=jax.vmap(belief_mod.belief_entropy)(q_next),
+        unstable=unstable,
+        obs_bins=obs_bins,
+    )
+    return new_state, info
+
+
+def fleet_fast_step(state: agent_mod.AgentState,
+                    obs_bins: jnp.ndarray,
+                    raw_error_rate: jnp.ndarray,
+                    keys: jax.Array,
+                    cfg: generative.AifConfig,
+                    util_bins: jnp.ndarray | None = None,
+                    util_valid=False,
+                    *,
+                    fused: bool = False,
+                    use_pallas: bool = False):
+    """One fast step (belief → EFE → action) for the fleet; no slow learning.
+
+    ``keys`` are the per-router *fast* keys (one categorical draw each).
+    """
+    if fused:
+        return _fused_fast_step(state, obs_bins, raw_error_rate, keys, cfg,
+                                util_bins, util_valid, use_pallas)
+    if util_bins is None:
+        return jax.vmap(
+            lambda s, o, e, k: agent_mod.fast_step(s, o, e, k, cfg)
+        )(state, obs_bins, raw_error_rate, keys)
+    return jax.vmap(
+        lambda s, o, e, k, u: agent_mod.fast_step(s, o, e, k, cfg, u,
+                                                  util_valid)
+    )(state, obs_bins, raw_error_rate, keys, util_bins)
+
+
+# -------------------------------------------------------- light (held) ticks
+def _zero_breakdown(r: int, cfg: generative.AifConfig) -> efe_mod.EfeBreakdown:
+    z = jnp.zeros((r, policies.n_actions(cfg.topology)), jnp.float32)
+    return efe_mod.EfeBreakdown(g=z, risk=z, ambiguity=z, cost=z,
+                                action_probs=z)
+
+
+def _light_step_single(state: agent_mod.AgentState,
+                       obs_bins: jnp.ndarray,
+                       raw_error_rate: jnp.ndarray,
+                       cfg: generative.AifConfig,
+                       util_bins, util_valid):
+    """Single-agent fast step on a *held* (non-dwell) tick: belief update and
+    bookkeeping only — the EFE term is skipped because ``apply_action`` would
+    discard the sampled action anyway (``t % dwell != 0``).  Bit-identical to
+    :func:`repro.core.agent.fast_step` state evolution on such ticks."""
+    model, q_next, replay, error_ema, unstable = agent_mod.pre_action(
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+    new_state, action = agent_mod.apply_action(
+        state, model, q_next, replay, error_ema, unstable,
+        state.prev_action, cfg)
+    return new_state, (action, q_next, unstable)
+
+
+def _fused_light_step(state: agent_mod.AgentState,
+                      obs_bins: jnp.ndarray,
+                      raw_error_rate: jnp.ndarray,
+                      cfg: generative.AifConfig,
+                      util_bins, util_valid):
+    """Fleet-batched held tick for the fused path (no kernel launch): the
+    cached-model belief update alone, via the same posterior math as the
+    fused kernel's oracle twin
+    (:func:`repro.kernels.efe.ref.belief_posterior_ref`)."""
+    model, error_ema, unstable, loglik = _fused_evidence(
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+    q_next = efe_ops.fleet_belief_posterior(
+        state.cache.nb, state.belief, state.prev_action, loglik)
+
+    replay = jax.vmap(learning.push_transition)(
+        state.replay, state.belief, q_next, obs_bins, state.prev_action,
+        state.dt_since_change)
+    new_state, action = agent_mod.apply_action(
+        state, model, q_next, replay, error_ema, unstable,
+        state.prev_action, cfg)
+    return new_state, (action, q_next, unstable)
+
+
+def fleet_light_step(state: agent_mod.AgentState,
+                     obs_bins: jnp.ndarray,
+                     raw_error_rate: jnp.ndarray,
+                     cfg: generative.AifConfig,
+                     util_bins: jnp.ndarray | None = None,
+                     util_valid=False,
+                     *,
+                     fused: bool = False):
+    """Fleet fast step for a tick whose clock is off the action-dwell cadence
+    (``t % dwell != 0`` for every router): the sampled action would be
+    discarded, so the EFE evaluation — the dominant per-tick cost, streaming
+    the whole (R, A, S, S) cached B — is skipped entirely.  State evolution
+    is bit-identical to :func:`fleet_fast_step` on such ticks; the returned
+    ``StepInfo.efe`` diagnostics read zero (the closed-loop rollout does not
+    trace them).
+    """
+    if fused:
+        new_state, (action, q_next, unstable) = _fused_light_step(
+            state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+    elif util_bins is None:
+        new_state, (action, q_next, unstable) = jax.vmap(
+            lambda s, o, e: _light_step_single(s, o, e, cfg, None, False)
+        )(state, obs_bins, raw_error_rate)
+    else:
+        new_state, (action, q_next, unstable) = jax.vmap(
+            lambda s, o, e, u: _light_step_single(s, o, e, cfg, u,
+                                                  util_valid)
+        )(state, obs_bins, raw_error_rate, util_bins)
+    info = agent_mod.StepInfo(
+        action=action,
+        routing_weights=policies.routing_weights(action, cfg.topology),
+        efe=_zero_breakdown(action.shape[0], cfg),
         belief_entropy=jax.vmap(belief_mod.belief_entropy)(q_next),
         unstable=unstable,
         obs_bins=obs_bins,
@@ -108,8 +261,37 @@ def _select_learned(state, learned, do_learn):
     return jax.tree_util.tree_map(pick, state, learned)
 
 
+def _slow_learn(state: agent_mod.AgentState, keys: jax.Array,
+                cfg: generative.AifConfig) -> agent_mod.AgentState:
+    """Vmapped slow learning step (module-level so tests can instrument the
+    per-execution call count of the slow path)."""
+    return jax.vmap(lambda s, k: agent_mod.slow_step(s, k, cfg))(state, keys)
+
+
+def fleet_slow_step(state: agent_mod.AgentState, keys: jax.Array,
+                    cfg: generative.AifConfig) -> agent_mod.AgentState:
+    """Slow learning + model-cache refresh for routers whose clock is on a
+    slow-period boundary (``t % period == 0``); other routers pass through.
+
+    ``slow_step`` only writes the model and its cache, so only those leaves
+    are selected — the replay buffer (the bulk of the state) passes through
+    untouched.  For the common all-aligned fleet the select degenerates to
+    taking the learned tensors outright (no copy).
+    """
+    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
+    do_learn = (state.t % period) == 0                     # (R,)
+    learned = _slow_learn(state, keys, cfg)
+    new_model, new_cache = jax.lax.cond(
+        jnp.all(do_learn),
+        lambda: (learned.model, learned.cache),
+        lambda: _select_learned((state.model, state.cache),
+                                (learned.model, learned.cache), do_learn))
+    return state._replace(model=new_model, cache=new_cache)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "fused", "use_pallas"))
+                   static_argnames=("cfg", "fused", "use_pallas"),
+                   donate_argnames=("state",))
 def fleet_tick(state: agent_mod.AgentState,
                obs_bins: jnp.ndarray,
                raw_error_rate: jnp.ndarray,
@@ -120,33 +302,36 @@ def fleet_tick(state: agent_mod.AgentState,
                *,
                fused: bool = False,
                use_pallas: bool = False):
-    """One control tick for the whole fleet.
+    """One control tick for the whole fleet (fast step + gated slow step).
+
+    ``state`` is donated: the caller's buffers are consumed and must not be
+    reused after the call (re-init or keep the returned state instead).
+    Prefer :func:`fleet_rollout` for closed loops — its nested scan runs the
+    slow step once per slow period instead of computing-and-discarding it on
+    the 9 intermediate ticks the way this single-tick entry point must.
 
     Args:
       state: batched AgentState (leading dim R on every leaf).
       obs_bins: (R, M) int32.
       raw_error_rate: (R,) float32.
       keys: (R,) typed PRNG keys (one per router).
+      cfg: static hyper-parameters (carries the topology).
       util_bins: optional (R, K) int32 utilization scrape in state-factor
         order (heaviest tier first).
       util_valid: scalar gate for util_bins (True on scrape ticks; traced ok).
-      fused: route the EFE evaluation through the fused fleet kernel
-        (:func:`repro.kernels.efe.ops.fleet_efe`) instead of vmapping the
-        per-router einsums.
+      fused: route belief update + EFE through the fused fleet kernel
+        (:func:`repro.kernels.efe.ops.fleet_belief_efe`) instead of vmapping
+        the per-router einsums.
       use_pallas: with ``fused=True``, dispatch the Pallas TPU kernel rather
         than the XLA oracle.
     """
     if fused:
         ks = jax.vmap(jax.random.split)(keys)              # (R, 2) keys
         k_fast, k_slow = ks[:, 0], ks[:, 1]
-        state, info = _fused_fast_step(state, obs_bins, raw_error_rate,
-                                       k_fast, cfg, util_bins, util_valid,
-                                       use_pallas)
-        period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
-        do_learn = (state.t % period) == 0                 # (R,)
-        learned = jax.vmap(
-            lambda s, k: agent_mod.slow_step(s, k, cfg))(state, k_slow)
-        return _select_learned(state, learned, do_learn), info
+        state, info = fleet_fast_step(state, obs_bins, raw_error_rate,
+                                      k_fast, cfg, util_bins, util_valid,
+                                      fused=True, use_pallas=use_pallas)
+        return fleet_slow_step(state, k_slow, cfg), info
 
     if util_bins is None:
         return jax.vmap(
@@ -173,10 +358,6 @@ class FleetTrace(NamedTuple):
     env: Any                      # environment info pytree (engine-specific)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("env_step", "n_steps", "cfg", "disc",
-                                    "util_edges", "util_period", "fused",
-                                    "use_pallas"))
 def fleet_rollout(agent_state: agent_mod.AgentState,
                   env_state,
                   env_step: Callable,
@@ -188,15 +369,35 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
                   util_period: int = 10,
                   *,
                   fused: bool = False,
-                  use_pallas: bool = False):
-    """Closed-loop fleet experiment as one on-device ``lax.scan``.
+                  use_pallas: bool = False,
+                  t0: int | None = None):
+    """Closed-loop fleet experiment as one on-device *nested* ``lax.scan``.
 
     Each of the ``n_steps`` control windows: discretize the previous window's
-    observations, run :func:`fleet_tick` (belief update → EFE → action), apply
-    the selected routing weights to the batched environment, observe.  The
-    observation plumbing mirrors :class:`repro.envsim.routers.AifRouter`
+    observations, run one fleet fast step (belief update → EFE → action),
+    apply the selected routing weights to the batched environment, observe.
+    The observation plumbing mirrors :class:`repro.envsim.routers.AifRouter`
     (same discretization, same 10-second utilization scrape in (H, M, L)
     order) so a fleet cell behaves like the single-router harness.
+
+    The scan is nested to exploit the paper's timescale separation: the outer
+    scan walks slow periods (``period = slow_period_s / fast_period_s``),
+    the inner scan runs the ``period`` fast ticks of one period, and
+    :func:`fleet_slow_step` (replay-batch learning + model-cache refresh)
+    executes exactly once per period — at the boundary tick, with that
+    tick's slow key, which reproduces the per-tick reference semantics
+    bit-for-bit.  Within a period, ticks off the action-dwell cadence skip
+    the EFE evaluation (:func:`fleet_light_step`).  Both schedules are
+    compiled against the fleet's *clock phase*: inferred from
+    ``agent_state.t`` when it is a concrete uniform array (so chaining
+    rollouts through the returned state keeps the cadences correct), or
+    passed explicitly via ``t0`` when the state is traced.  Fleets with
+    non-uniform clocks fall back to a flat per-tick scan with per-router
+    slow gating (correct, but without the once-per-period savings).
+
+    ``agent_state`` and ``env_state`` are donated — entering the rollout
+    moves the fleet buffers instead of copying them (the replay buffer
+    dominates: R × capacity × 2|S| floats); reuse the *returned* states.
 
     Args:
       agent_state: batched AgentState (leading dim R).
@@ -211,10 +412,53 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
         disc edge rows and the env's ``raw_obs`` columns must both match the
         topology's modalities (the fluid engine emits the default four).
       util_edges: raw-utilization level edges (default: the topology's).
+      t0: fast ticks already elapsed on every router's clock (static).
+        Only needed when ``agent_state.t`` is a tracer; concrete states are
+        introspected.  Must equal the actual clock or the dwell/slow
+        cadences compile against the wrong phase.
 
     Returns:
       (final agent state, final env state, :class:`FleetTrace`).
     """
+    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
+    if t0 is not None:
+        clock_phase = int(t0) % period
+    else:
+        t = agent_state.t
+        if isinstance(t, jax.core.Tracer):
+            raise ValueError(
+                "fleet_rollout cannot infer the fleet clock from a traced "
+                "agent_state; pass t0= explicitly (the number of fast ticks "
+                "already elapsed — 0 for a fresh fleet).  Without it the "
+                "dwell/slow schedules would compile against the wrong "
+                "phase and silently freeze action selection.")
+        vals = np.unique(np.asarray(t))
+        clock_phase = (int(vals[0]) % period if vals.size == 1
+                       else None)        # mixed clocks -> flat safe mode
+    return _fleet_rollout_impl(agent_state, env_state, env_step, n_steps,
+                               key, cfg, disc, util_edges, util_period,
+                               fused=fused, use_pallas=use_pallas,
+                               clock_phase=clock_phase)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("env_step", "n_steps", "cfg", "disc",
+                                    "util_edges", "util_period", "fused",
+                                    "use_pallas", "clock_phase"),
+                   donate_argnames=("agent_state", "env_state"))
+def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
+                        env_state,
+                        env_step: Callable,
+                        n_steps: int,
+                        key: jax.Array,
+                        cfg: generative.AifConfig,
+                        disc: spaces.DiscretizationConfig | None = None,
+                        util_edges: tuple[float, ...] | None = None,
+                        util_period: int = 10,
+                        *,
+                        fused: bool = False,
+                        use_pallas: bool = False,
+                        clock_phase: int | None = 0):
     topo = cfg.topology
     disc = disc or spaces.DiscretizationConfig()
     if len(disc.modality_edges()) != topo.n_modalities:
@@ -232,33 +476,151 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
             f"(out-of-range bins would make the utilization scrape match "
             f"no state)")
     edges = jnp.asarray(util_edges, jnp.float32)
+    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
+    dwell = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
+    # Dwell blocking: on ticks with t % dwell != 0 the sampled action is
+    # discarded by apply_action and the rollout does not trace G, so the EFE
+    # evaluation (the dominant per-tick cost — it streams the full
+    # (R, A, S, S) cached B) can be skipped with bit-identical state
+    # evolution.  Requires the dwell pattern to be static within a period
+    # and the fleet clock phase to be known (clock_phase is not None).
+    dwell_blocked = (dwell > 1 and period % dwell == 0
+                     and clock_phase is not None)
 
-    def step(carry, t_idx):
-        ast, est, raw_obs, tier_util, k = carry
+    def tick_body(carry, t_idx, light: bool):
+        ast, est, raw_obs, tier_util, k, _ = carry
         k, k_env, k_agents = jax.random.split(k, 3)
         keys = jax.random.split(k_agents, r)
+        ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
+        k_fast, k_slow = ks[:, 0], ks[:, 1]
         obs_bins = spaces.discretize_observation(raw_obs, disc)
-        util_hml = tier_util[:, ::-1]      # tier order -> state-factor order
+        util_hml = tier_util[:, ::-1]  # tier order -> state-factor order
         util_bins = jnp.sum(util_hml[..., None] >= edges, axis=-1
                             ).astype(jnp.int32)
         util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
-        ast, info = fleet_tick(ast, obs_bins, raw_obs[:, 3], keys, cfg,
-                               util_bins, util_valid,
-                               fused=fused, use_pallas=use_pallas)
+        if light:
+            ast, info = fleet_light_step(ast, obs_bins, raw_obs[:, 3], cfg,
+                                         util_bins, util_valid, fused=fused)
+        else:
+            ast, info = fleet_fast_step(ast, obs_bins, raw_obs[:, 3], k_fast,
+                                        cfg, util_bins, util_valid,
+                                        fused=fused, use_pallas=use_pallas)
         est, win = env_step(est, info.routing_weights, t_idx, k_env)
         ys = FleetTrace(actions=info.action,
                         routing_weights=info.routing_weights,
                         raw_obs=raw_obs,
                         unstable=info.unstable,
                         env=win)
-        return (ast, est, win.raw_obs, win.tier_utilization, k), ys
+        return (ast, est, win.raw_obs, win.tier_utilization, k, k_slow), ys
+
+    def full_body(carry, t_idx):
+        return tick_body(carry, t_idx, light=False)
+
+    def light_body(carry, t_idx):
+        return tick_body(carry, t_idx, light=True)
+
+    def dwell_block(carry, t_start, n_light: int):
+        """One dwell block: a selecting tick, then n_light held ticks."""
+        carry, y0 = full_body(carry, t_start)
+        y0 = jax.tree_util.tree_map(lambda a: a[None], y0)
+        if not n_light:
+            return carry, y0
+        carry, ys = jax.lax.scan(
+            light_body, carry,
+            t_start + 1 + jnp.arange(n_light, dtype=jnp.int32))
+        return carry, jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), y0, ys)
+
+    def run_ticks(carry, t_start, n: int, phase: int = 0):
+        """n consecutive ticks starting at traced window index ``t_start``,
+        whose first tick sits at dwell offset ``phase`` on the fleet clock
+        (static).  Misaligned heads run as held ticks until the next dwell
+        boundary; then selecting-tick-led blocks."""
+        outs = []
+        if dwell_blocked and n:
+            head = min((dwell - phase) % dwell, n)
+            if head:
+                carry, ys = jax.lax.scan(
+                    light_body, carry,
+                    t_start + jnp.arange(head, dtype=jnp.int32))
+                outs.append(ys)
+            t_start = t_start + head
+            n_blocks, tail = divmod(n - head, dwell)
+            if n_blocks:
+                def block_body(c, tb):
+                    return dwell_block(c, tb, dwell - 1)
+                carry, ys = jax.lax.scan(
+                    block_body, carry,
+                    t_start + dwell * jnp.arange(n_blocks, dtype=jnp.int32))
+                outs.append(jax.tree_util.tree_map(
+                    lambda x: x.reshape((n_blocks * dwell,) + x.shape[2:]),
+                    ys))
+            if tail:
+                carry, ys = dwell_block(carry, t_start + n_blocks * dwell,
+                                        tail - 1)
+                outs.append(ys)
+        else:
+            carry, ys = jax.lax.scan(
+                full_body, carry,
+                t_start + jnp.arange(n, dtype=jnp.int32))
+            outs.append(ys)
+        if len(outs) == 1:
+            return carry, outs[0]
+        return carry, jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+
+    def slow_after(carry):
+        ast, est, raw_obs, tier_util, k, k_slow = carry
+        # Slow learning once per period, with the boundary tick's slow key —
+        # not recomputed-and-discarded on the 9 intermediate ticks.
+        ast = fleet_slow_step(ast, k_slow, cfg)
+        return (ast, est, raw_obs, tier_util, k, k_slow)
 
     obs0 = jnp.zeros((r, topo.n_modalities), jnp.float32)
     util0 = jnp.zeros((r, topo.n_tiers), jnp.float32)
-    (ast, est, *_), trace = jax.lax.scan(
-        step, (agent_state, env_state, obs0, util0, key),
-        jnp.arange(n_steps, dtype=jnp.int32))
-    return ast, est, trace
+    k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
+    carry = (agent_state, env_state, obs0, util0, key, k_slow0)
+    traces = []
+
+    if clock_phase is None:
+        # Mixed router clocks: flat per-tick scan, per-router slow gating
+        # every tick (the pre-nesting reference schedule).
+        def safe_body(c, t_idx):
+            c, ys = full_body(c, t_idx)
+            return slow_after(c), ys
+
+        carry, ys = jax.lax.scan(
+            safe_body, carry, jnp.arange(n_steps, dtype=jnp.int32))
+        return carry[0], carry[1], ys
+
+    # Lead-in up to the next slow boundary (empty for fresh fleets).
+    lead = (-clock_phase) % period
+    lead_eff = min(lead, n_steps)
+    if lead_eff:
+        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), lead_eff,
+                              phase=clock_phase % dwell)
+        traces.append(ys)
+        if lead_eff == lead:    # the boundary tick ran -> learn once
+            carry = slow_after(carry)
+    n_periods, n_rem = divmod(n_steps - lead_eff, period)
+
+    def period_body(carry, p_idx):
+        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period)
+        return slow_after(carry), ys
+
+    if n_periods:
+        carry, ys = jax.lax.scan(
+            period_body, carry, jnp.arange(n_periods, dtype=jnp.int32))
+        traces.append(jax.tree_util.tree_map(
+            lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
+    if n_rem or not traces:
+        carry, ys = run_ticks(
+            carry,
+            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem)
+        traces.append(ys)
+    trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traces)
+    return carry[0], carry[1], trace
 
 
 # ------------------------------------------------------- heterogeneous fleet
@@ -293,7 +655,8 @@ def hetero_fleet_rollout(groups, n_steps: int, key: jax.Array,
 
     Args:
       groups: sequence of :class:`FleetGroup` (cells pre-grouped by
-        topology; each carries its own EFE execution path).
+        topology; each carries its own EFE execution path).  Each group's
+        ``agent_state`` / ``env_state`` are donated to its rollout.
       n_steps: shared number of control windows.
       key: PRNG key; folded per group so groups stay independent.
 

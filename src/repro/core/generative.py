@@ -43,6 +43,27 @@ class GenerativeModel(NamedTuple):
     d_prior: jnp.ndarray    # (S,) initial state prior
 
 
+class ModelCache(NamedTuple):
+    """Normalized tensors derived from the pseudo-counts (a pytree).
+
+    The paper's timescale separation (1 s inference / 10 s learning, §4.4)
+    makes the generative model *quasi-static*: A and B counts only change on
+    slow-update ticks, so everything derived from them is computed once per
+    slow period by :func:`derive_cache` and read by the fast loop instead of
+    being re-normalized from counts every second.  ``c_log`` is the only
+    per-tick model change (adaptive preferences select between two static
+    tables), so preference-derived quantities are *not* cached here.
+
+    Invalidation rule: any write to ``a_counts`` / ``b_counts`` must be
+    paired with a :func:`derive_cache` refresh (``agent.slow_step`` is the
+    single in-loop writer and does exactly that).
+    """
+
+    nb: jnp.ndarray    # (A, S, S) normalized transitions p(s'|s,a)
+    na: jnp.ndarray    # (M, max_bins, S) normalized observations p(o|s)
+    amb: jnp.ndarray   # (S,) per-state ambiguity Σ_m H[A_m(·|s)]
+
+
 @dataclasses.dataclass(frozen=True)
 class AifConfig:
     """Static hyper-parameters (all defaults = paper values).
@@ -202,3 +223,39 @@ def c_probs(c_log: jnp.ndarray, topo: Topology) -> jnp.ndarray:
     mask = spaces.bins_mask(topo)
     logits = jnp.where(mask > 0, c_log, -jnp.inf)
     return jax.nn.softmax(logits, axis=-1)
+
+
+def masked_log_c(c_log: jnp.ndarray, topo: Topology) -> jnp.ndarray:
+    """``log σ(C)`` per modality with padded bins clamped to a finite floor.
+
+    Accepts any leading batch shape on ``c_log`` (the bin mask broadcasts
+    from the right).  The -60 padding value keeps kernel arithmetic finite;
+    padded bins carry zero predicted mass so the value never contributes.
+    """
+    mask = spaces.bins_mask(topo)
+    logits = jnp.where(mask > 0, c_log, -jnp.inf)
+    logc = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.where(mask > 0, logc, -60.0)
+
+
+def ambiguity_from_normalized(na: jnp.ndarray, topo: Topology) -> jnp.ndarray:
+    """Σ_m H[A_m(· | s)] per state from a normalized A.
+
+    Batch-generic like :func:`repro.core.belief.log_likelihood_from_normalized`:
+    ``na`` is (..., M, max_bins, S) and the result is (..., S) — the fleet
+    path passes the (R, ...)-batched cache directly.
+    """
+    mask = spaces.bins_mask(topo)[:, :, None]
+    h = -jnp.sum(jnp.where(mask > 0, na * jnp.log(jnp.maximum(na, 1e-16)),
+                           0.0), axis=-2)              # (..., M, S)
+    return jnp.sum(h, axis=-2)
+
+
+def derive_cache(model: GenerativeModel, topo: Topology) -> ModelCache:
+    """Normalize the quasi-static model once (called on slow-update ticks)."""
+    na = normalize_a(model.a_counts, topo)
+    return ModelCache(
+        nb=normalize_b(model.b_counts),
+        na=na,
+        amb=ambiguity_from_normalized(na, topo),
+    )

@@ -27,9 +27,11 @@ def adapt_preferences(error_ema: jnp.ndarray,
     """Return (c_log, unstable_flag) for the current smoothed error rate.
 
     Jit-safe: both preference tables are materialized and selected with
-    ``jnp.where`` on the trigger condition.
+    ``jnp.where`` on the trigger condition.  ``error_ema`` may carry leading
+    batch axes (fleet mode); the returned table gains them on the left.
     """
-    unstable = error_ema > cfg.error_trigger
+    unstable = jnp.asarray(error_ema) > cfg.error_trigger
     c_nom = generative.nominal_c_log(cfg)
     c_uns = generative.unstable_c_log(cfg)
-    return jnp.where(unstable, c_uns, c_nom), unstable
+    cond = unstable.reshape(unstable.shape + (1, 1))   # broadcast over (M, B)
+    return jnp.where(cond, c_uns, c_nom), unstable

@@ -180,14 +180,21 @@ def params_from_config(cfg: SimConfig,
 
 def init_fluid_state(params: FluidParams) -> FluidState:
     r = params.n_cells
-    z = jnp.zeros((r,), jnp.float32)
-    zt = jnp.zeros((r, params.n_tiers), jnp.float32)
+    # fresh buffer per field (not one shared zeros array): the state is
+    # donated through fleet_rollout, and donation rejects pytrees that hand
+    # the same buffer in twice
+    def z():
+        return jnp.zeros((r,), jnp.float32)
+
+    def zt():
+        return jnp.zeros((r, params.n_tiers), jnp.float32)
+
     return FluidState(
-        backlog=zt, down_left=zt, util_accum=zt, util_scrape=zt,
-        prev_tier_rps=zt, p95_ema=z, rps_ema=z, err_ema=z,
-        n_requests=z, n_success=z, err_timeout=z, err_overflow=z,
-        err_refused=z, err_restart=z, tier_requests=zt, tier_success=zt,
-        n_restarts=zt,
+        backlog=zt(), down_left=zt(), util_accum=zt(), util_scrape=zt(),
+        prev_tier_rps=zt(), p95_ema=z(), rps_ema=z(), err_ema=z(),
+        n_requests=z(), n_success=z(), err_timeout=z(), err_overflow=z(),
+        err_refused=z(), err_restart=z(), tier_requests=zt(), tier_success=zt(),
+        n_restarts=zt(),
     )
 
 

@@ -7,6 +7,13 @@ slow cadence) and returns the selected policy's routing weights.  The tier
 count, state space and policy set all derive from the agent config's
 :class:`~repro.core.topology.Topology`, so the same adapter drives the
 paper's 3-tier testbed and deeper continua.
+
+The agent state carries the quasi-static normalized-model cache
+(:class:`~repro.core.generative.ModelCache`), so the 1 Hz tick reads
+pre-normalized A/B tensors instead of re-deriving them from pseudo-counts;
+``tick`` also donates the previous state's buffers, which is why the adapter
+always replaces ``self.state`` with the returned state and never touches the
+old pytree again.
 """
 from __future__ import annotations
 

@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _LANES = 128         # TPU lane width: pad S to a multiple of this
 
@@ -93,12 +94,16 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
                      a_norm: jnp.ndarray, logc: jnp.ndarray,
                      amb: jnp.ndarray, cost: jnp.ndarray,
                      *, block_r: int = 8,
-                     interpret: bool = True) -> jnp.ndarray:
+                     interpret: bool) -> jnp.ndarray:
     """G (R, A) for a fleet.  See ref.py for input semantics.
 
     Shape-generic: works for any (R, A, S, S) / (R, M, NB, S) operands; S is
     padded to the lane-width multiple internally.  ``block_r`` must divide R
     (:func:`repro.kernels.efe.ops.fleet_efe` picks a valid one).
+
+    ``interpret`` is deliberately required: only the :mod:`..ops` wrapper
+    auto-detects the backend, so a direct caller can't silently run the
+    interpret-mode emulator on a real TPU.
     """
     r, a, s, _ = b_norm.shape
     m, nb = a_norm.shape[1], a_norm.shape[2]
@@ -131,3 +136,110 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
       a_norm.astype(jnp.float32), logc.astype(jnp.float32),
       amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :])
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused belief update → EFE (one control tick, belief never leaves VMEM)
+# ---------------------------------------------------------------------------
+# Padded log-likelihood value for the padded state slots: large enough in
+# magnitude that exp(pad - max) flushes to exactly 0, small enough to stay
+# finite in f32 arithmetic.
+_LOGLIK_PAD = -1e9
+
+
+def _belief_efe_kernel(bprev_ref, qprev_ref, ll_ref, b_ref, a_ref, logc_ref,
+                       amb_ref, cost_ref, g_ref, qout_ref, q_scr):
+    """One (router-block, action) grid step of the fused tick.
+
+    The action axis is the innermost (sequential) grid dimension, so the
+    posterior for a router block is computed exactly once — at the first
+    action step — and parked in VMEM scratch for the remaining A-1 steps.
+
+    bprev_ref: (BR, S̄, S̄)  previously-applied action's transition row
+    qprev_ref: (BR, S̄)      beliefs before the tick
+    ll_ref:    (BR, S̄)      observation log-likelihood (padded _LOGLIK_PAD)
+    b/a/logc/amb/cost/g:     as in :func:`_efe_kernel`
+    qout_ref:  (BR, S̄)      posterior after the tick (written once)
+    q_scr:     (BR, S̄)      VMEM scratch carrying q across action steps
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        bp = bprev_ref[...]                           # (BR, S̄, S̄)
+        qp = qprev_ref[...]                           # (BR, S̄)
+        prior = jax.lax.dot_general(
+            bp, qp[..., None],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)[..., 0]
+        prior = prior / jnp.maximum(
+            jnp.sum(prior, axis=-1, keepdims=True), 1e-30)
+        logp = ll_ref[...] + jnp.log(jnp.maximum(prior, 1e-30))
+        logp = logp - jnp.max(logp, axis=-1, keepdims=True)
+        qn = jnp.exp(logp)
+        qn = qn / jnp.maximum(jnp.sum(qn, axis=-1, keepdims=True), 1e-30)
+        q_scr[...] = qn
+        qout_ref[...] = qn
+
+    _efe_kernel(b_ref, q_scr, a_ref, logc_ref, amb_ref, cost_ref, g_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def belief_efe_fleet_pallas(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
+                            loglik: jnp.ndarray, b_norm: jnp.ndarray,
+                            a_norm: jnp.ndarray, logc: jnp.ndarray,
+                            amb: jnp.ndarray, cost: jnp.ndarray,
+                            *, block_r: int = 8,
+                            interpret: bool
+                            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (belief update → EFE) tick: (G (R, A), posterior q (R, S)).
+
+    See :func:`repro.kernels.efe.ref.belief_efe_fleet_ref` for the input
+    semantics and the matching XLA oracle.  As with
+    :func:`efe_fleet_pallas`, ``interpret`` must be passed explicitly
+    (the ops wrapper auto-detects the backend).
+    """
+    r, a, s, _ = b_norm.shape
+    m, nb = a_norm.shape[1], a_norm.shape[2]
+    assert r % block_r == 0, (r, block_r)
+    s_pad = pad_states(s)
+    pad = s_pad - s
+    if pad > 0:
+        b_prev = jnp.pad(b_prev, ((0, 0), (0, pad), (0, pad)))
+        q_prev = jnp.pad(q_prev, ((0, 0), (0, pad)))
+        loglik = jnp.pad(loglik, ((0, 0), (0, pad)),
+                         constant_values=_LOGLIK_PAD)
+        b_norm = jnp.pad(b_norm, ((0, 0), (0, 0), (0, pad), (0, pad)))
+        a_norm = jnp.pad(a_norm, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        amb = jnp.pad(amb, ((0, 0), (0, pad)))
+
+    grid = (r // block_r, a)
+    g, q = pl.pallas_call(
+        _belief_efe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, s_pad, s_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, 1, s_pad, s_pad),
+                         lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, a), jnp.float32),
+            jax.ShapeDtypeStruct((r, s_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_r, s_pad), jnp.float32)],
+        interpret=interpret,
+    )(b_prev.astype(jnp.float32), q_prev.astype(jnp.float32),
+      loglik.astype(jnp.float32), b_norm.astype(jnp.float32),
+      a_norm.astype(jnp.float32), logc.astype(jnp.float32),
+      amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :])
+    return g, q[:, :s]

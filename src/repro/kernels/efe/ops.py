@@ -1,20 +1,32 @@
-"""Jit'd public wrapper for the fleet EFE kernel.
+"""Jit'd public wrappers for the fleet EFE kernel stack.
 
-``fleet_efe`` adapts a batched generative model (pseudo-counts, as carried by
-:class:`repro.core.agent.AgentState`) into the kernel's normalized inputs and
-dispatches to the Pallas kernel (TPU) or the pure-jnp oracle (CPU/unit
-tests).  Matches ``repro.core.efe.expected_free_energy`` term-for-term for
-every :class:`~repro.core.topology.Topology` (shapes come from the config's
-topology, block sizes from the operand shapes).
+Two entry layers:
+
+* ``fleet_efe`` adapts a batched generative model (pseudo-counts, as carried
+  by :class:`repro.core.agent.AgentState`) into the kernel's normalized
+  inputs and dispatches to the Pallas kernel (TPU) or the pure-jnp oracle
+  (CPU/unit tests).  Matches ``repro.core.efe.expected_free_energy``
+  term-for-term for every :class:`~repro.core.topology.Topology`.
+* ``fleet_efe_cached`` / ``fleet_belief_efe`` skip the normalization: they
+  take the quasi-static :class:`~repro.core.generative.ModelCache` tensors
+  that :func:`repro.core.agent.slow_step` refreshes once per slow period, so
+  the fast loop never re-materializes a normalized (R, A, S, S) transition
+  stack.  ``fleet_belief_efe`` additionally fuses the Bayesian belief update
+  (Eq. 2) into the same kernel launch, so the posterior never round-trips to
+  HBM between inference and action selection.
+
+Shapes come from the config's topology, block sizes from the operand shapes.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import generative, policies, spaces
-from repro.kernels.efe.efe import default_block_r, efe_fleet_pallas
-from repro.kernels.efe.ref import efe_fleet_ref
+from repro.core import generative, policies
+from repro.kernels.efe.efe import (belief_efe_fleet_pallas, default_block_r,
+                                   efe_fleet_pallas)
+from repro.kernels.efe.ref import (belief_efe_fleet_ref, belief_posterior_ref,
+                                   efe_fleet_ref)
 
 
 def largest_pow2_divisor(n: int) -> int:
@@ -22,39 +34,67 @@ def largest_pow2_divisor(n: int) -> int:
     return n & -n
 
 
+def _auto_interpret() -> bool:
+    from repro.kernels.attention.ops import on_tpu
+    return not on_tpu()
+
+
+def _resolve_block_r(r: int, s: int, block_r: int | None) -> int:
+    if block_r is None:
+        br = default_block_r(r, s)
+    elif block_r > 0 and r % block_r == 0:
+        br = block_r
+    else:
+        br = min(largest_pow2_divisor(r), largest_pow2_divisor(block_r))
+    return max(br, 1)
+
+
+def _gather_prev_b(nb: jnp.ndarray, prev_action: jnp.ndarray) -> jnp.ndarray:
+    """(R, S', S) transition row of each router's currently-applied action."""
+    return jnp.take_along_axis(
+        nb, prev_action[:, None, None, None], axis=1)[:, 0]
+
+
+def fleet_belief_posterior(nb: jnp.ndarray, beliefs: jnp.ndarray,
+                           prev_action: jnp.ndarray,
+                           loglik: jnp.ndarray) -> jnp.ndarray:
+    """Cached-model belief update alone (held ticks — no EFE launch)."""
+    return belief_posterior_ref(_gather_prev_b(nb, prev_action), beliefs,
+                                loglik)
+
+
 def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
-                       c_log: jnp.ndarray, beliefs: jnp.ndarray,
-                       cfg: generative.AifConfig):
-    """Batched (R, ...) counts -> kernel inputs (normalized, fused terms)."""
+                       c_log: jnp.ndarray, cfg: generative.AifConfig):
+    """Batched (R, ...) counts -> kernel inputs (normalized, fused terms).
+
+    The fast loop avoids this work entirely (it reads the slow-tick
+    :class:`~repro.core.generative.ModelCache`); this adapter remains for
+    direct count-space callers and parity tests.
+    """
     topo = cfg.topology
     na = jax.vmap(lambda a: generative.normalize_a(a, topo))(a_counts)
     nb = jax.vmap(generative.normalize_b)(b_counts)    # (R, A, S', S)
     # kernel computes B_a q with contraction over the last dim: transpose so
     # that out[s'] = sum_s b[s', s] q[s]  — already (S', S) ✓
-    mask = spaces.bins_mask(topo)
-    logits = jnp.where(mask > 0, c_log, -jnp.inf)
-    logc = jax.nn.log_softmax(logits, axis=-1)
-    logc = jnp.where(mask > 0, logc, -60.0)            # padded bins
-    h = -jnp.sum(jnp.where(mask[None, :, :, None] > 0,
-                           na * jnp.log(jnp.maximum(na, 1e-16)), 0.0),
-                 axis=2)                               # (R, M, S)
-    amb = jnp.sum(h, axis=1)                           # (R, S)
-    cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
-    return nb, na, logc, amb, cost
+    logc = generative.masked_log_c(c_log, topo)
+    amb = generative.ambiguity_from_normalized(na, topo)   # (R, S)
+    return nb, na, logc, amb
 
 
-def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
-              c_log: jnp.ndarray, beliefs: jnp.ndarray,
-              cfg: generative.AifConfig, *,
-              use_pallas: bool = True, interpret: bool | None = None,
-              block_r: int | None = None) -> jnp.ndarray:
-    """G (R, A) for a fleet of routers.
+def fleet_efe_cached(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
+                     amb: jnp.ndarray, beliefs: jnp.ndarray,
+                     cfg: generative.AifConfig, *,
+                     use_pallas: bool = True, interpret: bool | None = None,
+                     block_r: int | None = None) -> jnp.ndarray:
+    """G (R, A) from pre-normalized (cached) model tensors.
 
     Args:
-      a_counts: (R, M, max_bins, S) observation-model pseudo-counts.
-      b_counts: (R, A, S, S) transition pseudo-counts.
-      c_log:    (R, M, max_bins) current log-preferences.
-      beliefs:  (R, S) posteriors.
+      nb:   (R, A, S, S) normalized transitions (``ModelCache.nb``).
+      na:   (R, M, max_bins, S) normalized observations (``ModelCache.na``).
+      logc: (R, M, max_bins) masked log σ(C) (per-tick; see
+        :func:`repro.core.generative.masked_log_c`).
+      amb:  (R, S) per-state ambiguity (``ModelCache.amb``).
+      beliefs: (R, S) posteriors.
       interpret: None (default) auto-detects — compiled kernel on TPU,
         interpret-mode emulation elsewhere (Pallas does not lower to CPU).
       block_r: router block size; honored as-is when it divides R, else
@@ -62,20 +102,63 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
         R, which degrades throughput but stays correct).  None picks a
         power-of-two divisor within the kernel's VMEM budget.
     """
-    nb, na, logc, amb, cost = _normalized_inputs(a_counts, b_counts, c_log,
-                                                 beliefs, cfg)
-    if interpret is None:
-        from repro.kernels.attention.ops import on_tpu
-        interpret = not on_tpu()
+    cost = cfg.cost_weight * policies.policy_concentration_cost(cfg.topology)
     if use_pallas:
-        r = beliefs.shape[0]
-        s = beliefs.shape[-1]
-        if block_r is None:
-            br = default_block_r(r, s)
-        elif block_r > 0 and r % block_r == 0:
-            br = block_r
-        else:
-            br = min(largest_pow2_divisor(r), largest_pow2_divisor(block_r))
+        if interpret is None:
+            interpret = _auto_interpret()
+        br = _resolve_block_r(beliefs.shape[0], beliefs.shape[-1], block_r)
         return efe_fleet_pallas(nb, beliefs, na, logc, amb, cost,
-                                block_r=max(br, 1), interpret=interpret)
+                                block_r=br, interpret=interpret)
     return efe_fleet_ref(nb, beliefs, na, logc, amb, cost)
+
+
+def fleet_belief_efe(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
+                     amb: jnp.ndarray, beliefs: jnp.ndarray,
+                     prev_action: jnp.ndarray, loglik: jnp.ndarray,
+                     cfg: generative.AifConfig, *,
+                     use_pallas: bool = True, interpret: bool | None = None,
+                     block_r: int | None = None
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused belief update → EFE for one fleet tick.
+
+    Same cached inputs as :func:`fleet_efe_cached` plus:
+
+      beliefs:     (R, S) posteriors *before* the tick.
+      prev_action: (R,) int32 currently-applied action per router.
+      loglik:      (R, S) observation log-likelihood for this tick (gathered
+        from the cached normalized A, plus any gated utilization evidence —
+        see :func:`repro.core.belief.log_likelihood_from_normalized`).
+
+    Returns (G (R, A), posterior (R, S)).
+    """
+    b_prev = _gather_prev_b(nb, prev_action)                  # (R, S', S)
+    cost = cfg.cost_weight * policies.policy_concentration_cost(cfg.topology)
+    if use_pallas:
+        if interpret is None:
+            interpret = _auto_interpret()
+        br = _resolve_block_r(beliefs.shape[0], beliefs.shape[-1], block_r)
+        return belief_efe_fleet_pallas(b_prev, beliefs, loglik, nb, na,
+                                       logc, amb, cost,
+                                       block_r=br, interpret=interpret)
+    return belief_efe_fleet_ref(b_prev, beliefs, loglik, nb, na, logc, amb,
+                                cost)
+
+
+def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
+              c_log: jnp.ndarray, beliefs: jnp.ndarray,
+              cfg: generative.AifConfig, *,
+              use_pallas: bool = True, interpret: bool | None = None,
+              block_r: int | None = None) -> jnp.ndarray:
+    """G (R, A) for a fleet of routers, from raw pseudo-counts.
+
+    Args:
+      a_counts: (R, M, max_bins, S) observation-model pseudo-counts.
+      b_counts: (R, A, S, S) transition pseudo-counts.
+      c_log:    (R, M, max_bins) current log-preferences.
+      beliefs:  (R, S) posteriors.
+      interpret/block_r: see :func:`fleet_efe_cached`.
+    """
+    nb, na, logc, amb = _normalized_inputs(a_counts, b_counts, c_log, cfg)
+    return fleet_efe_cached(nb, na, logc, amb, beliefs, cfg,
+                            use_pallas=use_pallas, interpret=interpret,
+                            block_r=block_r)

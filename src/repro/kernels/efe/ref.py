@@ -32,3 +32,42 @@ def efe_fleet_ref(b_norm: jnp.ndarray, q: jnp.ndarray, a_norm: jnp.ndarray,
         axis=(2, 3))
     ambiguity = jnp.einsum("ras,rs->ra", s_pred, amb)
     return risk + ambiguity + cost[None, :]
+
+
+def belief_posterior_ref(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
+                         loglik: jnp.ndarray) -> jnp.ndarray:
+    """Batched Bayesian belief update (paper Eq. 2), the belief half of the
+    fused tick.  The single source of the posterior math off-TPU: both the
+    fused selecting tick (via :func:`belief_efe_fleet_ref`) and the held-tick
+    fast path (:func:`repro.core.fleet.fleet_light_step`) call this, so the
+    rollout's dwell-blocking bit-identity invariant cannot drift.
+
+      b_prev: (R, S, S) — p(s'|s, a_prev) per router (the previously applied
+              action's transition row, pre-gathered from the cached B).
+      q_prev: (R, S)    — belief *before* the tick.
+      loglik: (R, S)    — log p(o_t|s) summed over modalities (+ any gated
+              utilization-scrape evidence), computed from the cached
+              normalized A outside the kernel (cheap gathers).
+    """
+    prior = jnp.einsum("rts,rs->rt", b_prev, q_prev)
+    prior = prior / jnp.maximum(jnp.sum(prior, -1, keepdims=True), 1e-30)
+    logp = loglik + jnp.log(jnp.maximum(prior, 1e-30))
+    logp = logp - jnp.max(logp, axis=-1, keepdims=True)
+    q = jnp.exp(logp)
+    return q / jnp.maximum(jnp.sum(q, -1, keepdims=True), 1e-30)
+
+
+def belief_efe_fleet_ref(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
+                         loglik: jnp.ndarray, b_norm: jnp.ndarray,
+                         a_norm: jnp.ndarray, logc: jnp.ndarray,
+                         amb: jnp.ndarray, cost: jnp.ndarray
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused belief update → EFE, one tick (paper Eq. 2 then Eq. 1).
+
+    See :func:`belief_posterior_ref` for the belief-half input semantics.
+
+    Returns (G (R, A), q (R, S)) — the posterior never round-trips through a
+    separate belief pass; on TPU the Pallas twin keeps it in VMEM.
+    """
+    q = belief_posterior_ref(b_prev, q_prev, loglik)
+    return efe_fleet_ref(b_norm, q, a_norm, logc, amb, cost), q

@@ -58,23 +58,26 @@ def test_fleet_tick_per_router_matches_single_agent():
 
 def test_fleet_tick_deterministic():
     n = 4
-    fst = fleet.init_fleet_state(CFG, n)
     obs, errs = _per_router_inputs(n)
     keys = _keys(n)
-    s1, i1 = fleet.fleet_tick(fst, obs, errs, keys, CFG)
-    s2, i2 = fleet.fleet_tick(fst, obs, errs, keys, CFG)
+    # fleet_tick donates its state: two fresh (identical) initial states
+    s1, i1 = fleet.fleet_tick(fleet.init_fleet_state(CFG, n), obs, errs,
+                              keys, CFG)
+    s2, i2 = fleet.fleet_tick(fleet.init_fleet_state(CFG, n), obs, errs,
+                              keys, CFG)
     np.testing.assert_array_equal(np.asarray(i1.action), np.asarray(i2.action))
     np.testing.assert_array_equal(np.asarray(s1.belief), np.asarray(s2.belief))
 
 
 def test_fleet_tick_util_scrape_changes_belief():
     n = 2
-    fst = fleet.init_fleet_state(CFG, n)
     obs, errs = _per_router_inputs(n)
     keys = _keys(n)
     util = jnp.asarray([[2, 1, 0]] * n, jnp.int32)
-    s_off, _ = fleet.fleet_tick(fst, obs, errs, keys, CFG, util, False)
-    s_on, _ = fleet.fleet_tick(fst, obs, errs, keys, CFG, util, True)
+    s_off, _ = fleet.fleet_tick(fleet.init_fleet_state(CFG, n), obs, errs,
+                                keys, CFG, util, False)
+    s_on, _ = fleet.fleet_tick(fleet.init_fleet_state(CFG, n), obs, errs,
+                               keys, CFG, util, True)
     assert not np.allclose(np.asarray(s_off.belief), np.asarray(s_on.belief))
 
 
@@ -82,9 +85,10 @@ def test_fleet_tick_util_scrape_changes_belief():
 def test_fused_tick_matches_vmap_tick():
     """The fused fleet-EFE path must reproduce the vmapped reference tick."""
     n = 4
-    fst = fleet.init_fleet_state(CFG, n)
     obs, errs = _per_router_inputs(n, seed=3)
-    state_v, state_f = fst, fst
+    # two fresh identical states (fleet_tick donates its input state)
+    state_v = fleet.init_fleet_state(CFG, n)
+    state_f = fleet.init_fleet_state(CFG, n)
     # cross the slow-learning boundary (t = 10) to cover both loops
     for step in range(11):
         keys = _keys(n, seed=100 + step)
