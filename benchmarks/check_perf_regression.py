@@ -1,10 +1,12 @@
 """Perf-smoke gate: fail CI when fleet throughput regresses.
 
 Compares a freshly-measured ``BENCH_fleet.json`` against the committed
-baseline entry-by-entry (matched on workload name and R × T config; entries
-present on only one side are skipped, so quick-mode runs gate only the rows
-they measure) and exits non-zero when any matched entry's cell-windows/s
-drops more than ``--threshold`` (default 30%).
+baseline entry-by-entry (matched on workload name, R × T config and
+scenario; entries present only in the baseline are skipped, so quick-mode
+runs gate only the rows they measure, and entries present only in the
+current run — freshly added benchmark rows — produce a *warning*, not a
+failure, so new rows land cleanly in CI) and exits non-zero when any matched
+entry's cell-windows/s drops more than ``--threshold`` (default 30%).
 
 Machine calibration: raw throughput tracks the runner's CPU as much as the
 code, so when both runs measured the largest common ``env`` row (the fluid
@@ -33,7 +35,8 @@ def _entries(path: str) -> dict[tuple, dict]:
     out = {}
     for e in data["entries"]:
         cfg = e.get("config", {})
-        out[(e["name"], cfg.get("r"), cfg.get("t"))] = e
+        out[(e["name"], cfg.get("r"), cfg.get("t"),
+             cfg.get("scenario"))] = e
     return out
 
 
@@ -80,14 +83,23 @@ def main() -> int:
         status = "OK"
         if drop > args.threshold:
             status, failed = "REGRESSION", True
-        name, r, t = key
+        name, r, t, scen = key
         print(f"{status:>10}  {name:<20} r={r:<5} t={t:<5} "
+              f"scenario={scen or '-':<16} "
               f"baseline={b:>12.1f} expected={expected:>12.1f} "
               f"current={c:>12.1f} ({-100 * drop:+.1f}%)")
-    for key in sorted(set(base) ^ set(cur)):
-        side = "baseline-only" if key in base else "current-only"
+    for key in sorted(set(base) - set(cur), key=str):
         print(f"{'skipped':>10}  {key[0]:<20} r={key[1]} t={key[2]} "
-              f"({side})")
+              f"scenario={key[3] or '-'} (baseline-only: not measured "
+              f"this run)")
+    for key in sorted(set(cur) - set(base), key=str):
+        # a freshly added bench row has no committed trajectory yet: warn
+        # (visibly, incl. GitHub annotation) but never fail — commit the
+        # regenerated BENCH_fleet.json to start gating it.
+        print(f"{'WARN':>10}  {key[0]:<20} r={key[1]} t={key[2]} "
+              f"scenario={key[3] or '-'} (no baseline entry; not gated)")
+        print(f"::warning::new bench row {key} has no baseline entry; "
+              f"commit the regenerated BENCH_fleet.json to gate it")
     if failed:
         print(f"\nFAIL: cell-windows/s dropped more than "
               f"{100 * args.threshold:.0f}% on at least one entry "

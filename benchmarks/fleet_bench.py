@@ -17,15 +17,21 @@ Workloads, all single jitted ``lax.scan`` programs (no Python in the loop):
 
 Each path is recorded as a separate entry in the repo-root
 ``BENCH_fleet.json`` (schema ``{benchmark, device, entries: [{name, config,
-cell_windows_per_s, wall_s}]}``) so the perf trajectory tracks the kernel
-path being optimized, not just the environment engine.  CI gates on it via
-``benchmarks/check_perf_regression.py``.
+cell_windows_per_s, wall_s}]}``; ``config`` carries the scenario so rows
+from different scenarios never collide) so the perf trajectory tracks the
+kernel path being optimized, not just the environment engine.  CI gates on
+it via ``benchmarks/check_perf_regression.py``.
+
+``--scenario`` selects the scenario driving the closed-loop fleet rows
+(default ``paper-burst``); a ``flaky-telemetry`` fused row is always
+recorded as well, tracking the masked partial-observability path's cost.
 
 Reports compile time and steady-state throughput per configuration as CSV on
 stdout; ``--json out.json`` additionally writes the raw rows for the CI
 benchmark artifact.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--json PATH]
+                                                    [--scenario NAME]
                                                     [--use-pallas]
 """
 from __future__ import annotations
@@ -88,14 +94,14 @@ def bench_env(r: int, t: int, scenario: str = "paper-burst") -> dict:
     }
 
 
-def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False) -> dict:
-    """Closed-loop AIF fleet rollout at (R, T)."""
+def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False,
+                scenario: str = "paper-burst") -> dict:
+    """Closed-loop AIF fleet rollout at (R, T) under a named scenario."""
     cfg = AifConfig()
     scfg = SimConfig()
-    sc = scenarios.build_scenario("paper-burst", scfg, r, t)
+    sc = scenarios.build_scenario(scenario, scfg, r, t)
     params = batched.params_from_config(scfg, r, sc.capacity_scale)
-    env_step = batched.make_env_step(params, jnp.asarray(sc.arrival_rate),
-                                     jnp.asarray(sc.hazard_scale))
+    env_step = batched.make_scenario_env_step(params, sc)
     key = jax.random.key(0)
 
     def make_args():
@@ -111,14 +117,15 @@ def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False) -> dict:
     name = "fleet_" + ("fused_pallas" if fused and use_pallas
                        else "fused" if fused else "vmap")
     return {
-        "workload": name, "r": r, "t": t,
+        "workload": name, "r": r, "t": t, "scenario": scenario,
         "compile_s": round(compile_s, 3),
         "run_s": round(run_s, 4),
         "cell_windows_per_s": round(r * t / run_s, 1),
     }
 
 
-def run(quick: bool = False, use_pallas: bool = False) -> list[dict]:
+def run(quick: bool = False, use_pallas: bool = False,
+        scenario: str = "paper-burst") -> list[dict]:
     rows = []
     # acceptance workload first: R=256 cells x T=600 windows, one jitted scan
     env_grid = [(256, 600)] if quick else [(16, 600), (64, 600), (256, 600),
@@ -132,27 +139,36 @@ def run(quick: bool = False, use_pallas: bool = False) -> list[dict]:
     fleet_grid = ([(64, 120, False), (64, 120, True)] if quick else
                   [(64, 120, False), (64, 120, True), (256, 600, True)])
     for r, t, fused in fleet_grid:
-        rows.append(bench_fleet(r, t, fused))
+        rows.append(bench_fleet(r, t, fused, scenario=scenario))
+        _print_row(rows[-1])
+    # masked partial-observability path (always recorded: tracks the cost of
+    # the mask-aware belief/EFE/learning plumbing vs the clean rows above)
+    if scenario != "flaky-telemetry":
+        rows.append(bench_fleet(64, 120, fused=True,
+                                scenario="flaky-telemetry"))
         _print_row(rows[-1])
     if use_pallas:
-        rows.append(bench_fleet(16, 60, fused=True, use_pallas=True))
+        rows.append(bench_fleet(16, 60, fused=True, use_pallas=True,
+                                scenario=scenario))
         _print_row(rows[-1])
     return rows
 
 
 def _print_row(row: dict) -> None:
     print(f"{row['workload']},r={row['r']},t={row['t']},"
+          f"scenario={row.get('scenario', '-')},"
           f"compile={row['compile_s']}s,run={row['run_s']}s,"
           f"{row['cell_windows_per_s']}cw/s", flush=True)
 
 
 def _bench_summary(rows: list[dict]) -> dict:
-    """Repo-root BENCH_fleet.json: one entry per (workload path, R × T)
-    configuration, so the CI regression gate can match quick-mode runs
-    against the committed trajectory entry-by-entry."""
+    """Repo-root BENCH_fleet.json: one entry per (workload path, R × T,
+    scenario) configuration, so the CI regression gate can match quick-mode
+    runs against the committed trajectory entry-by-entry."""
     entries = [{
         "name": row["workload"],
-        "config": {"r": row["r"], "t": row["t"]},
+        "config": {"r": row["r"], "t": row["t"],
+                   "scenario": row.get("scenario")},
         "cell_windows_per_s": row["cell_windows_per_s"],
         "wall_s": row["run_s"],
     } for row in rows]
@@ -169,13 +185,17 @@ def main() -> None:
                     help="CI smoke subset (acceptance workload only)")
     ap.add_argument("--json", metavar="PATH",
                     help="write rows as JSON for the benchmark artifact")
+    ap.add_argument("--scenario", default="paper-burst",
+                    choices=sorted(scenarios.SCENARIOS),
+                    help="scenario driving the closed-loop fleet rows")
     ap.add_argument("--use-pallas", action="store_true",
                     help="also benchmark the fused Pallas kernel path "
                          "(interpret-mode emulation off-TPU)")
     args = ap.parse_args()
     if args.json:     # fail fast on an unwritable path, not after the bench
         open(args.json, "a").close()
-    rows = run(quick=args.quick, use_pallas=args.use_pallas)
+    rows = run(quick=args.quick, use_pallas=args.use_pallas,
+               scenario=args.scenario)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"benchmark": "fleet_bench",

@@ -1,13 +1,17 @@
 """Fleet quickstart: a batch of AIF routers learning on-device, no Python loop.
 
-Runs R=8 independent service cells through a flash-crowd scenario on the
-batched fluid engine — agents and environment advance together inside one
-jitted ``lax.scan`` — and compares against the static capacity-aware router
-on the same schedules.  ~30 s wall on CPU, most of it XLA compilation.
+Runs R=8 independent service cells through a scenario on the batched fluid
+engine — agents and environment advance together inside one jitted
+``lax.scan`` — and compares against the static capacity-aware router on the
+same schedules.  ~30 s wall on CPU, most of it XLA compilation.
 
     PYTHONPATH=src python examples/fleet_quickstart.py [--quick]
+                                                       [--scenario NAME]
 
-``--quick`` runs a smaller fleet / shorter horizon (CI smoke).
+``--quick`` runs a smaller fleet / shorter horizon (CI smoke);
+``--scenario`` picks any registry preset (default ``flash-crowd`` —
+telemetry-degradation presets like ``flaky-telemetry`` exercise the masked
+partial-observability path, see examples/unreliable_telemetry.py).
 """
 import argparse
 import time
@@ -24,17 +28,19 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small fleet / short horizon for CI smoke runs")
+    ap.add_argument("--scenario", default="flash-crowd",
+                    choices=sorted(scenarios.SCENARIOS),
+                    help="scenario preset from the registry")
     args = ap.parse_args()
     r, t = (4, 120) if args.quick else (8, 420)
     cfg = AifConfig()
     scfg = SimConfig()
     print(f"fleet of {r} AIF routers x {t} control windows, "
-          f"scenario: flash-crowd on the paper's burst traffic")
+          f"scenario: {args.scenario}")
 
-    sc = scenarios.build_scenario("flash-crowd", scfg, r, t)
+    sc = scenarios.build_scenario(args.scenario, scfg, r, t)
     params = batched.params_from_config(scfg, r, sc.capacity_scale)
-    env_step = batched.make_env_step(params, jnp.asarray(sc.arrival_rate),
-                                     jnp.asarray(sc.hazard_scale))
+    env_step = batched.make_scenario_env_step(params, sc)
 
     # static capacity-aware baseline on the exact same world + schedules
     w_cap = jnp.asarray([0.15, 0.23, 0.62], jnp.float32)

@@ -31,8 +31,7 @@ def make_group(name: str, topo, n_cells: int, n_windows: int,
     scfg = sim_config_for(topo)
     sc = scenarios.build_scenario("diurnal", scfg, n_cells, n_windows)
     params = batched.params_from_config(scfg, n_cells, sc.capacity_scale)
-    env_step = batched.make_env_step(params, jnp.asarray(sc.arrival_rate),
-                                     jnp.asarray(sc.hazard_scale))
+    env_step = batched.make_scenario_env_step(params, sc)
     print(f"  {name}: {topo.describe()}, {n_actions(topo)} policies, "
           f"{n_cells} cells @ {scfg.rps:.0f} RPS"
           + (" [fused EFE kernel]" if use_kernel else ""))

@@ -48,6 +48,7 @@ class StepInfo(NamedTuple):
     belief_entropy: jnp.ndarray
     unstable: jnp.ndarray
     obs_bins: jnp.ndarray
+    obs_mask: jnp.ndarray            # (M,) validity of this tick's evidence
 
 
 def init_agent_state(cfg: generative.AifConfig) -> AgentState:
@@ -68,12 +69,47 @@ def init_agent_state(cfg: generative.AifConfig) -> AgentState:
     )
 
 
+def all_valid_mask(obs_bins: jnp.ndarray) -> jnp.ndarray:
+    """(..., M) all-ones validity mask matching a batch of observation bins.
+
+    The single definition of the "every modality fresh" default shared by the
+    single-agent and fleet paths, so the ``StepInfo.obs_mask`` trace cannot
+    diverge between them.
+    """
+    return jnp.ones(jnp.shape(obs_bins), jnp.float32)
+
+
+def masked_error_ema(prev_ema: jnp.ndarray,
+                     raw_error_rate: jnp.ndarray,
+                     cfg: generative.AifConfig,
+                     obs_mask: jnp.ndarray | None) -> jnp.ndarray:
+    """Adaptive-preference error EMA that respects the telemetry mask.
+
+    ``raw_error_rate`` comes off the published telemetry stream, which
+    re-emits the last value while the error modality is masked — ingesting
+    it would keep the instability detector tracking a phantom-healthy (or
+    phantom-failing) error rate through a scrape gap.  A masked error
+    modality is treated as *no sample*: the EMA holds.  Elementwise over any
+    leading batch shape; ``obs_mask=None`` (and topologies without an
+    ``error`` modality) keep the exact unmasked update.
+    """
+    new = preferences.ema_update(prev_ema, raw_error_rate, cfg)
+    if obs_mask is None:
+        return new
+    try:
+        err_ix = cfg.topology.modalities.index("error")
+    except ValueError:
+        return new
+    return jnp.where(obs_mask[..., err_ix] > 0, new, prev_ema)
+
+
 def pre_action(state: AgentState,
                obs_bins: jnp.ndarray,
                raw_error_rate: jnp.ndarray,
                cfg: generative.AifConfig,
                util_bins: jnp.ndarray | None = None,
-               util_valid=False):
+               util_valid=False,
+               obs_mask: jnp.ndarray | None = None):
     """Everything in a fast step *before* action selection.
 
     Adaptive preferences (paper §4.2) → Bayesian belief update (Eq. 2) →
@@ -81,20 +117,27 @@ def pre_action(state: AgentState,
     with the fused fleet kernel between this and :func:`apply_action` while
     sharing one copy of the control-step logic.
 
+    ``obs_mask`` ((M,) float 0/1) flags which modalities delivered fresh
+    telemetry this tick: masked modalities contribute zero evidence to the
+    belief update, are excluded from the replayed A-count learning, and (for
+    the error modality) hold the adaptive-preference EMA.
+
     Returns (model, q_next, replay, error_ema, unstable).
     """
-    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
+    error_ema = masked_error_ema(state.error_ema, raw_error_rate, cfg,
+                                 obs_mask)
     c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
     model = state.model._replace(c_log=c_log)
 
     q_prev = state.belief
     q_next = belief_mod.update_belief(model, q_prev, state.prev_action,
                                       obs_bins, cfg.topology, util_bins,
-                                      util_valid, cache=state.cache)
+                                      util_valid, cache=state.cache,
+                                      obs_mask=obs_mask)
 
     replay = learning.push_transition(
         state.replay, q_prev, q_next, obs_bins, state.prev_action,
-        state.dt_since_change)
+        state.dt_since_change, obs_mask=obs_mask)
     return model, q_next, replay, error_ema, unstable
 
 
@@ -142,7 +185,9 @@ def fast_step(state: AgentState,
               key: jax.Array,
               cfg: generative.AifConfig,
               util_bins: jnp.ndarray | None = None,
-              util_valid=False) -> tuple[AgentState, StepInfo]:
+              util_valid=False,
+              obs_mask: jnp.ndarray | None = None
+              ) -> tuple[AgentState, StepInfo]:
     """One 1-second control step.
 
     Args:
@@ -156,12 +201,16 @@ def fast_step(state: AgentState,
         order (heaviest tier first) — the paper's 10-second resource-metric
         query (§3).
       util_valid: gate for util_bins (True on scrape ticks only).
+      obs_mask: optional (M,) float 0/1 telemetry-validity mask — masked
+        modalities contribute zero belief evidence, no A-counts, and drop
+        out of the EFE risk/ambiguity terms.
     """
     model, q_next, replay, error_ema, unstable = pre_action(
-        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid, obs_mask)
 
     # --- action selection via EFE (Eq. 1) ----------------------------------
-    sampled, bd = efe_mod.select_action(key, model, q_next, cfg, state.cache)
+    sampled, bd = efe_mod.select_action(key, model, q_next, cfg, state.cache,
+                                        obs_mask)
     new_state, action = apply_action(state, model, q_next, replay, error_ema,
                                      unstable, sampled, cfg)
 
@@ -172,6 +221,7 @@ def fast_step(state: AgentState,
         belief_entropy=belief_mod.belief_entropy(q_next),
         unstable=unstable,
         obs_bins=obs_bins,
+        obs_mask=all_valid_mask(obs_bins) if obs_mask is None else obs_mask,
     )
     return new_state, info
 
@@ -198,11 +248,12 @@ def tick(state: AgentState,
          key: jax.Array,
          cfg: generative.AifConfig,
          util_bins: jnp.ndarray | None = None,
-         util_valid=False) -> tuple[AgentState, StepInfo]:
+         util_valid=False,
+         obs_mask: jnp.ndarray | None = None) -> tuple[AgentState, StepInfo]:
     """fast_step + conditionally the slow learning step (timescale separation)."""
     k_fast, k_slow = jax.random.split(key)
     state, info = fast_step(state, obs_bins, raw_error_rate, k_fast, cfg,
-                            util_bins, util_valid)
+                            util_bins, util_valid, obs_mask)
     period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
     do_learn = (state.t % period) == 0
     state = jax.lax.cond(
@@ -215,6 +266,19 @@ def tick(state: AgentState,
 
 
 def observe_and_discretize(raw_metrics: jnp.ndarray,
-                           disc: spaces.DiscretizationConfig) -> jnp.ndarray:
-    """Convenience: raw (latency_s, rps, queue, err) -> observation bins."""
-    return spaces.discretize_observation(raw_metrics, disc)
+                           disc: spaces.DiscretizationConfig,
+                           obs_mask: jnp.ndarray | None = None
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw (latency_s, rps, queue, err) -> (observation bins, validity mask).
+
+    Out-of-range raw metrics clamp to the edge bins
+    (:func:`repro.core.spaces.discretize_observation`).  ``obs_mask`` is the
+    telemetry pipeline's per-modality validity (e.g.
+    ``WindowInfo.obs_mask``); None means every modality is fresh and the
+    returned mask is all ones, so callers can thread the pair into
+    :func:`fast_step` / :func:`tick` unconditionally.
+    """
+    bins = spaces.discretize_observation(raw_metrics, disc)
+    if obs_mask is None:
+        obs_mask = all_valid_mask(bins)
+    return bins, jnp.asarray(obs_mask, jnp.float32)

@@ -9,6 +9,13 @@ states (243 for the paper's default):
 The likelihood factorizes over the observation modalities.  Everything
 is a plain function of arrays so it jits, vmaps (fleet mode) and differentiates
 cleanly; shapes derive from the :class:`~repro.core.topology.Topology`.
+
+Partial observability: every likelihood entry point takes an optional
+per-modality validity mask ``obs_mask`` ((M,) float 0/1, batchable).  A
+masked-out modality contributes *uniform (zero) log-evidence* — exactly the
+Bayesian treatment of a missing observation — so belief updates stay
+well-formed under scrape gaps, frozen gauges and exporter blackouts.
+``obs_mask=None`` (the default) is the exact pre-mask code path.
 """
 from __future__ import annotations
 
@@ -39,32 +46,44 @@ def prior_from_normalized(b_row: jnp.ndarray,
 
 
 def log_likelihood(a_counts: jnp.ndarray, obs_bins: jnp.ndarray,
-                   topo: Topology) -> jnp.ndarray:
+                   topo: Topology,
+                   obs_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """``log p(o_t | s)`` for every state, summed over modalities.
 
     Args:
       a_counts: (M, max_bins, S) observation-model pseudo-counts.
       obs_bins: (M,) int observation bin per modality.
       topo: the topology (bin mask / shapes).
+      obs_mask: optional (M,) validity mask — a masked (0) modality
+        contributes zero log-evidence (uniform likelihood).
 
     Returns:
       (S,) log-likelihood vector.
     """
     a = generative.normalize_a(a_counts, topo)             # (M, max_bins, S)
-    return log_likelihood_from_normalized(a, obs_bins)
+    return log_likelihood_from_normalized(a, obs_bins, obs_mask)
 
 
 def log_likelihood_from_normalized(na: jnp.ndarray,
-                                   obs_bins: jnp.ndarray) -> jnp.ndarray:
+                                   obs_bins: jnp.ndarray,
+                                   obs_mask: jnp.ndarray | None = None
+                                   ) -> jnp.ndarray:
     """``log p(o_t | s)`` from an already-normalized A (any batch shape).
 
     Args:
       na: (..., M, max_bins, S) normalized observation model.
       obs_bins: (..., M) int observation bin per modality.
+      obs_mask: optional (..., M) float validity mask.  A masked modality's
+        log-likelihood row is zeroed — uniform evidence, the posterior falls
+        back to the prior along that factor.  An all-ones mask is
+        bit-identical to ``obs_mask=None``.
     """
     per_modality = jnp.take_along_axis(
         na, obs_bins[..., None, None], axis=-2)[..., 0, :]   # (..., M, S)
-    return jnp.sum(jnp.log(jnp.maximum(per_modality, 1e-16)), axis=-2)
+    logp = jnp.log(jnp.maximum(per_modality, 1e-16))
+    if obs_mask is not None:
+        logp = logp * obs_mask[..., None]
+    return jnp.sum(logp, axis=-2)
 
 
 def util_log_likelihood(util_bins: jnp.ndarray, topo: Topology,
@@ -103,7 +122,8 @@ def update_belief(model: generative.GenerativeModel,
                   topo: Topology,
                   util_bins: jnp.ndarray | None = None,
                   util_valid=False,
-                  cache: generative.ModelCache | None = None) -> jnp.ndarray:
+                  cache: generative.ModelCache | None = None,
+                  obs_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Posterior ``q(s_t) ∝ p(o_t|s_t) · B_{a_{t-1}} q(s_{t-1})`` (Eq. 2).
 
     When a fresh utilization scrape is available (every 10th fast step) its
@@ -113,13 +133,16 @@ def update_belief(model: generative.GenerativeModel,
     With ``cache`` (the quasi-static :class:`~repro.core.generative.ModelCache`
     refreshed on slow-update ticks) the hot path reads pre-normalized tensors
     instead of re-normalizing the full pseudo-count model every second.
+
+    ``obs_mask`` ((M,) float 0/1) marks which modalities actually delivered a
+    fresh sample this tick; masked modalities contribute zero evidence.
     """
     if cache is not None:
         prior = prior_from_normalized(cache.nb[prev_action], belief)
-        loglik = log_likelihood_from_normalized(cache.na, obs_bins)
+        loglik = log_likelihood_from_normalized(cache.na, obs_bins, obs_mask)
     else:
         prior = predict_prior(model.b_counts, belief, prev_action)
-        loglik = log_likelihood(model.a_counts, obs_bins, topo)
+        loglik = log_likelihood(model.a_counts, obs_bins, topo, obs_mask)
     logp = loglik + jnp.log(jnp.maximum(prior, 1e-30))
     if util_bins is not None:
         logp = logp + jnp.where(util_valid,

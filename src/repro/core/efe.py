@@ -40,35 +40,48 @@ class EfeBreakdown(NamedTuple):
 def expected_free_energy(model: generative.GenerativeModel,
                          belief: jnp.ndarray,
                          cfg: generative.AifConfig,
-                         cache: generative.ModelCache | None = None
+                         cache: generative.ModelCache | None = None,
+                         obs_mask: jnp.ndarray | None = None
                          ) -> EfeBreakdown:
     """G(a) for all candidate actions (Eq. 1).
 
     With ``cache`` the quasi-static normalized model (nb, na, amb) is read
     instead of re-derived from pseudo-counts; only the preference term, which
     tracks the per-tick adaptive ``c_log``, is computed fresh.
+
+    ``obs_mask`` ((M,) float 0/1) restricts G to the currently *observable*
+    modalities: a dark modality can neither be steered toward preferences
+    (its risk term is unverifiable) nor deliver information (its expected
+    observation entropy is unrealizable), so both its risk and ambiguity
+    contributions are zeroed.  An all-ones mask equals ``obs_mask=None``.
     """
     topo = cfg.topology
     if cache is not None:
-        nb, na, amb_s = cache.nb, cache.na, cache.amb
+        nb, na, amb_s, amb_m = cache.nb, cache.na, cache.amb, cache.amb_m
     else:
         nb = generative.normalize_b(model.b_counts)
         na = generative.normalize_a(model.a_counts, topo)
-        amb_s = generative.ambiguity_from_normalized(na, topo)
+        amb_m = generative.modality_ambiguity_from_normalized(na, topo)
+        amb_s = jnp.sum(amb_m, axis=-2)
     s_pred = jnp.einsum("ats,s->at", nb, belief)                   # (A, S)
     s_pred = s_pred / jnp.maximum(jnp.sum(s_pred, axis=-1, keepdims=True),
                                   1e-30)
     o_pred = jnp.einsum("mbs,as->amb", na, s_pred)                 # (A, M, B)
 
-    # Risk: KL(ô ‖ σ(C)) per modality, summed.
+    # Risk: KL(ô ‖ σ(C)) per modality, summed (over observable modalities).
     c = generative.c_probs(model.c_log, topo)                # (M, B)
     mask = spaces.bins_mask(topo)                            # (M, B)
     log_ratio = jnp.log(jnp.maximum(o_pred, 1e-16)) - jnp.log(
         jnp.maximum(c, 1e-16))[None]
-    risk = jnp.sum(jnp.where(mask[None] > 0, o_pred * log_ratio, 0.0),
+    terms = o_pred * log_ratio
+    if obs_mask is not None:
+        terms = terms * obs_mask[None, :, None]
+    risk = jnp.sum(jnp.where(mask[None] > 0, terms, 0.0),
                    axis=(1, 2))                              # (A,)
 
     # Ambiguity: expected conditional observation entropy under ŝ_a.
+    if obs_mask is not None:
+        amb_s = generative.masked_ambiguity(amb_m, obs_mask)
     ambiguity = s_pred @ amb_s                               # (A,)
 
     cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
@@ -83,9 +96,10 @@ def select_action(key: jax.Array,
                   model: generative.GenerativeModel,
                   belief: jnp.ndarray,
                   cfg: generative.AifConfig,
-                  cache: generative.ModelCache | None = None):
+                  cache: generative.ModelCache | None = None,
+                  obs_mask: jnp.ndarray | None = None):
     """Sample ``a ~ softmax(−β G)``.  Returns (action, EfeBreakdown)."""
-    bd = expected_free_energy(model, belief, cfg, cache)
+    bd = expected_free_energy(model, belief, cfg, cache, obs_mask)
     action = jax.random.categorical(key, jnp.log(
         jnp.maximum(bd.action_probs, 1e-30)))
     return action, bd

@@ -64,25 +64,38 @@ def _fused_evidence(state: agent_mod.AgentState,
                     obs_bins: jnp.ndarray,
                     raw_error_rate: jnp.ndarray,
                     cfg: generative.AifConfig,
-                    util_bins, util_valid):
+                    util_bins, util_valid,
+                    obs_mask: jnp.ndarray | None = None):
     """Per-tick evidence shared by the fused selecting and held steps:
     adaptive preferences (paper §4.2 — the only per-tick model change) and
     the observation log-likelihood gathered from the cached normalized A.
+    ``obs_mask`` ((R, M)) zeroes the evidence of masked modalities before
+    the sum, so everything downstream (the fused kernel's VMEM-carried
+    posterior included) sees only valid telemetry.
 
     Returns (model-with-updated-c_log, error_ema, unstable, loglik).
     """
     topo = cfg.topology
-    error_ema = preferences.ema_update(state.error_ema, raw_error_rate, cfg)
+    error_ema = agent_mod.masked_error_ema(state.error_ema, raw_error_rate,
+                                           cfg, obs_mask)
     c_log, unstable = preferences.adapt_preferences(error_ema, cfg)
     model = state.model._replace(c_log=c_log)
 
     loglik = belief_mod.log_likelihood_from_normalized(state.cache.na,
-                                                       obs_bins)
+                                                       obs_bins, obs_mask)
     if util_bins is not None:
         util_ll = jax.vmap(
             lambda u: belief_mod.util_log_likelihood(u, topo))(util_bins)
         loglik = loglik + jnp.where(util_valid, util_ll, 0.0)
     return model, error_ema, unstable, loglik
+
+
+def _effective_amb(cache: generative.ModelCache,
+                   obs_mask: jnp.ndarray | None) -> jnp.ndarray:
+    """Per-state ambiguity under the tick's mask (cached amb when unmasked)."""
+    if obs_mask is None:
+        return cache.amb
+    return generative.masked_ambiguity(cache.amb_m, obs_mask)
 
 
 def _fused_fast_step(state: agent_mod.AgentState,
@@ -92,6 +105,7 @@ def _fused_fast_step(state: agent_mod.AgentState,
                      cfg: generative.AifConfig,
                      util_bins: jnp.ndarray | None,
                      util_valid,
+                     obs_mask: jnp.ndarray | None,
                      use_pallas: bool):
     """:func:`repro.core.agent.fast_step` with belief update *and* EFE fused
     into one fleet-kernel launch (:func:`repro.kernels.efe.ops.fleet_belief_efe`)
@@ -104,13 +118,14 @@ def _fused_fast_step(state: agent_mod.AgentState,
     topo = cfg.topology
     cache = state.cache
     model, error_ema, unstable, loglik = _fused_evidence(
-        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid, obs_mask)
 
     # Fused Eq. 2 → Eq. 1: posterior + G in one launch, belief stays on-chip.
     logc = generative.masked_log_c(model.c_log, topo)
     g, q_next = efe_ops.fleet_belief_efe(
-        cache.nb, cache.na, logc, cache.amb, state.belief, state.prev_action,
-        loglik, cfg, use_pallas=use_pallas)                # (R, A), (R, S)
+        cache.nb, cache.na, logc, _effective_amb(cache, obs_mask),
+        state.belief, state.prev_action, loglik, cfg, obs_mask=obs_mask,
+        use_pallas=use_pallas)                             # (R, A), (R, S)
 
     probs = jax.nn.softmax(-cfg.beta * g, axis=-1)
     sampled = jax.vmap(
@@ -119,7 +134,7 @@ def _fused_fast_step(state: agent_mod.AgentState,
 
     replay = jax.vmap(learning.push_transition)(
         state.replay, state.belief, q_next, obs_bins, state.prev_action,
-        state.dt_since_change)
+        state.dt_since_change, obs_mask)
 
     # apply_action is elementwise over the router axis — call it unbatched
     new_state, action = agent_mod.apply_action(
@@ -136,6 +151,8 @@ def _fused_fast_step(state: agent_mod.AgentState,
         belief_entropy=jax.vmap(belief_mod.belief_entropy)(q_next),
         unstable=unstable,
         obs_bins=obs_bins,
+        obs_mask=(agent_mod.all_valid_mask(obs_bins)
+                  if obs_mask is None else obs_mask),
     )
     return new_state, info
 
@@ -147,24 +164,24 @@ def fleet_fast_step(state: agent_mod.AgentState,
                     cfg: generative.AifConfig,
                     util_bins: jnp.ndarray | None = None,
                     util_valid=False,
+                    obs_mask: jnp.ndarray | None = None,
                     *,
                     fused: bool = False,
                     use_pallas: bool = False):
     """One fast step (belief → EFE → action) for the fleet; no slow learning.
 
-    ``keys`` are the per-router *fast* keys (one categorical draw each).
+    ``keys`` are the per-router *fast* keys (one categorical draw each);
+    ``obs_mask`` is the (R, M) telemetry-validity mask for this tick (None =
+    every modality fresh — the exact pre-mask program).
     """
     if fused:
         return _fused_fast_step(state, obs_bins, raw_error_rate, keys, cfg,
-                                util_bins, util_valid, use_pallas)
-    if util_bins is None:
-        return jax.vmap(
-            lambda s, o, e, k: agent_mod.fast_step(s, o, e, k, cfg)
-        )(state, obs_bins, raw_error_rate, keys)
+                                util_bins, util_valid, obs_mask, use_pallas)
+    # None arguments are empty pytrees — vmap maps only the array leaves.
     return jax.vmap(
-        lambda s, o, e, k, u: agent_mod.fast_step(s, o, e, k, cfg, u,
-                                                  util_valid)
-    )(state, obs_bins, raw_error_rate, keys, util_bins)
+        lambda s, o, e, k, u, m: agent_mod.fast_step(s, o, e, k, cfg, u,
+                                                     util_valid, m)
+    )(state, obs_bins, raw_error_rate, keys, util_bins, obs_mask)
 
 
 # -------------------------------------------------------- light (held) ticks
@@ -178,13 +195,13 @@ def _light_step_single(state: agent_mod.AgentState,
                        obs_bins: jnp.ndarray,
                        raw_error_rate: jnp.ndarray,
                        cfg: generative.AifConfig,
-                       util_bins, util_valid):
+                       util_bins, util_valid, obs_mask):
     """Single-agent fast step on a *held* (non-dwell) tick: belief update and
     bookkeeping only — the EFE term is skipped because ``apply_action`` would
     discard the sampled action anyway (``t % dwell != 0``).  Bit-identical to
     :func:`repro.core.agent.fast_step` state evolution on such ticks."""
     model, q_next, replay, error_ema, unstable = agent_mod.pre_action(
-        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid, obs_mask)
     new_state, action = agent_mod.apply_action(
         state, model, q_next, replay, error_ema, unstable,
         state.prev_action, cfg)
@@ -195,19 +212,19 @@ def _fused_light_step(state: agent_mod.AgentState,
                       obs_bins: jnp.ndarray,
                       raw_error_rate: jnp.ndarray,
                       cfg: generative.AifConfig,
-                      util_bins, util_valid):
+                      util_bins, util_valid, obs_mask):
     """Fleet-batched held tick for the fused path (no kernel launch): the
     cached-model belief update alone, via the same posterior math as the
     fused kernel's oracle twin
     (:func:`repro.kernels.efe.ref.belief_posterior_ref`)."""
     model, error_ema, unstable, loglik = _fused_evidence(
-        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
+        state, obs_bins, raw_error_rate, cfg, util_bins, util_valid, obs_mask)
     q_next = efe_ops.fleet_belief_posterior(
         state.cache.nb, state.belief, state.prev_action, loglik)
 
     replay = jax.vmap(learning.push_transition)(
         state.replay, state.belief, q_next, obs_bins, state.prev_action,
-        state.dt_since_change)
+        state.dt_since_change, obs_mask)
     new_state, action = agent_mod.apply_action(
         state, model, q_next, replay, error_ema, unstable,
         state.prev_action, cfg)
@@ -220,6 +237,7 @@ def fleet_light_step(state: agent_mod.AgentState,
                      cfg: generative.AifConfig,
                      util_bins: jnp.ndarray | None = None,
                      util_valid=False,
+                     obs_mask: jnp.ndarray | None = None,
                      *,
                      fused: bool = False):
     """Fleet fast step for a tick whose clock is off the action-dwell cadence
@@ -232,16 +250,13 @@ def fleet_light_step(state: agent_mod.AgentState,
     """
     if fused:
         new_state, (action, q_next, unstable) = _fused_light_step(
-            state, obs_bins, raw_error_rate, cfg, util_bins, util_valid)
-    elif util_bins is None:
-        new_state, (action, q_next, unstable) = jax.vmap(
-            lambda s, o, e: _light_step_single(s, o, e, cfg, None, False)
-        )(state, obs_bins, raw_error_rate)
+            state, obs_bins, raw_error_rate, cfg, util_bins, util_valid,
+            obs_mask)
     else:
         new_state, (action, q_next, unstable) = jax.vmap(
-            lambda s, o, e, u: _light_step_single(s, o, e, cfg, u,
-                                                  util_valid)
-        )(state, obs_bins, raw_error_rate, util_bins)
+            lambda s, o, e, u, m: _light_step_single(s, o, e, cfg, u,
+                                                     util_valid, m)
+        )(state, obs_bins, raw_error_rate, util_bins, obs_mask)
     info = agent_mod.StepInfo(
         action=action,
         routing_weights=policies.routing_weights(action, cfg.topology),
@@ -249,6 +264,8 @@ def fleet_light_step(state: agent_mod.AgentState,
         belief_entropy=jax.vmap(belief_mod.belief_entropy)(q_next),
         unstable=unstable,
         obs_bins=obs_bins,
+        obs_mask=(agent_mod.all_valid_mask(obs_bins)
+                  if obs_mask is None else obs_mask),
     )
     return new_state, info
 
@@ -299,6 +316,7 @@ def fleet_tick(state: agent_mod.AgentState,
                cfg: generative.AifConfig,
                util_bins: jnp.ndarray | None = None,
                util_valid=False,
+               obs_mask: jnp.ndarray | None = None,
                *,
                fused: bool = False,
                use_pallas: bool = False):
@@ -319,6 +337,8 @@ def fleet_tick(state: agent_mod.AgentState,
       util_bins: optional (R, K) int32 utilization scrape in state-factor
         order (heaviest tier first).
       util_valid: scalar gate for util_bins (True on scrape ticks; traced ok).
+      obs_mask: optional (R, M) float 0/1 telemetry-validity mask for this
+        tick's observations (None = all modalities fresh).
       fused: route belief update + EFE through the fused fleet kernel
         (:func:`repro.kernels.efe.ops.fleet_belief_efe`) instead of vmapping
         the per-router einsums.
@@ -330,16 +350,14 @@ def fleet_tick(state: agent_mod.AgentState,
         k_fast, k_slow = ks[:, 0], ks[:, 1]
         state, info = fleet_fast_step(state, obs_bins, raw_error_rate,
                                       k_fast, cfg, util_bins, util_valid,
+                                      obs_mask,
                                       fused=True, use_pallas=use_pallas)
         return fleet_slow_step(state, k_slow, cfg), info
 
-    if util_bins is None:
-        return jax.vmap(
-            lambda s, o, e, k: agent_mod.tick(s, o, e, k, cfg)
-        )(state, obs_bins, raw_error_rate, keys)
     return jax.vmap(
-        lambda s, o, e, k, u: agent_mod.tick(s, o, e, k, cfg, u, util_valid)
-    )(state, obs_bins, raw_error_rate, keys, util_bins)
+        lambda s, o, e, k, u, m: agent_mod.tick(s, o, e, k, cfg, u,
+                                                util_valid, m)
+    )(state, obs_bins, raw_error_rate, keys, util_bins, obs_mask)
 
 
 def fleet_routing_weights(info) -> jnp.ndarray:
@@ -355,6 +373,13 @@ class FleetTrace(NamedTuple):
     routing_weights: jnp.ndarray  # (T, R, K) applied weights
     raw_obs: jnp.ndarray          # (T, R, M) metrics the routers observed
     unstable: jnp.ndarray         # (T, R) adaptive-preference mode flag
+    # effective-observation fraction: share of modalities that delivered
+    # fresh telemetry into *this tick's* belief update (1.0 without
+    # degradation).  Like raw_obs, this lags the env stream by one window:
+    # env.obs_mask[t] is emitted by window t and feeds tick t+1, so
+    # obs_frac[t] == mean(env.obs_mask[t-1]) for mask-emitting engines
+    # (obs_frac[0] is the all-valid warm-up mask).
+    obs_frac: jnp.ndarray         # (T, R)
     env: Any                      # environment info pytree (engine-specific)
 
 
@@ -370,6 +395,7 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
                   *,
                   fused: bool = False,
                   use_pallas: bool = False,
+                  obs_masked: bool | None = None,
                   t0: int | None = None):
     """Closed-loop fleet experiment as one on-device *nested* ``lax.scan``.
 
@@ -379,6 +405,20 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
     The observation plumbing mirrors :class:`repro.envsim.routers.AifRouter`
     (same discretization, same 10-second utilization scrape in (H, M, L)
     order) so a fleet cell behaves like the single-router harness.
+
+    Telemetry degradation: when the environment adapter declares
+    ``env_step.emits_mask`` (see :func:`repro.envsim.batched.make_env_step`)
+    — or the caller passes ``obs_masked=True`` explicitly, for adapters that
+    emit ``WindowInfo.obs_mask`` without carrying the attribute (wrapped
+    closures, ``functools.partial``) — each window's mask is carried into
+    the next tick: masked modalities contribute zero belief evidence,
+    accumulate no A-counts, hold the adaptive-preference error EMA, and
+    drop out of the EFE risk/ambiguity terms; the trace records the
+    effective-observation fraction.  ``obs_masked=False`` forces the
+    mask-free program; the default (None) auto-detects from the attribute.
+    Without masks the rollout compiles the exact pre-mask program
+    (bit-identical to the pre-mask engine; the golden rollout test pins
+    this).
 
     The scan is nested to exploit the paper's timescale separation: the outer
     scan walks slow periods (``period = slow_period_s / fast_period_s``),
@@ -435,16 +475,20 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
         vals = np.unique(np.asarray(t))
         clock_phase = (int(vals[0]) % period if vals.size == 1
                        else None)        # mixed clocks -> flat safe mode
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
     return _fleet_rollout_impl(agent_state, env_state, env_step, n_steps,
                                key, cfg, disc, util_edges, util_period,
                                fused=fused, use_pallas=use_pallas,
+                               obs_masked=obs_masked,
                                clock_phase=clock_phase)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("env_step", "n_steps", "cfg", "disc",
                                     "util_edges", "util_period", "fused",
-                                    "use_pallas", "clock_phase"),
+                                    "use_pallas", "obs_masked",
+                                    "clock_phase"),
                    donate_argnames=("agent_state", "env_state"))
 def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
                         env_state,
@@ -458,6 +502,7 @@ def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
                         *,
                         fused: bool = False,
                         use_pallas: bool = False,
+                        obs_masked: bool = False,
                         clock_phase: int | None = 0):
     topo = cfg.topology
     disc = disc or spaces.DiscretizationConfig()
@@ -486,9 +531,14 @@ def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
     # and the fleet clock phase to be known (clock_phase is not None).
     dwell_blocked = (dwell > 1 and period % dwell == 0
                      and clock_phase is not None)
+    # Mask-emitting environments feed each window's telemetry-validity mask
+    # into the next tick; otherwise the mask stays an untouched all-ones
+    # carry and every step runs the mask-free path.  (Resolved statically in
+    # fleet_rollout: env_step.emits_mask or an explicit obs_masked=.)
+    emits_mask = obs_masked
 
     def tick_body(carry, t_idx, light: bool):
-        ast, est, raw_obs, tier_util, k, _ = carry
+        ast, est, raw_obs, tier_util, obs_mask, k, _ = carry
         k, k_env, k_agents = jax.random.split(k, 3)
         keys = jax.random.split(k_agents, r)
         ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
@@ -498,20 +548,25 @@ def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
         util_bins = jnp.sum(util_hml[..., None] >= edges, axis=-1
                             ).astype(jnp.int32)
         util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
+        mask = obs_mask if emits_mask else None
         if light:
             ast, info = fleet_light_step(ast, obs_bins, raw_obs[:, 3], cfg,
-                                         util_bins, util_valid, fused=fused)
+                                         util_bins, util_valid, mask,
+                                         fused=fused)
         else:
             ast, info = fleet_fast_step(ast, obs_bins, raw_obs[:, 3], k_fast,
-                                        cfg, util_bins, util_valid,
+                                        cfg, util_bins, util_valid, mask,
                                         fused=fused, use_pallas=use_pallas)
         est, win = env_step(est, info.routing_weights, t_idx, k_env)
+        next_mask = win.obs_mask if emits_mask else obs_mask
         ys = FleetTrace(actions=info.action,
                         routing_weights=info.routing_weights,
                         raw_obs=raw_obs,
                         unstable=info.unstable,
+                        obs_frac=jnp.mean(obs_mask, axis=-1),
                         env=win)
-        return (ast, est, win.raw_obs, win.tier_utilization, k, k_slow), ys
+        return (ast, est, win.raw_obs, win.tier_utilization, next_mask, k,
+                k_slow), ys
 
     def full_body(carry, t_idx):
         return tick_body(carry, t_idx, light=False)
@@ -570,16 +625,17 @@ def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
             lambda *xs: jnp.concatenate(xs, axis=0), *outs)
 
     def slow_after(carry):
-        ast, est, raw_obs, tier_util, k, k_slow = carry
+        ast, est, raw_obs, tier_util, obs_mask, k, k_slow = carry
         # Slow learning once per period, with the boundary tick's slow key —
         # not recomputed-and-discarded on the 9 intermediate ticks.
         ast = fleet_slow_step(ast, k_slow, cfg)
-        return (ast, est, raw_obs, tier_util, k, k_slow)
+        return (ast, est, raw_obs, tier_util, obs_mask, k, k_slow)
 
     obs0 = jnp.zeros((r, topo.n_modalities), jnp.float32)
     util0 = jnp.zeros((r, topo.n_tiers), jnp.float32)
+    mask0 = jnp.ones((r, topo.n_modalities), jnp.float32)
     k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
-    carry = (agent_state, env_state, obs0, util0, key, k_slow0)
+    carry = (agent_state, env_state, obs0, util0, mask0, key, k_slow0)
     traces = []
 
     if clock_phase is None:

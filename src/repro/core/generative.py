@@ -62,6 +62,10 @@ class ModelCache(NamedTuple):
     nb: jnp.ndarray    # (A, S, S) normalized transitions p(s'|s,a)
     na: jnp.ndarray    # (M, max_bins, S) normalized observations p(o|s)
     amb: jnp.ndarray   # (S,) per-state ambiguity Σ_m H[A_m(·|s)]
+    # per-modality ambiguity H[A_m(·|s)] — the masked-EFE path recombines it
+    # under the tick's observation-validity mask (see masked_ambiguity);
+    # amb == amb_m summed over modalities by construction.
+    amb_m: jnp.ndarray  # (M, S)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,24 +242,48 @@ def masked_log_c(c_log: jnp.ndarray, topo: Topology) -> jnp.ndarray:
     return jnp.where(mask > 0, logc, -60.0)
 
 
-def ambiguity_from_normalized(na: jnp.ndarray, topo: Topology) -> jnp.ndarray:
-    """Σ_m H[A_m(· | s)] per state from a normalized A.
+def modality_ambiguity_from_normalized(na: jnp.ndarray,
+                                       topo: Topology) -> jnp.ndarray:
+    """Per-modality conditional observation entropy H[A_m(· | s)].
 
     Batch-generic like :func:`repro.core.belief.log_likelihood_from_normalized`:
-    ``na`` is (..., M, max_bins, S) and the result is (..., S) — the fleet
+    ``na`` is (..., M, max_bins, S) and the result is (..., M, S) — the fleet
     path passes the (R, ...)-batched cache directly.
     """
     mask = spaces.bins_mask(topo)[:, :, None]
-    h = -jnp.sum(jnp.where(mask > 0, na * jnp.log(jnp.maximum(na, 1e-16)),
-                           0.0), axis=-2)              # (..., M, S)
-    return jnp.sum(h, axis=-2)
+    return -jnp.sum(jnp.where(mask > 0,
+                              na * jnp.log(jnp.maximum(na, 1e-16)),
+                              0.0), axis=-2)           # (..., M, S)
+
+
+def ambiguity_from_normalized(na: jnp.ndarray, topo: Topology) -> jnp.ndarray:
+    """Σ_m H[A_m(· | s)] per state from a normalized A ((..., S))."""
+    return jnp.sum(modality_ambiguity_from_normalized(na, topo), axis=-2)
+
+
+def masked_ambiguity(amb_m: jnp.ndarray,
+                     obs_mask: jnp.ndarray) -> jnp.ndarray:
+    """Effective per-state ambiguity under an observation-validity mask.
+
+    ``Σ_m mask_m · H[A_m(·|s)]`` — a modality whose telemetry is dark cannot
+    deliver information, so its expected observation entropy drops out of
+    the EFE exploration term.  With an all-ones mask this reduction is
+    bit-identical to the cached ``amb`` (same values, same sum axis).
+
+    Args:
+      amb_m: (..., M, S) per-modality ambiguity (``ModelCache.amb_m``).
+      obs_mask: (..., M) float validity mask.
+    """
+    return jnp.sum(amb_m * obs_mask[..., None], axis=-2)
 
 
 def derive_cache(model: GenerativeModel, topo: Topology) -> ModelCache:
     """Normalize the quasi-static model once (called on slow-update ticks)."""
     na = normalize_a(model.a_counts, topo)
+    amb_m = modality_ambiguity_from_normalized(na, topo)
     return ModelCache(
         nb=normalize_b(model.b_counts),
         na=na,
-        amb=ambiguity_from_normalized(na, topo),
+        amb=jnp.sum(amb_m, axis=-2),
+        amb_m=amb_m,
     )

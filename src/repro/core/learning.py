@@ -5,7 +5,10 @@ buffer of recent transitions:
 
 * **Observation model A** — for each observed ``(o_t, q(s_t))`` pair,
   posterior-weighted pseudo-count accumulation
-  ``A[m][o_m, :] += α · q(s_t)`` with ``α = 0.05``.
+  ``A[m][o_m, :] += α · q(s_t)`` with ``α = 0.05``.  The replay buffer
+  carries each transition's per-modality observation-validity mask; masked
+  (stale/missing) modalities accumulate no counts, so degraded telemetry
+  cannot teach the model that a replayed gauge value "belongs" to a state.
 
 * **Transition model B** — posterior-outer-product counts
   ``B[a][:, :] += α_B · w(Δt) · q(s_{t+1}) q(s_t)^T`` where the *sigmoid
@@ -36,6 +39,7 @@ class ReplayBuffer(NamedTuple):
     q_prev: jnp.ndarray      # (cap, S) posterior at t
     q_next: jnp.ndarray      # (cap, S) posterior at t+1
     obs_bins: jnp.ndarray    # (cap, M) int32 observation at t+1
+    obs_mask: jnp.ndarray    # (cap, M) float32 validity of each modality
     action: jnp.ndarray      # (cap,) int32 action taken at t
     dt_since_change: jnp.ndarray  # (cap,) float32 seconds since action change
     cursor: jnp.ndarray      # () int32 next write slot
@@ -49,6 +53,7 @@ def init_replay(capacity: int, topo: Topology) -> ReplayBuffer:
         q_prev=jnp.zeros((capacity, s), jnp.float32),
         q_next=jnp.zeros((capacity, s), jnp.float32),
         obs_bins=jnp.zeros((capacity, m), jnp.int32),
+        obs_mask=jnp.ones((capacity, m), jnp.float32),
         action=jnp.zeros((capacity,), jnp.int32),
         dt_since_change=jnp.zeros((capacity,), jnp.float32),
         cursor=jnp.zeros((), jnp.int32),
@@ -61,14 +66,23 @@ def push_transition(buf: ReplayBuffer,
                     q_next: jnp.ndarray,
                     obs_bins: jnp.ndarray,
                     action,
-                    dt_since_change) -> ReplayBuffer:
-    """Write one transition at the ring cursor (jit-safe, O(1))."""
+                    dt_since_change,
+                    obs_mask: jnp.ndarray | None = None) -> ReplayBuffer:
+    """Write one transition at the ring cursor (jit-safe, O(1)).
+
+    ``obs_mask`` records which modalities delivered a *fresh* sample at t+1
+    (None = all of them); the slow A-update later excludes masked entries so
+    stale or absent telemetry never pollutes the observation pseudo-counts.
+    """
     cap = buf.q_prev.shape[0]
     i = buf.cursor
+    if obs_mask is None:
+        obs_mask = jnp.ones(buf.obs_mask.shape[-1], jnp.float32)
     return ReplayBuffer(
         q_prev=buf.q_prev.at[i].set(q_prev),
         q_next=buf.q_next.at[i].set(q_next),
         obs_bins=buf.obs_bins.at[i].set(jnp.asarray(obs_bins, jnp.int32)),
+        obs_mask=buf.obs_mask.at[i].set(jnp.asarray(obs_mask, jnp.float32)),
         action=buf.action.at[i].set(jnp.asarray(action, jnp.int32)),
         dt_since_change=buf.dt_since_change.at[i].set(
             jnp.asarray(dt_since_change, jnp.float32)),
@@ -99,7 +113,9 @@ def update_observation_model(a_counts: jnp.ndarray,
                              q_next: jnp.ndarray,
                              obs_bins: jnp.ndarray,
                              weight: jnp.ndarray,
-                             cfg: generative.AifConfig) -> jnp.ndarray:
+                             cfg: generative.AifConfig,
+                             obs_mask: jnp.ndarray | None = None
+                             ) -> jnp.ndarray:
     """Batched ``A[m][o_m, :] += α · q(s)`` (posterior-weighted counts).
 
     Args:
@@ -107,10 +123,16 @@ def update_observation_model(a_counts: jnp.ndarray,
       q_next:   (batch, S) posteriors.
       obs_bins: (batch, M) observed bins.
       weight:   (batch,) 0/1 validity weights.
+      obs_mask: optional (batch, M) per-modality validity — a masked entry's
+        modality contributes no counts (the bin value is a stale replay or a
+        placeholder, not evidence about the state).
     """
     onehot = spaces.one_hot_observation(
         obs_bins, cfg.topology.max_bins)                   # (batch, M, B)
-    upd = jnp.einsum("nmb,ns->mbs", onehot * weight[:, None, None], q_next)
+    w = onehot * weight[:, None, None]
+    if obs_mask is not None:
+        w = w * obs_mask[:, :, None]
+    upd = jnp.einsum("nmb,ns->mbs", w, q_next)
     return a_counts + cfg.alpha_a * upd
 
 
@@ -138,10 +160,12 @@ def slow_update(key: jax.Array,
     q_prev = buf.q_prev[idx]
     q_next = buf.q_next[idx]
     obs = buf.obs_bins[idx]
+    mask = buf.obs_mask[idx]
     act = buf.action[idx]
     dts = buf.dt_since_change[idx]
 
-    a_new = update_observation_model(model.a_counts, q_next, obs, valid, cfg)
+    a_new = update_observation_model(model.a_counts, q_next, obs, valid, cfg,
+                                     obs_mask=mask)
     b_new = update_transition_model(model.b_counts, q_prev, q_next, act, dts,
                                     valid, cfg)
     return model._replace(a_counts=a_new, b_counts=b_new)

@@ -135,17 +135,26 @@ def discretize_observation(raw: jnp.ndarray,
                            cfg: DiscretizationConfig) -> jnp.ndarray:
     """Map raw metric values to per-modality observation bin ids.
 
+    Out-of-range values clamp to the edge bins explicitly: a ``+inf`` metric
+    (e.g. a latency blowup under zero drain) would otherwise count the +inf
+    padding edges too and index past the modality's last real bin — straight
+    into zero-mass padded A-columns; ``NaN`` compares false everywhere and
+    lands in bin 0.
+
     Args:
       raw: (..., n_modalities) float array of raw metric values.
       cfg: bin edges.
 
     Returns:
-      (..., n_modalities) int32 array of observation bin indices.
+      (..., n_modalities) int32 array of observation bin indices, each in
+      ``[0, len(edges_m)]`` for its modality.
     """
     edges = cfg.as_padded_edges()                       # (M, width)
     raw = jnp.asarray(raw, dtype=jnp.float32)
-    # bin = number of edges strictly below the value.
-    return jnp.sum(raw[..., :, None] >= edges, axis=-1).astype(jnp.int32)
+    # bin = number of edges at or below the value.
+    bins = jnp.sum(raw[..., :, None] >= edges, axis=-1).astype(jnp.int32)
+    top_bin = jnp.asarray([len(e) for e in cfg.modality_edges()], jnp.int32)
+    return jnp.minimum(bins, top_bin)
 
 
 def one_hot_observation(obs_bins: jnp.ndarray, max_bins: int) -> jnp.ndarray:

@@ -1,16 +1,19 @@
 """Calibrated discrete-event simulator of the paper's edge testbed, plus the
 batched fluid engine and scenario library for fleet-scale experiments."""
-from repro.envsim.batched import (FluidParams, FluidResult, FluidState,
-                                  WindowInfo, fluid_window_step,
+from repro.envsim.batched import (N_OBS_MODALITIES, FluidParams, FluidResult,
+                                  FluidState, WindowInfo, fluid_window_step,
                                   init_fluid_state, make_env_step,
-                                  params_from_config, run_fluid, summarize)
+                                  make_scenario_env_step, params_from_config,
+                                  run_fluid, summarize)
 from repro.envsim.config import (TIER_CLASSES, SimConfig, TierConfig,
                                  default_tiers, discretization_for,
                                  sim_config_for, tiers_for_topology)
 from repro.envsim.harness import (StrategySummary, evaluate_strategy, table1)
 from repro.envsim.routers import AifRouter
 from repro.envsim.scenarios import (SCENARIOS, Profile, ScenarioBatch,
-                                    build_scenario, compile_scenario, compose)
+                                    build_scenario, compile_scenario, compose,
+                                    scrape_blackout, stale_replay,
+                                    telemetry_dropout)
 from repro.envsim.simulator import (EdgeSimulator, MetricsSnapshot, RunResult,
                                     run_experiment)
 
@@ -20,9 +23,11 @@ __all__ = ["SimConfig", "TierConfig", "default_tiers", "discretization_for",
            "evaluate_strategy", "table1", "AifRouter", "EdgeSimulator",
            "MetricsSnapshot", "RunResult", "run_experiment",
            # batched fluid engine
-           "FluidParams", "FluidResult", "FluidState", "WindowInfo",
-           "fluid_window_step", "init_fluid_state", "make_env_step",
-           "params_from_config", "run_fluid", "summarize",
+           "N_OBS_MODALITIES", "FluidParams", "FluidResult", "FluidState",
+           "WindowInfo", "fluid_window_step", "init_fluid_state",
+           "make_env_step", "make_scenario_env_step", "params_from_config",
+           "run_fluid", "summarize",
            # scenarios
            "SCENARIOS", "Profile", "ScenarioBatch", "build_scenario",
-           "compile_scenario", "compose"]
+           "compile_scenario", "compose", "scrape_blackout", "stale_replay",
+           "telemetry_dropout"]

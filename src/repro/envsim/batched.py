@@ -27,6 +27,17 @@ within a few percentage points of the event-driven simulator and P95 within
 the same latency regime (tests/test_batched_env.py pins both); per-request
 effects (ordering, per-request timeout at dequeue) are intentionally averaged
 out.
+
+Telemetry validity: the engine separates the *world* from the *telemetry
+pipeline*.  Internals (EMAs, backlog, hazards) always advance on true flow;
+what a router sees is ``WindowInfo.raw_obs`` + ``WindowInfo.obs_mask``.  A
+scenario's (T, R, M) ``obs_valid`` schedule and/or the ``restart_blackout``
+coupling (a down pod emits nothing) zero per-modality mask entries; masked
+modalities re-emit the last *published* value (a scraped gauge holds between
+refreshes), so mask-oblivious consumers act on stale data while mask-aware
+consumers (:func:`repro.core.fleet.fleet_rollout`) discount the evidence.
+With no degradation configured the engine runs the exact pre-mask program
+(``obs_mask`` all ones, ``raw_obs`` bit-identical).
 """
 from __future__ import annotations
 
@@ -40,6 +51,9 @@ import numpy as np
 from repro.envsim.config import SimConfig
 
 _EPS = 1e-9
+
+# Telemetry modalities published per window: p95_s, rps, queue_depth, err.
+N_OBS_MODALITIES = 4
 
 
 class FluidParams(NamedTuple):
@@ -87,6 +101,7 @@ class FluidState(NamedTuple):
     p95_ema: jnp.ndarray          # (R,) observed P95 (sliding-window approx)
     rps_ema: jnp.ndarray          # (R,) observed offered RPS
     err_ema: jnp.ndarray          # (R,) observed error rate
+    held_obs: jnp.ndarray         # (R, M) last *published* telemetry values
     # cumulative accounting (floats: request *mass*)
     n_requests: jnp.ndarray       # (R,)
     n_success: jnp.ndarray        # (R,)
@@ -103,6 +118,7 @@ class WindowInfo(NamedTuple):
     """Per-window observables + diagnostics (what a router may see)."""
 
     raw_obs: jnp.ndarray          # (R, M): p95_s, rps, queue_depth, err_rate
+    obs_mask: jnp.ndarray         # (R, M) 1 = fresh sample, 0 = stale/missing
     tier_utilization: jnp.ndarray  # (R, K) 10 s scrape (paper §3)
     tier_up: jnp.ndarray          # (R, K) liveness probe
     tier_latency_s: jnp.ndarray   # (R, K) mean latency of this window's flow
@@ -192,6 +208,7 @@ def init_fluid_state(params: FluidParams) -> FluidState:
     return FluidState(
         backlog=zt(), down_left=zt(), util_accum=zt(), util_scrape=zt(),
         prev_tier_rps=zt(), p95_ema=z(), rps_ema=z(), err_ema=z(),
+        held_obs=jnp.zeros((r, N_OBS_MODALITIES), jnp.float32),
         n_requests=z(), n_success=z(), err_timeout=z(), err_overflow=z(),
         err_refused=z(), err_restart=z(), tier_requests=zt(), tier_success=zt(),
         n_restarts=zt(),
@@ -226,7 +243,10 @@ def fluid_window_step(params: FluidParams,
                       key: jax.Array,
                       t_idx: jnp.ndarray,
                       dt: float = 1.0,
-                      scrape_every: int = 10) -> tuple[FluidState, WindowInfo]:
+                      scrape_every: int = 10,
+                      obs_valid: jnp.ndarray | None = None,
+                      restart_blackout: bool = False
+                      ) -> tuple[FluidState, WindowInfo]:
     """Advance every cell one control window under the given routing weights.
 
     Args:
@@ -237,6 +257,12 @@ def fluid_window_step(params: FluidParams,
       t_idx: () int32 window index (drives the 10 s utilization scrape).
       dt: control-window length in seconds (static).
       scrape_every: windows between utilization scrapes (static).
+      obs_valid: optional (R, M) 0/1 telemetry-validity mask this window
+        (from the scenario's degradation schedule); masked modalities
+        re-emit the last published value and are flagged in
+        ``WindowInfo.obs_mask``.
+      restart_blackout: statically couple telemetry to pod liveness — a cell
+        with any tier down publishes nothing (every modality masked).
     """
     w = jnp.maximum(weights, 0.0)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
@@ -320,6 +346,26 @@ def fluid_window_step(params: FluidParams,
     rps_ema = (1 - a_rps) * state.rps_ema + a_rps * arrival_rate
     queue_depth = jnp.sum(jnp.maximum(backlog2 - params.servers, 0.0), axis=-1)
 
+    # ---- telemetry pipeline (validity mask + stale-hold emission) ---------
+    fresh_obs = jnp.stack([p95_ema, rps_ema, queue_depth, err_ema], axis=-1)
+    if obs_valid is None and not restart_blackout:
+        # degradation-free program: publish fresh values (pre-mask path)
+        obs_mask = jnp.ones_like(fresh_obs)
+        published = fresh_obs
+    else:
+        obs_mask = (jnp.ones_like(fresh_obs) if obs_valid is None
+                    else jnp.asarray(obs_valid, jnp.float32))
+        if restart_blackout:
+            cell_up = jnp.all(down_left <= _EPS, axis=-1)   # (R,) bool
+            obs_mask = obs_mask * cell_up[:, None].astype(jnp.float32)
+            # the 10 s utilization scrape endpoint is down too: the cell
+            # re-publishes its last scrape instead of leaking live state
+            # from a pod the scenario declares dark
+            util_scrape = jnp.where(cell_up[:, None], util_scrape,
+                                    state.util_scrape)
+        # a masked gauge holds its last published value (stale replay)
+        published = jnp.where(obs_mask > 0, fresh_obs, state.held_obs)
+
     new_state = FluidState(
         backlog=backlog2,
         down_left=down_left,
@@ -329,6 +375,7 @@ def fluid_window_step(params: FluidParams,
         p95_ema=p95_ema,
         rps_ema=rps_ema,
         err_ema=err_ema,
+        held_obs=published,
         n_requests=state.n_requests + jnp.sum(arr, axis=-1),
         n_success=state.n_success + win_success,
         err_timeout=state.err_timeout + jnp.sum(timed_out, axis=-1),
@@ -340,7 +387,8 @@ def fluid_window_step(params: FluidParams,
         n_restarts=state.n_restarts + restarted,
     )
     info = WindowInfo(
-        raw_obs=jnp.stack([p95_ema, rps_ema, queue_depth, err_ema], axis=-1),
+        raw_obs=published,
+        obs_mask=obs_mask,
         tier_utilization=util_scrape,
         tier_up=(down_left <= _EPS).astype(jnp.float32),
         tier_latency_s=tier_latency,
@@ -354,14 +402,18 @@ def fluid_window_step(params: FluidParams,
 
 
 # ------------------------------------------------------------------ rollouts
-@functools.partial(jax.jit, static_argnames=("dt", "scrape_every"))
+@functools.partial(jax.jit, static_argnames=("dt", "scrape_every",
+                                             "restart_blackout"))
 def run_fluid(params: FluidParams,
               arrival_rate: jnp.ndarray,
               hazard_scale: jnp.ndarray,
               weights: jnp.ndarray,
               key: jax.Array,
               dt: float = 1.0,
-              scrape_every: int = 10) -> tuple[FluidState, WindowInfo]:
+              scrape_every: int = 10,
+              obs_valid: jnp.ndarray | None = None,
+              restart_blackout: bool = False
+              ) -> tuple[FluidState, WindowInfo]:
     """Static-router rollout: one ``lax.scan`` over T windows, no Python loop.
 
     Args:
@@ -369,6 +421,8 @@ def run_fluid(params: FluidParams,
       hazard_scale: (T, R, K) restart-hazard multiplier schedule.
       weights: (K,), (R, K) or (T, R, K) routing weights.
       key: PRNG key.
+      obs_valid: optional (T, R, M) telemetry-validity schedule.
+      restart_blackout: see :func:`fluid_window_step` (static).
 
     Returns:
       (final FluidState, stacked WindowInfo traces with leading T axis).
@@ -382,12 +436,14 @@ def run_fluid(params: FluidParams,
     keys = jax.random.split(key, t_total)
 
     def step(state, xs):
-        t_idx, rate, hz, w_t, k = xs
+        t_idx, rate, hz, w_t, ov, k = xs
         return fluid_window_step(params, state, w_t, rate, hz, k, t_idx,
-                                 dt=dt, scrape_every=scrape_every)
+                                 dt=dt, scrape_every=scrape_every,
+                                 obs_valid=ov,
+                                 restart_blackout=restart_blackout)
 
     xs = (jnp.arange(t_total, dtype=jnp.int32), arrival_rate, hazard_scale,
-          weights, keys)
+          weights, obs_valid, keys)
     return jax.lax.scan(step, init_fluid_state(params), xs)
 
 
@@ -395,23 +451,52 @@ def make_env_step(params: FluidParams,
                   arrival_rate: jnp.ndarray,
                   hazard_scale: jnp.ndarray,
                   dt: float = 1.0,
-                  scrape_every: int = 10):
+                  scrape_every: int = 10,
+                  obs_valid: jnp.ndarray | None = None,
+                  restart_blackout: bool = False):
     """Adapt the fluid engine to :func:`repro.core.fleet.fleet_rollout`.
 
     Returns an ``env_step(env_state, weights, t_idx, key) -> (env_state,
     WindowInfo)`` closure over the scenario schedules; the schedules are
     closed-over jnp arrays indexed by the traced window counter, so the whole
     rollout stays one jitted scan.
+
+    Telemetry degradation: pass the scenario's (T, R, M) ``obs_valid``
+    schedule and/or ``restart_blackout`` (see
+    :class:`repro.envsim.scenarios.ScenarioBatch`) and the emitted
+    ``WindowInfo.obs_mask`` carries per-modality validity.  The closure's
+    ``emits_mask`` attribute tells mask-aware consumers
+    (:func:`repro.core.fleet.fleet_rollout`) statically whether degradation
+    is configured — without it they compile the exact pre-mask program.
     """
     arrival_rate = jnp.asarray(arrival_rate)
     hazard_scale = jnp.asarray(hazard_scale)
+    if obs_valid is not None:
+        obs_valid = jnp.asarray(obs_valid, jnp.float32)
 
     def env_step(env_state, weights, t_idx, key):
+        ov = None if obs_valid is None else obs_valid[t_idx]
         return fluid_window_step(params, env_state, weights,
                                  arrival_rate[t_idx], hazard_scale[t_idx],
-                                 key, t_idx, dt=dt, scrape_every=scrape_every)
+                                 key, t_idx, dt=dt, scrape_every=scrape_every,
+                                 obs_valid=ov,
+                                 restart_blackout=restart_blackout)
 
+    env_step.emits_mask = obs_valid is not None or restart_blackout
     return env_step
+
+
+def make_scenario_env_step(params: FluidParams, sc, dt: float = 1.0,
+                           scrape_every: int = 10):
+    """:func:`make_env_step` from a compiled
+    :class:`~repro.envsim.scenarios.ScenarioBatch` — unpacks *every*
+    schedule, telemetry degradation included, so a call site cannot
+    silently drop a scenario's ``obs_valid`` / ``restart_blackout``."""
+    return make_env_step(params, jnp.asarray(sc.arrival_rate),
+                         jnp.asarray(sc.hazard_scale), dt=dt,
+                         scrape_every=scrape_every,
+                         obs_valid=sc.obs_valid,
+                         restart_blackout=sc.restart_blackout)
 
 
 def summarize(final: FluidState, trace: WindowInfo) -> FluidResult:

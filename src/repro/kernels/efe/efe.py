@@ -48,6 +48,44 @@ def default_block_r(r: int, s: int) -> int:
     return br
 
 
+def _efe_compute(b, q, a_norm, logc, amb, cost, maskb=None):
+    """Shared EFE math for one (router-block, action) tile.
+
+    b: (BR, S̄, S̄) transition tile, q: (BR, S̄) beliefs,
+    a_norm: (BR, M, NB, S̄), logc: (BR, M, NB), amb: (BR, S̄),
+    cost: () this action's Cost(a), maskb: optional (BR, M, NB)
+    observation-validity mask broadcast over bins — masked modalities drop
+    out of the risk reduction (ambiguity masking happens upstream via the
+    effective ``amb`` operand).  Returns G (BR,).
+    """
+    # ŝ_a = B_a q — batched mat-vec on the MXU.
+    s_pred = jax.lax.dot_general(
+        b, q[..., None],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[..., 0]    # (BR, S̄)
+    s_pred = s_pred / jnp.maximum(
+        jnp.sum(s_pred, axis=-1, keepdims=True), 1e-30)
+
+    # ô_m = A_m ŝ_a for every modality/bin.
+    br, m, nb, s = a_norm.shape
+    o_pred = jax.lax.dot_general(
+        a_norm.reshape(br, m * nb, s), s_pred[..., None],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[..., 0]    # (BR, M·NB)
+
+    terms = jnp.where(
+        o_pred > 1e-20,
+        o_pred * (jnp.log(jnp.maximum(o_pred, 1e-30))
+                  - logc.reshape(br, m * nb)),
+        0.0)
+    if maskb is not None:
+        terms = terms * maskb.reshape(br, m * nb)
+    risk = jnp.sum(terms, axis=-1)                    # (BR,)
+
+    ambiguity = jnp.sum(s_pred * amb, axis=-1)
+    return risk + ambiguity + cost
+
+
 def _efe_kernel(b_ref, q_ref, a_ref, logc_ref, amb_ref, cost_ref, out_ref):
     """One (router-block, action) grid step.
 
@@ -59,40 +97,28 @@ def _efe_kernel(b_ref, q_ref, a_ref, logc_ref, amb_ref, cost_ref, out_ref):
     cost_ref: (1, 1)           this action's Cost(a)
     out_ref:  (BR, 1)          G(r, a)
     """
-    b = b_ref[:, 0]                                   # (BR, S̄, S̄)
-    q = q_ref[...]                                    # (BR, S̄)
+    out_ref[:, 0] = _efe_compute(b_ref[:, 0], q_ref[...], a_ref[...],
+                                 logc_ref[...], amb_ref[...], cost_ref[0, 0])
 
-    # ŝ_a = B_a q — batched mat-vec on the MXU.
-    s_pred = jax.lax.dot_general(
-        b, q[..., None],
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)[..., 0]    # (BR, S̄)
-    s_pred = s_pred / jnp.maximum(
-        jnp.sum(s_pred, axis=-1, keepdims=True), 1e-30)
 
-    # ô_m = A_m ŝ_a for every modality/bin.
-    a_norm = a_ref[...]                               # (BR, M, NB, S̄)
-    br, m, nb, s = a_norm.shape
-    o_pred = jax.lax.dot_general(
-        a_norm.reshape(br, m * nb, s), s_pred[..., None],
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)[..., 0]    # (BR, M·NB)
+def _efe_kernel_masked(b_ref, q_ref, a_ref, logc_ref, mask_ref, amb_ref,
+                       cost_ref, out_ref):
+    """Mask-aware twin of :func:`_efe_kernel`.
 
-    logc = logc_ref[...].reshape(br, m * nb)
-    risk = jnp.sum(
-        jnp.where(o_pred > 1e-20,
-                  o_pred * (jnp.log(jnp.maximum(o_pred, 1e-30)) - logc),
-                  0.0),
-        axis=-1)                                      # (BR,)
-
-    ambiguity = jnp.sum(s_pred * amb_ref[...], axis=-1)
-    out_ref[:, 0] = risk + ambiguity + cost_ref[0, 0]
+    mask_ref: (BR, M, NB) per-modality observation-validity, pre-broadcast
+    over bins; the ``amb`` operand is expected to already be the
+    mask-effective ambiguity (see ``repro.core.generative.masked_ambiguity``).
+    """
+    out_ref[:, 0] = _efe_compute(b_ref[:, 0], q_ref[...], a_ref[...],
+                                 logc_ref[...], amb_ref[...], cost_ref[0, 0],
+                                 maskb=mask_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
 def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
                      a_norm: jnp.ndarray, logc: jnp.ndarray,
                      amb: jnp.ndarray, cost: jnp.ndarray,
+                     obs_mask: jnp.ndarray | None = None,
                      *, block_r: int = 8,
                      interpret: bool) -> jnp.ndarray:
     """G (R, A) for a fleet.  See ref.py for input semantics.
@@ -100,6 +126,11 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
     Shape-generic: works for any (R, A, S, S) / (R, M, NB, S) operands; S is
     padded to the lane-width multiple internally.  ``block_r`` must divide R
     (:func:`repro.kernels.efe.ops.fleet_efe` picks a valid one).
+
+    ``obs_mask`` ((R, M) float 0/1) selects the mask-aware kernel: masked
+    modalities drop out of the risk reduction, and the ``amb`` operand must
+    then be the mask-effective ambiguity.  None compiles the exact unmasked
+    kernel.
 
     ``interpret`` is deliberately required: only the :mod:`..ops` wrapper
     auto-detects the backend, so a direct caller can't silently run the
@@ -117,24 +148,33 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
         amb = jnp.pad(amb, ((0, 0), (0, pad)))
 
     grid = (r // block_r, a)
+    bspec = [
+        pl.BlockSpec((block_r, 1, s_pad, s_pad), lambda i, j: (i, j, 0, 0)),
+        pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+    ]
+    operands = [b_norm.astype(jnp.float32), q.astype(jnp.float32),
+                a_norm.astype(jnp.float32), logc.astype(jnp.float32),
+                amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :]]
+    kernel = _efe_kernel
+    if obs_mask is not None:
+        kernel = _efe_kernel_masked
+        maskb = jnp.broadcast_to(
+            obs_mask.astype(jnp.float32)[:, :, None], (r, m, nb))
+        bspec.insert(4, pl.BlockSpec((block_r, m, nb),
+                                     lambda i, j: (i, 0, 0)))
+        operands.insert(4, maskb)
     out = pl.pallas_call(
-        _efe_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_r, 1, s_pad, s_pad),
-                         lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, j)),
-        ],
+        in_specs=bspec,
         out_specs=pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, a), jnp.float32),
         interpret=interpret,
-    )(b_norm.astype(jnp.float32), q.astype(jnp.float32),
-      a_norm.astype(jnp.float32), logc.astype(jnp.float32),
-      amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :])
+    )(*operands)
     return out
 
 
@@ -147,20 +187,16 @@ def efe_fleet_pallas(b_norm: jnp.ndarray, q: jnp.ndarray,
 _LOGLIK_PAD = -1e9
 
 
-def _belief_efe_kernel(bprev_ref, qprev_ref, ll_ref, b_ref, a_ref, logc_ref,
-                       amb_ref, cost_ref, g_ref, qout_ref, q_scr):
-    """One (router-block, action) grid step of the fused tick.
+def _belief_update_into_scratch(bprev_ref, qprev_ref, ll_ref, qout_ref,
+                                q_scr):
+    """Posterior (Eq. 2) at the first action step, parked in VMEM scratch.
 
     The action axis is the innermost (sequential) grid dimension, so the
     posterior for a router block is computed exactly once — at the first
-    action step — and parked in VMEM scratch for the remaining A-1 steps.
-
-    bprev_ref: (BR, S̄, S̄)  previously-applied action's transition row
-    qprev_ref: (BR, S̄)      beliefs before the tick
-    ll_ref:    (BR, S̄)      observation log-likelihood (padded _LOGLIK_PAD)
-    b/a/logc/amb/cost/g:     as in :func:`_efe_kernel`
-    qout_ref:  (BR, S̄)      posterior after the tick (written once)
-    q_scr:     (BR, S̄)      VMEM scratch carrying q across action steps
+    action step — and read from scratch for the remaining A-1 steps.  The
+    observation-validity mask enters through ``ll_ref``: masked modalities
+    were zeroed out of the summed log-likelihood before launch, so the
+    VMEM-carried posterior already reflects only valid evidence.
     """
     j = pl.program_id(1)
 
@@ -181,7 +217,33 @@ def _belief_efe_kernel(bprev_ref, qprev_ref, ll_ref, b_ref, a_ref, logc_ref,
         q_scr[...] = qn
         qout_ref[...] = qn
 
+
+def _belief_efe_kernel(bprev_ref, qprev_ref, ll_ref, b_ref, a_ref, logc_ref,
+                       amb_ref, cost_ref, g_ref, qout_ref, q_scr):
+    """One (router-block, action) grid step of the fused tick.
+
+    bprev_ref: (BR, S̄, S̄)  previously-applied action's transition row
+    qprev_ref: (BR, S̄)      beliefs before the tick
+    ll_ref:    (BR, S̄)      observation log-likelihood (padded _LOGLIK_PAD)
+    b/a/logc/amb/cost/g:     as in :func:`_efe_kernel`
+    qout_ref:  (BR, S̄)      posterior after the tick (written once)
+    q_scr:     (BR, S̄)      VMEM scratch carrying q across action steps
+    """
+    _belief_update_into_scratch(bprev_ref, qprev_ref, ll_ref, qout_ref, q_scr)
     _efe_kernel(b_ref, q_scr, a_ref, logc_ref, amb_ref, cost_ref, g_ref)
+
+
+def _belief_efe_kernel_masked(bprev_ref, qprev_ref, ll_ref, b_ref, a_ref,
+                              logc_ref, mask_ref, amb_ref, cost_ref, g_ref,
+                              qout_ref, q_scr):
+    """Mask-aware twin of :func:`_belief_efe_kernel`: the mask already zeroed
+    the per-modality evidence feeding the VMEM-carried posterior (via
+    ``ll_ref``), and additionally drops masked modalities from the EFE risk
+    reduction (``mask_ref``, (BR, M, NB)) — the ``amb`` operand carries the
+    mask-effective ambiguity."""
+    _belief_update_into_scratch(bprev_ref, qprev_ref, ll_ref, qout_ref, q_scr)
+    _efe_kernel_masked(b_ref, q_scr, a_ref, logc_ref, mask_ref, amb_ref,
+                       cost_ref, g_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
@@ -189,13 +251,18 @@ def belief_efe_fleet_pallas(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
                             loglik: jnp.ndarray, b_norm: jnp.ndarray,
                             a_norm: jnp.ndarray, logc: jnp.ndarray,
                             amb: jnp.ndarray, cost: jnp.ndarray,
+                            obs_mask: jnp.ndarray | None = None,
                             *, block_r: int = 8,
                             interpret: bool
                             ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused (belief update → EFE) tick: (G (R, A), posterior q (R, S)).
 
     See :func:`repro.kernels.efe.ref.belief_efe_fleet_ref` for the input
-    semantics and the matching XLA oracle.  As with
+    semantics and the matching XLA oracle.  With ``obs_mask`` ((R, M)) the
+    mask-aware kernel runs: the caller supplies a ``loglik`` whose masked
+    modalities are already zeroed (so the VMEM-carried posterior sees only
+    valid evidence) and an ``amb`` that is the mask-effective ambiguity; the
+    kernel itself drops masked modalities from the risk reduction.  As with
     :func:`efe_fleet_pallas`, ``interpret`` must be passed explicitly
     (the ops wrapper auto-detects the backend).
     """
@@ -214,20 +281,33 @@ def belief_efe_fleet_pallas(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
         amb = jnp.pad(amb, ((0, 0), (0, pad)))
 
     grid = (r // block_r, a)
+    bspec = [
+        pl.BlockSpec((block_r, s_pad, s_pad), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_r, 1, s_pad, s_pad),
+                     lambda i, j: (i, j, 0, 0)),
+        pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
+        pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j: (0, j)),
+    ]
+    operands = [b_prev.astype(jnp.float32), q_prev.astype(jnp.float32),
+                loglik.astype(jnp.float32), b_norm.astype(jnp.float32),
+                a_norm.astype(jnp.float32), logc.astype(jnp.float32),
+                amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :]]
+    kernel = _belief_efe_kernel
+    if obs_mask is not None:
+        kernel = _belief_efe_kernel_masked
+        maskb = jnp.broadcast_to(
+            obs_mask.astype(jnp.float32)[:, :, None], (r, m, nb))
+        bspec.insert(6, pl.BlockSpec((block_r, m, nb),
+                                     lambda i, j: (i, 0, 0)))
+        operands.insert(6, maskb)
     g, q = pl.pallas_call(
-        _belief_efe_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_r, s_pad, s_pad), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_r, 1, s_pad, s_pad),
-                         lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((block_r, m, nb, s_pad), lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((block_r, m, nb), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, j)),
-        ],
+        in_specs=bspec,
         out_specs=[
             pl.BlockSpec((block_r, 1), lambda i, j: (i, j)),
             pl.BlockSpec((block_r, s_pad), lambda i, j: (i, 0)),
@@ -238,8 +318,5 @@ def belief_efe_fleet_pallas(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
         ],
         scratch_shapes=[pltpu.VMEM((block_r, s_pad), jnp.float32)],
         interpret=interpret,
-    )(b_prev.astype(jnp.float32), q_prev.astype(jnp.float32),
-      loglik.astype(jnp.float32), b_norm.astype(jnp.float32),
-      a_norm.astype(jnp.float32), logc.astype(jnp.float32),
-      amb.astype(jnp.float32), cost.astype(jnp.float32)[None, :])
+    )(*operands)
     return g, q[:, :s]

@@ -84,6 +84,7 @@ def _normalized_inputs(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
 def fleet_efe_cached(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
                      amb: jnp.ndarray, beliefs: jnp.ndarray,
                      cfg: generative.AifConfig, *,
+                     obs_mask: jnp.ndarray | None = None,
                      use_pallas: bool = True, interpret: bool | None = None,
                      block_r: int | None = None) -> jnp.ndarray:
     """G (R, A) from pre-normalized (cached) model tensors.
@@ -93,8 +94,14 @@ def fleet_efe_cached(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
       na:   (R, M, max_bins, S) normalized observations (``ModelCache.na``).
       logc: (R, M, max_bins) masked log σ(C) (per-tick; see
         :func:`repro.core.generative.masked_log_c`).
-      amb:  (R, S) per-state ambiguity (``ModelCache.amb``).
+      amb:  (R, S) per-state ambiguity (``ModelCache.amb``); with
+        ``obs_mask`` this must be the *mask-effective* ambiguity
+        (:func:`repro.core.generative.masked_ambiguity` over
+        ``ModelCache.amb_m``).
       beliefs: (R, S) posteriors.
+      obs_mask: optional (R, M) observation-validity mask — dispatches the
+        mask-aware kernel/oracle (masked modalities drop out of the risk
+        term).
       interpret: None (default) auto-detects — compiled kernel on TPU,
         interpret-mode emulation elsewhere (Pallas does not lower to CPU).
       block_r: router block size; honored as-is when it divides R, else
@@ -107,15 +114,16 @@ def fleet_efe_cached(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
         if interpret is None:
             interpret = _auto_interpret()
         br = _resolve_block_r(beliefs.shape[0], beliefs.shape[-1], block_r)
-        return efe_fleet_pallas(nb, beliefs, na, logc, amb, cost,
+        return efe_fleet_pallas(nb, beliefs, na, logc, amb, cost, obs_mask,
                                 block_r=br, interpret=interpret)
-    return efe_fleet_ref(nb, beliefs, na, logc, amb, cost)
+    return efe_fleet_ref(nb, beliefs, na, logc, amb, cost, obs_mask)
 
 
 def fleet_belief_efe(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
                      amb: jnp.ndarray, beliefs: jnp.ndarray,
                      prev_action: jnp.ndarray, loglik: jnp.ndarray,
                      cfg: generative.AifConfig, *,
+                     obs_mask: jnp.ndarray | None = None,
                      use_pallas: bool = True, interpret: bool | None = None,
                      block_r: int | None = None
                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -128,6 +136,9 @@ def fleet_belief_efe(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
       loglik:      (R, S) observation log-likelihood for this tick (gathered
         from the cached normalized A, plus any gated utilization evidence —
         see :func:`repro.core.belief.log_likelihood_from_normalized`).
+        Under partial observability the masked modalities must already be
+        zeroed out of this sum (pass the same ``obs_mask`` to the gather),
+        so the kernel's VMEM-carried posterior sees only valid evidence.
 
     Returns (G (R, A), posterior (R, S)).
     """
@@ -138,15 +149,16 @@ def fleet_belief_efe(nb: jnp.ndarray, na: jnp.ndarray, logc: jnp.ndarray,
             interpret = _auto_interpret()
         br = _resolve_block_r(beliefs.shape[0], beliefs.shape[-1], block_r)
         return belief_efe_fleet_pallas(b_prev, beliefs, loglik, nb, na,
-                                       logc, amb, cost,
+                                       logc, amb, cost, obs_mask,
                                        block_r=br, interpret=interpret)
     return belief_efe_fleet_ref(b_prev, beliefs, loglik, nb, na, logc, amb,
-                                cost)
+                                cost, obs_mask)
 
 
 def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
               c_log: jnp.ndarray, beliefs: jnp.ndarray,
               cfg: generative.AifConfig, *,
+              obs_mask: jnp.ndarray | None = None,
               use_pallas: bool = True, interpret: bool | None = None,
               block_r: int | None = None) -> jnp.ndarray:
     """G (R, A) for a fleet of routers, from raw pseudo-counts.
@@ -156,9 +168,16 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
       b_counts: (R, A, S, S) transition pseudo-counts.
       c_log:    (R, M, max_bins) current log-preferences.
       beliefs:  (R, S) posteriors.
+      obs_mask: optional (R, M) observation-validity mask (the effective
+        ambiguity is derived here — count-space callers need no cache).
       interpret/block_r: see :func:`fleet_efe_cached`.
     """
     nb, na, logc, amb = _normalized_inputs(a_counts, b_counts, c_log, cfg)
+    if obs_mask is not None:
+        amb_m = generative.modality_ambiguity_from_normalized(na,
+                                                              cfg.topology)
+        amb = generative.masked_ambiguity(amb_m, obs_mask)
     return fleet_efe_cached(nb, na, logc, amb, beliefs, cfg,
+                            obs_mask=obs_mask,
                             use_pallas=use_pallas, interpret=interpret,
                             block_r=block_r)

@@ -13,6 +13,13 @@ hot path, not the pseudo-count normalization, which runs on the slow loop):
 
 Output: G (R, A) — expected free energy per router × action:
   ŝ_a = B_a q;  ô = A ŝ_a;  risk = Σ ô·(log ô − logC);  G = risk + ŝ_a·amb + cost.
+
+Partial observability: every oracle takes an optional ``obs_mask`` ((R, M)
+float 0/1) matching the mask-aware Pallas kernels — masked modalities drop
+out of the risk reduction (the ``amb`` operand is then expected to be the
+mask-effective ambiguity and the fused ``loglik`` to be mask-zeroed, both
+prepared by :mod:`repro.kernels.efe.ops`).  ``obs_mask=None`` is the exact
+unmasked program.
 """
 from __future__ import annotations
 
@@ -21,15 +28,17 @@ import jax.numpy as jnp
 
 def efe_fleet_ref(b_norm: jnp.ndarray, q: jnp.ndarray, a_norm: jnp.ndarray,
                   logc: jnp.ndarray, amb: jnp.ndarray,
-                  cost: jnp.ndarray) -> jnp.ndarray:
+                  cost: jnp.ndarray,
+                  obs_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     s_pred = jnp.einsum("rats,rs->rat", b_norm, q)
     s_pred = s_pred / jnp.maximum(jnp.sum(s_pred, -1, keepdims=True), 1e-30)
     o_pred = jnp.einsum("rmbs,ras->ramb", a_norm, s_pred)
-    risk = jnp.sum(
-        jnp.where(o_pred > 1e-20,
-                  o_pred * (jnp.log(jnp.maximum(o_pred, 1e-30))
-                            - logc[:, None]), 0.0),
-        axis=(2, 3))
+    terms = jnp.where(o_pred > 1e-20,
+                      o_pred * (jnp.log(jnp.maximum(o_pred, 1e-30))
+                                - logc[:, None]), 0.0)
+    if obs_mask is not None:
+        terms = terms * obs_mask[:, None, :, None]
+    risk = jnp.sum(terms, axis=(2, 3))
     ambiguity = jnp.einsum("ras,rs->ra", s_pred, amb)
     return risk + ambiguity + cost[None, :]
 
@@ -60,14 +69,18 @@ def belief_posterior_ref(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
 def belief_efe_fleet_ref(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
                          loglik: jnp.ndarray, b_norm: jnp.ndarray,
                          a_norm: jnp.ndarray, logc: jnp.ndarray,
-                         amb: jnp.ndarray, cost: jnp.ndarray
+                         amb: jnp.ndarray, cost: jnp.ndarray,
+                         obs_mask: jnp.ndarray | None = None
                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused belief update → EFE, one tick (paper Eq. 2 then Eq. 1).
 
-    See :func:`belief_posterior_ref` for the belief-half input semantics.
+    See :func:`belief_posterior_ref` for the belief-half input semantics;
+    under partial observability ``loglik`` arrives with masked modalities
+    already zeroed (uniform evidence) and ``obs_mask`` additionally drops
+    them from the risk term — the oracle twin of the masked Pallas kernel.
 
     Returns (G (R, A), q (R, S)) — the posterior never round-trips through a
     separate belief pass; on TPU the Pallas twin keeps it in VMEM.
     """
     q = belief_posterior_ref(b_prev, q_prev, loglik)
-    return efe_fleet_ref(b_norm, q, a_norm, logc, amb, cost), q
+    return efe_fleet_ref(b_norm, q, a_norm, logc, amb, cost, obs_mask), q

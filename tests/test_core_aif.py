@@ -59,6 +59,24 @@ def test_discretization_edges():
     assert bins[2].tolist() == [2, 2, 2, 1]   # error has 2 bins
 
 
+def test_discretization_clamps_out_of_range_to_edge_bins():
+    """Regression: +inf raw metrics used to count the +inf padding edges and
+    index past a modality's last real bin (into zero-mass padded A-columns);
+    NaN compares false everywhere and must land in bin 0."""
+    disc = core.DiscretizationConfig()
+    raw = jnp.asarray([[np.inf, np.inf, np.inf, np.inf],
+                       [-np.inf, -1.0, np.nan, -0.5],
+                       [1e30, 1e30, 1e30, 1e30]])
+    bins = np.asarray(core.discretize_observation(raw, disc))
+    assert bins[0].tolist() == [2, 2, 2, 1]   # clamped to top real bin
+    assert bins[1].tolist() == [0, 0, 0, 0]
+    assert bins[2].tolist() == [2, 2, 2, 1]
+    # via the agent-facing wrapper too (returns the validity mask alongside)
+    b, mask = core.agent.observe_and_discretize(raw[0], disc)
+    assert np.asarray(b).tolist() == [2, 2, 2, 1]
+    np.testing.assert_array_equal(np.asarray(mask), 1.0)
+
+
 # ---------------------------------------------------------------- belief
 @given(st.integers(0, 10_000))
 def test_belief_update_is_distribution(seed):

@@ -1,0 +1,140 @@
+"""Scenario-registry coverage: every preset compiles for K∈{2,3,5}
+topologies with the engine's exact schedule shapes, compose() is
+identity/associativity-clean, and the telemetry-degradation primitives
+produce well-formed validity masks."""
+import numpy as np
+import pytest
+
+from repro.core.topology import Topology, default_topology, five_tier_topology
+from repro.envsim import (N_OBS_MODALITIES, SimConfig, scenarios,
+                          sim_config_for)
+from repro.envsim.scenarios import (SCENARIOS, Profile, compile_scenario,
+                                    compose, paper_bursts, stale_replay,
+                                    telemetry_dropout)
+
+
+def _topo_k2() -> Topology:
+    return Topology(tier_names=("edge", "cloud"),
+                    tier_classes=("edge-light", "server"))
+
+
+TOPOS = {2: _topo_k2(), 3: default_topology(), 5: five_tier_topology()}
+
+
+# ------------------------------------------------------------------ registry
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("k", sorted(TOPOS))
+def test_every_preset_compiles_with_engine_shapes(name, k):
+    """Each preset must materialize (T, R) / (T, R, K) / (T, R, M) schedules
+    for any tier count — the engine consumes them without reshaping."""
+    topo = TOPOS[k]
+    cfg = SimConfig() if k == 3 else sim_config_for(topo)
+    r, t = 3, 40
+    sc = scenarios.build_scenario(name, cfg, r, t, seed=1)
+    assert sc.arrival_rate.shape == (t, r)
+    assert sc.hazard_scale.shape == (t, r, k)
+    assert sc.capacity_scale.shape == (r, k)
+    assert np.all(np.isfinite(sc.arrival_rate))
+    assert np.all(sc.arrival_rate > 0)
+    if sc.obs_valid is not None:
+        assert sc.obs_valid.shape == (t, r, N_OBS_MODALITIES)
+        assert set(np.unique(sc.obs_valid)) <= {0.0, 1.0}
+    # degradation presets actually degrade; clean presets stay mask-free
+    if name in ("flaky-telemetry", "stale-cascade"):
+        assert sc.obs_valid is not None and sc.obs_valid.mean() < 1.0
+    if name == "scrape-blackout":
+        assert sc.restart_blackout
+    if name in ("steady", "paper-burst", "diurnal", "flash-crowd",
+                "cascade", "hetero-diurnal"):
+        assert sc.obs_valid is None and not sc.restart_blackout
+
+
+def test_build_scenario_unknown_name():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.build_scenario("nope", SimConfig(), 2, 10)
+
+
+# ------------------------------------------------------------------- compose
+def test_compose_identity():
+    """compose(p, neutral) == p field-for-field (None fields stay neutral)."""
+    cfg = SimConfig()
+    p = compose(paper_bursts(cfg, 30, 2),
+                telemetry_dropout(30, 2, drop_p=0.4, seed=0))
+    q = compose(p, Profile())
+    np.testing.assert_array_equal(q.rate, p.rate)
+    np.testing.assert_array_equal(q.obs_valid, p.obs_valid)
+    assert q.hazard is p.hazard is None
+    assert q.blackout == p.blackout is False
+    # identity from the left too
+    q = compose(Profile(), p)
+    np.testing.assert_array_equal(q.rate, p.rate)
+    np.testing.assert_array_equal(q.obs_valid, p.obs_valid)
+
+
+def test_compose_associativity():
+    cfg = SimConfig()
+    a = paper_bursts(cfg, 25, 3)
+    b = telemetry_dropout(25, 3, drop_p=0.3, seed=1)
+    c = stale_replay(25, 3, freeze_every_s=10.0, freeze_len_s=5.0, seed=2)
+    left = compose(compose(a, b), c)
+    right = compose(a, compose(b, c))
+    for field in ("rate", "hazard", "capacity", "obs_valid"):
+        va, vb = getattr(left, field), getattr(right, field)
+        if va is None:
+            assert vb is None
+        else:
+            np.testing.assert_allclose(va, vb)
+    assert left.blackout == right.blackout
+
+
+def test_compose_masks_intersect_and_blackout_ors():
+    m1 = telemetry_dropout(10, 2, drop_p=0.5, seed=3)
+    m2 = telemetry_dropout(10, 2, drop_p=0.5, seed=4)
+    both = compose(m1, m2, scenarios.scrape_blackout())
+    assert both.blackout
+    np.testing.assert_array_equal(both.obs_valid,
+                                  m1.obs_valid * m2.obs_valid)
+
+
+# ---------------------------------------------------------------- primitives
+def test_telemetry_dropout_rate_and_modality_selection():
+    p = telemetry_dropout(400, 8, drop_p=0.35, modalities=(0, 3), seed=0)
+    mask = p.obs_valid
+    # untouched modalities stay fully valid
+    np.testing.assert_array_equal(mask[:, :, 1], 1.0)
+    np.testing.assert_array_equal(mask[:, :, 2], 1.0)
+    drop = 1.0 - mask[:, :, [0, 3]].mean()
+    assert 0.30 < drop < 0.40
+
+
+def test_stale_replay_produces_contiguous_freezes():
+    p = stale_replay(300, 2, freeze_every_s=40.0, freeze_len_s=12.0, seed=5)
+    mask = p.obs_valid
+    assert mask.mean() < 1.0
+    # every zero-run in a (cell, modality) column is exactly the freeze
+    # length (or clipped by the horizon)
+    for r in range(2):
+        for m in range(mask.shape[-1]):
+            col = mask[:, r, m]
+            runs, cur = [], 0
+            for v in col:
+                if v == 0.0:
+                    cur += 1
+                elif cur:
+                    runs.append(cur)
+                    cur = 0
+            if cur:
+                runs.append(cur)
+            # freezes are 12 windows; adjacent episodes can merge into
+            # multiples, and the final run may be clipped by the horizon
+            assert all(run % 12 == 0 for run in runs[:-1])
+            if runs:
+                assert runs[-1] <= 3 * 12
+
+
+def test_compile_scenario_broadcasts_and_scales_rate():
+    cfg = SimConfig()
+    sc = compile_scenario(Profile(rate=np.full((1, 1), 2.0, np.float32)),
+                          cfg, 3, 5)
+    np.testing.assert_allclose(sc.arrival_rate, 2.0 * cfg.rps)
+    assert sc.obs_valid is None
