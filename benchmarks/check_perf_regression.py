@@ -3,10 +3,12 @@
 Compares a freshly-measured ``BENCH_fleet.json`` against the committed
 baseline entry-by-entry (matched on workload name, R × T config and
 scenario; entries present only in the baseline are skipped, so quick-mode
-runs gate only the rows they measure, and entries present only in the
-current run — freshly added benchmark rows — produce a *warning*, not a
-failure, so new rows land cleanly in CI) and exits non-zero when any matched
-entry's cell-windows/s drops more than ``--threshold`` (default 30%).
+runs gate only the rows they measure, entries the bench merely carried
+forward from an older file (``"carried": true``) are never treated as fresh
+measurements, and entries present only in the current run — freshly added
+benchmark rows — produce a *warning*, not a failure, so new rows land
+cleanly in CI) and exits non-zero when any matched entry's cell-windows/s
+drops more than ``--threshold`` (default 30%).
 
 Machine calibration: raw throughput tracks the runner's CPU as much as the
 code, so when both runs measured the largest common ``env`` row (the fluid
@@ -26,7 +28,7 @@ import json
 import sys
 
 
-def _entries(path: str) -> dict[tuple, dict]:
+def _entries(path: str, drop_carried: bool = False) -> dict[tuple, dict]:
     with open(path) as f:
         data = json.load(f)
     if "entries" not in data:
@@ -34,6 +36,10 @@ def _entries(path: str) -> dict[tuple, dict]:
         data = {"entries": [data]}
     out = {}
     for e in data["entries"]:
+        if drop_carried and e.get("carried"):
+            # a merged-forward copy of an older measurement
+            # (fleet_bench._bench_summary), not a fresh sample of this run
+            continue
         cfg = e.get("config", {})
         out[(e["name"], cfg.get("r"), cfg.get("t"),
              cfg.get("scenario"))] = e
@@ -53,8 +59,12 @@ def main() -> int:
                     help="skip env-row machine-speed calibration")
     args = ap.parse_args()
 
-    base = _entries(args.baseline)
-    cur = _entries(args.current)
+    # Carried rows are stale copies merged forward by fleet_bench, possibly
+    # from a different machine than the file's env anchor — drop them on
+    # *both* sides so only genuinely measured rows ever gate (a carried
+    # baseline row calibrated by a fresh anchor would gate noise).
+    base = _entries(args.baseline, drop_carried=True)
+    cur = _entries(args.current, drop_carried=True)
     matched = sorted(set(base) & set(cur))
     if not matched:
         print("no matching entries between baseline and current run; "

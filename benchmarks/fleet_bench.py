@@ -13,7 +13,11 @@ Workloads, all single jitted ``lax.scan`` programs (no Python in the loop):
 * ``fleet_fused_pallas`` — the fused launch dispatched to the Pallas kernel
                      (``--use-pallas``; interpret-mode emulation off-TPU, so
                      off by default — it benchmarks the emulator, not the
-                     kernel).
+                     kernel),
+* ``api_compare``    — the declarative ``repro.api.compare`` surface
+                     end-to-end (AIF + uniform pair, config assembly and
+                     host-side summary included), guarding the public
+                     Experiment entry point.
 
 Each path is recorded as a separate entry in the repo-root
 ``BENCH_fleet.json`` (schema ``{benchmark, device, entries: [{name, config,
@@ -44,6 +48,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core import AifConfig, fleet
 from repro.envsim import SimConfig, batched, scenarios
 
@@ -103,17 +108,16 @@ def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False,
     params = batched.params_from_config(scfg, r, sc.capacity_scale)
     env_step = batched.make_scenario_env_step(params, sc)
     key = jax.random.key(0)
+    router = api.AifRouter(cfg=cfg, fused=fused, use_pallas=use_pallas)
 
     def make_args():
-        # fresh per iteration: fleet_rollout donates both state pytrees
+        # fresh per iteration: the rollout donates both state pytrees
         return (fleet.init_fleet_state(cfg, r),
                 batched.init_fluid_state(params))
 
     compile_s, run_s = _bench(
         make_args,
-        lambda ast, est: fleet.fleet_rollout(ast, est, env_step, t, key, cfg,
-                                             fused=fused,
-                                             use_pallas=use_pallas))
+        lambda ast, est: api.rollout(router, ast, est, env_step, t, key))
     name = "fleet_" + ("fused_pallas" if fused and use_pallas
                        else "fused" if fused else "vmap")
     return {
@@ -121,6 +125,24 @@ def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False,
         "compile_s": round(compile_s, 3),
         "run_s": round(run_s, 4),
         "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def bench_api_compare(r: int, t: int, scenario: str = "paper-burst") -> dict:
+    """The declarative comparison surface end-to-end: ``repro.api.compare``
+    over an AIF + uniform pair, including the config assembly and host-side
+    summary the Experiment API owns.  Guards the new public entry point the
+    same way the raw rollout rows guard the engine."""
+    exps = [api.Experiment(router=name, scenario=scenario, n_cells=r,
+                           n_windows=t, fused=(name == "aif"))
+            for name in ("aif", "uniform")]
+
+    compile_s, run_s = _bench(tuple, lambda: api.compare(exps))
+    return {
+        "workload": "api_compare", "r": r, "t": t, "scenario": scenario,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(len(exps) * r * t / run_s, 1),
     }
 
 
@@ -147,6 +169,9 @@ def run(quick: bool = False, use_pallas: bool = False,
         rows.append(bench_fleet(64, 120, fused=True,
                                 scenario="flaky-telemetry"))
         _print_row(rows[-1])
+    # declarative Experiment surface (always recorded: guards repro.api)
+    rows.append(bench_api_compare(64, 120))
+    _print_row(rows[-1])
     if use_pallas:
         rows.append(bench_fleet(16, 60, fused=True, use_pallas=True,
                                 scenario=scenario))
@@ -161,21 +186,40 @@ def _print_row(row: dict) -> None:
           f"{row['cell_windows_per_s']}cw/s", flush=True)
 
 
-def _bench_summary(rows: list[dict]) -> dict:
+def _bench_summary(rows: list[dict], existing: dict | None = None) -> dict:
     """Repo-root BENCH_fleet.json: one entry per (workload path, R × T,
     scenario) configuration, so the CI regression gate can match quick-mode
-    runs against the committed trajectory entry-by-entry."""
-    entries = [{
-        "name": row["workload"],
-        "config": {"r": row["r"], "t": row["t"],
-                   "scenario": row.get("scenario")},
-        "cell_windows_per_s": row["cell_windows_per_s"],
-        "wall_s": row["run_s"],
-    } for row in rows]
+    runs against the committed trajectory entry-by-entry.
+
+    Entries *merge* into ``existing`` (matched on that key): a quick-mode
+    run refreshes only the rows it measured instead of dropping the
+    committed full-grid trajectory.  Entries carried over unmeasured are
+    tagged ``"carried": true`` so the regression gate never mistakes a
+    stale copy for a fresh measurement (``check_perf_regression`` drops
+    carried rows on both sides).  Rows whose workload/config no longer
+    exists are carried forever — prune them by hand when retiring a
+    benchmark configuration.
+    """
+    def key(e):
+        cfg = e.get("config", {})
+        return (e["name"], cfg.get("r"), cfg.get("t"), cfg.get("scenario"))
+
+    merged: dict[tuple, dict] = {}
+    for e in (existing or {}).get("entries", []):
+        merged[key(e)] = dict(e, carried=True)
+    for row in rows:
+        entry = {
+            "name": row["workload"],
+            "config": {"r": row["r"], "t": row["t"],
+                       "scenario": row.get("scenario")},
+            "cell_windows_per_s": row["cell_windows_per_s"],
+            "wall_s": row["run_s"],
+        }
+        merged[key(entry)] = entry
     return {
         "benchmark": "fleet_bench",
         "device": str(jax.devices()[0]),
-        "entries": entries,
+        "entries": list(merged.values()),
     }
 
 
@@ -204,8 +248,12 @@ def main() -> None:
         print(f"wrote {args.json}")
         bench_path = pathlib.Path(__file__).resolve().parent.parent / (
             "BENCH_fleet.json")
+        existing = None
+        if bench_path.exists():
+            with open(bench_path) as f:
+                existing = json.load(f)
         with open(bench_path, "w") as f:
-            json.dump(_bench_summary(rows), f, indent=2)
+            json.dump(_bench_summary(rows, existing), f, indent=2)
         print(f"wrote {bench_path}")
 
 

@@ -1,9 +1,9 @@
 """Fleet quickstart: a batch of AIF routers learning on-device, no Python loop.
 
-Runs R=8 independent service cells through a scenario on the batched fluid
-engine — agents and environment advance together inside one jitted
-``lax.scan`` — and compares against the static capacity-aware router on the
-same schedules.  ~30 s wall on CPU, most of it XLA compilation.
+One declarative :class:`repro.api.Experiment` per router runs R service
+cells through a scenario on the batched fluid engine — agents and
+environment advance together inside one jitted ``lax.scan`` — and the
+capacity-aware static baseline rides the exact same engine for comparison.
 
     PYTHONPATH=src python examples/fleet_quickstart.py [--quick]
                                                        [--scenario NAME]
@@ -14,14 +14,11 @@ telemetry-degradation presets like ``flaky-telemetry`` exercise the masked
 partial-observability path, see examples/unreliable_telemetry.py).
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AifConfig, fleet, policies
-from repro.envsim import SimConfig, batched, scenarios
+from repro import api
+from repro.envsim import scenarios
 
 
 def main():
@@ -33,53 +30,33 @@ def main():
                     help="scenario preset from the registry")
     args = ap.parse_args()
     r, t = (4, 120) if args.quick else (8, 420)
-    cfg = AifConfig()
-    scfg = SimConfig()
-    print(f"fleet of {r} AIF routers x {t} control windows, "
+    print(f"fleet of {r} cells x {t} control windows, "
           f"scenario: {args.scenario}")
 
-    sc = scenarios.build_scenario(args.scenario, scfg, r, t)
-    params = batched.params_from_config(scfg, r, sc.capacity_scale)
-    env_step = batched.make_scenario_env_step(params, sc)
+    comp = api.compare([
+        api.Experiment(router=name, scenario=args.scenario,
+                       n_cells=r, n_windows=t)
+        for name in ("capacity", "aif")])
+    print()
+    print(comp.markdown())
 
-    # static capacity-aware baseline on the exact same world + schedules
-    w_cap = jnp.asarray([0.15, 0.23, 0.62], jnp.float32)
-    final_s, trace_s = batched.run_fluid(
-        params, jnp.asarray(sc.arrival_rate), jnp.asarray(sc.hazard_scale),
-        w_cap, jax.random.key(0))
-    base = batched.summarize(final_s, trace_s)
-    print(f"\nstatic capacity router: success "
-          f"{100 * base.success_rate.mean():.1f}%  "
-          f"P95 {base.p95_ms.mean():.0f} ms")
-
-    t0 = time.time()
-    ast, est, trace = fleet.fleet_rollout(
-        fleet.init_fleet_state(cfg, r), batched.init_fluid_state(params),
-        env_step, t, jax.random.key(0), cfg)
-    jax.block_until_ready(est)
-    wall = time.time() - t0
-    res = batched.summarize(est, trace.env)
-    print(f"\nAIF fleet (zero prior knowledge, learns online): success "
-          f"{100 * res.success_rate.mean():.1f}%  "
-          f"P95 {res.p95_ms.mean():.0f} ms   [{wall:.1f}s wall, "
-          f"{r * t / wall:.0f} cell-windows/s incl. compile]")
-
-    tbl = policies.generate_policy_table(cfg.topology)
-    weights = tbl[np.asarray(trace.actions)]          # (T, R, K)
+    aif = comp.results[-1]
+    weights = np.asarray(aif.trace.routing_weights)          # (T, R, K)
     for lo, hi in ((0, t // 3), (t // 3, 2 * t // 3), (2 * t // 3, t)):
         w = weights[lo:hi].mean((0, 1))
-        print(f"  windows {lo:3d}..{hi:3d}: fleet-mean weights "
+        print(f"  windows {lo:3d}..{hi:3d}: AIF fleet-mean weights "
               f"L/M/H = {np.round(w, 2)}")
-    print(f"  per-cell success: {np.round(100 * res.success_rate, 1)}")
-    print(f"  pod restarts per cell (L/M/H summed): "
-          f"{res.n_restarts.sum(-1).astype(int)}")
+    print(f"  per-cell success: "
+          f"{np.round(100 * aif.fluid.success_rate, 1)}")
+    print(f"  [{aif.wall_s:.1f}s wall, "
+          f"{r * t / aif.wall_s:.0f} cell-windows/s incl. compile]")
     print("\nEach cell learns online with zero prior knowledge of tier "
-          "capacities; on this short horizon the fleet already beats the "
-          "capacity-aware router on P95 while paying the exploration price "
-          "in success rate under instability (paper §5.2).  Scale r/t, swap "
-          "the scenario ('cascade', 'hetero-diurnal', ...), or pass "
-          "fused=True to fleet_rollout to route EFE through the fused "
-          "fleet kernel.")
+          "capacities; on this short horizon the fleet already closes in on "
+          "the capacity-aware router on P95 while paying the exploration "
+          "price in success rate under instability (paper §5.2).  Scale "
+          "n_cells/n_windows, swap the scenario ('cascade', "
+          "'hetero-diurnal', ...), or pass fused=True to the Experiment to "
+          "route EFE through the fused fleet kernel.")
 
 
 if __name__ == "__main__":

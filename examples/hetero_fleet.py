@@ -1,9 +1,8 @@
 """Heterogeneous fleet: different cells run different topologies.
 
 Array shapes differ across topologies (|S|, action count, tier count), so a
-mixed fleet is *statically sharded*: cells are grouped by topology and each
-group runs its own jitted ``fleet_rollout`` scan (see
-``repro.core.fleet.hetero_fleet_rollout``).  This demo drives two shards
+mixed fleet is *statically sharded*: one :class:`repro.api.Experiment` per
+topology, each compiling its own jitted scan.  This demo drives two shards
 side by side on the same diurnal load shape:
 
 * 4 cells of the paper's 3-tier testbed (|S| = 243, 20 policies),
@@ -11,36 +10,17 @@ side by side on the same diurnal load shape:
   (|S| = 128 via binary levels, 37 generated policies), with the fused EFE
   kernel (interpret mode off-TPU) exercising the shape-generic kernel path.
 
+(For pre-grouped shards sharing one call, see
+``repro.core.fleet.hetero_fleet_rollout``.)
+
     PYTHONPATH=src python examples/hetero_fleet.py [--quick]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AifConfig, default_topology, fleet,
-                        five_tier_topology, n_actions)
-from repro.envsim import batched, discretization_for, scenarios, sim_config_for
-
-
-def make_group(name: str, topo, n_cells: int, n_windows: int,
-               use_kernel: bool) -> fleet.FleetGroup:
-    cfg = AifConfig(topology=topo)
-    scfg = sim_config_for(topo)
-    sc = scenarios.build_scenario("diurnal", scfg, n_cells, n_windows)
-    params = batched.params_from_config(scfg, n_cells, sc.capacity_scale)
-    env_step = batched.make_scenario_env_step(params, sc)
-    print(f"  {name}: {topo.describe()}, {n_actions(topo)} policies, "
-          f"{n_cells} cells @ {scfg.rps:.0f} RPS"
-          + (" [fused EFE kernel]" if use_kernel else ""))
-    return fleet.FleetGroup(name=name, cfg=cfg,
-                            agent_state=fleet.init_fleet_state(cfg, n_cells),
-                            env_state=batched.init_fluid_state(params),
-                            env_step=env_step,
-                            fused=use_kernel, use_pallas=use_kernel,
-                            disc=discretization_for(scfg))
+from repro import api
 
 
 def main():
@@ -50,32 +30,32 @@ def main():
     args = ap.parse_args()
     t = 60 if args.quick else 300
 
-    print(f"heterogeneous fleet, {t} control windows per shard:")
-    groups = [
-        make_group("paper-3tier", default_topology(), 4, t, False),
-        make_group("continuum-5tier", five_tier_topology(), 3, t, True),
+    shards = [
+        api.Experiment(router="aif", topology="paper-3tier", n_cells=4,
+                       n_windows=t, scenario="diurnal"),
+        api.Experiment(router="aif", topology="continuum-5tier", n_cells=3,
+                       n_windows=t, scenario="diurnal",
+                       fused=True, use_pallas=True),
     ]
+    print(f"heterogeneous fleet, {t} control windows per shard:")
+    for e in shards:
+        topo = e.resolve_topology()
+        print(f"  {e.topology}: {topo.describe()}, {e.n_cells} cells"
+              + (" [fused EFE kernel]" if e.fused else ""))
 
     t0 = time.time()
-    # One call runs every shard: the 5-tier shard routes EFE through the
-    # fused fleet kernel, shapes for each shard come from its own topology,
-    # and each shard gets an independent folded PRNG key.
-    results = fleet.hetero_fleet_rollout(groups, t, jax.random.key(0))
-    jax.block_until_ready([results[g.name][1] for g in groups])
+    results = [api.run(e) for e in shards]
     wall = time.time() - t0
 
-    total_cells = sum(g.agent_state.belief.shape[0] for g in groups)
+    total_cells = sum(e.n_cells for e in shards)
     print(f"\nran {total_cells} cells x {t} windows in {wall:.1f}s "
           f"({total_cells * t / wall:.0f} cell-windows/s incl. compile)")
-    for g in groups:
-        ast, est, trace = results[g.name]
-        res = batched.summarize(est, trace.env)
-        k = g.cfg.topology.n_tiers
-        mean_w = np.asarray(trace.routing_weights).mean((0, 1))
-        print(f"\n  {g.name} (K={k}):")
-        print(f"    success {100 * res.success_rate.mean():.1f}%  "
-              f"P95 {res.p95_ms.mean():.0f} ms  "
-              f"restarts {int(res.n_restarts.sum())}")
+    for e, res in zip(shards, results):
+        k = e.resolve_topology().n_tiers
+        mean_w = np.asarray(res.trace.routing_weights).mean((0, 1))
+        print(f"\n  {e.topology} (K={k}):")
+        print(f"    success {res.success_pct:.1f}%  "
+              f"P95 {res.p95_ms:.0f} ms  restarts {int(res.restarts)}")
         print(f"    fleet-mean routing weights (lightest->heaviest): "
               f"{np.round(mean_w, 2)}")
     print("\nEach shard learns its own topology's generative model online; "

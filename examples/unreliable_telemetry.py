@@ -1,39 +1,24 @@
 """Unreliable telemetry demo: AIF routing under degraded observability.
 
-Runs the same fleet twice on identical world schedules — once with clean
-telemetry (``paper-burst``) and once under the ``flaky-telemetry`` preset
-(≥35% i.i.d. per-modality scrape dropout; the batched engine re-emits stale
-gauge values and flags them, and the routers discount the masked evidence
-end-to-end: belief update, A-count learning, and the EFE risk/ambiguity
-terms) — then prints the clean-vs-degraded success gap.  This is the
-paper's central stability claim ("stable online learning behavior despite
-device instability ... in unreliable edge environments") made concrete: the
-router's success rate should degrade *gracefully*, not collapse, and the
+Runs the same AIF fleet twice via :mod:`repro.api` — once with clean
+telemetry (``paper-burst``) and once under a degradation preset (default
+``flaky-telemetry``: ≥35% i.i.d. per-modality scrape dropout; the batched
+engine re-emits stale gauge values and flags them, and the routers discount
+the masked evidence end-to-end) — then prints the clean-vs-degraded success
+gap.  This is the paper's central stability claim ("stable online learning
+behavior despite device instability ... in unreliable edge environments")
+made concrete: success should degrade *gracefully*, not collapse, and the
 belief state must stay finite with no collapsed posteriors.
 
     PYTHONPATH=src python examples/unreliable_telemetry.py [--quick]
                                                            [--scenario NAME]
-
-``--scenario`` picks a different degradation preset (``scrape-blackout``,
-``stale-cascade``) for the degraded leg.
 """
 import argparse
 
-import jax
 import numpy as np
 
-from repro.core import AifConfig, fleet
-from repro.envsim import SimConfig, batched, scenarios
-
-
-def _run(name: str, cfg, scfg, r: int, t: int, seed: int):
-    sc = scenarios.build_scenario(name, scfg, r, t, seed=seed)
-    params = batched.params_from_config(scfg, r, sc.capacity_scale)
-    env_step = batched.make_scenario_env_step(params, sc)
-    ast, est, trace = fleet.fleet_rollout(
-        fleet.init_fleet_state(cfg, r), batched.init_fluid_state(params),
-        env_step, t, jax.random.key(seed), cfg)
-    return ast, batched.summarize(est, trace.env), trace
+from repro import api
+from repro.envsim import scenarios
 
 
 def main():
@@ -48,29 +33,25 @@ def main():
                     help="telemetry-degradation preset for the degraded leg")
     args = ap.parse_args()
     r, t = (3, 100) if args.quick else (8, 420)
-    cfg = AifConfig()
-    scfg = SimConfig()
     print(f"fleet of {r} AIF routers x {t} windows: clean (paper-burst) vs "
           f"degraded ({args.scenario})")
 
-    ast_c, res_c, _ = _run("paper-burst", cfg, scfg, r, t, seed=0)
-    ast_d, res_d, trace_d = _run(args.scenario, cfg, scfg, r, t, seed=0)
+    clean, deg = (api.run(api.Experiment(router="aif", scenario=s,
+                                         n_cells=r, n_windows=t))
+                  for s in ("paper-burst", args.scenario))
 
-    frac = np.asarray(trace_d.obs_frac)
-    beliefs = np.asarray(ast_d.belief)
+    beliefs = np.asarray(deg.final_carry.belief)
     finite = bool(np.isfinite(beliefs).all()
-                  and np.isfinite(np.asarray(trace_d.raw_obs)).all())
+                  and np.isfinite(np.asarray(deg.trace.raw_obs)).all())
     collapsed = int((np.abs(beliefs.sum(-1) - 1.0) > 1e-3).sum())
 
-    sc_clean = 100 * res_c.success_rate.mean()
-    sc_deg = 100 * res_d.success_rate.mean()
-    print(f"\n  clean telemetry    : success {sc_clean:5.1f}%  "
-          f"P95 {res_c.p95_ms.mean():6.0f} ms")
-    print(f"  degraded telemetry : success {sc_deg:5.1f}%  "
-          f"P95 {res_d.p95_ms.mean():6.0f} ms  "
-          f"(effective observation fraction "
-          f"{100 * frac[1:].mean():.0f}%)")
-    print(f"  clean-vs-degraded success gap: {sc_clean - sc_deg:+.1f} pp")
+    print(f"\n  clean telemetry    : success {clean.success_pct:5.1f}%  "
+          f"P95 {clean.p95_ms:6.0f} ms")
+    print(f"  degraded telemetry : success {deg.success_pct:5.1f}%  "
+          f"P95 {deg.p95_ms:6.0f} ms  "
+          f"(effective observation fraction {100 * deg.obs_frac:.0f}%)")
+    print(f"  clean-vs-degraded success gap: "
+          f"{clean.success_pct - deg.success_pct:+.1f} pp")
     print(f"  belief health under degradation: finite={finite}, "
           f"collapsed posteriors={collapsed}/{r}")
     if not finite or collapsed:

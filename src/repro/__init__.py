@@ -5,6 +5,8 @@
 training/serving framework.
 
 Layers:
+  repro.api        public experiment surface: Router protocol, closed-loop
+                   engine, declarative Experiment / compare (Table 1)
   repro.core       the paper's contribution: Active Inference routing engine
   repro.envsim     calibrated discrete-event simulator of the paper's testbed
   repro.baselines  routing baselines (uniform, capacity, JSQ, bandits)

@@ -1,0 +1,39 @@
+"""repro.api — the public experiment surface of the AIF-Router repro.
+
+Three layers, smallest import first:
+
+* **Router protocol** (:mod:`repro.api.router`) — the scan-compatible
+  routing-policy contract (``init_carry`` / ``step``), plus pure-JAX ports
+  of the paper's five baseline families so they run inside the same
+  jitted fleet loop as AIF.  The AIF agent itself is
+  :class:`repro.api.aif.AifRouter`.
+* **Engine** (:mod:`repro.api.engine`) — :func:`rollout`: one on-device
+  ``lax.scan`` closed loop over any Router and any batched environment.
+* **Experiments** (:mod:`repro.api.experiment`) — declarative
+  :class:`Experiment` specs, :func:`run` (owns all config assembly) and
+  :func:`compare` (the paper's Table-1 protocol at fleet scale, markdown /
+  JSON).
+
+Quickstart::
+
+    from repro import api
+    result = api.run(api.Experiment(router="aif", scenario="flash-crowd"))
+    print(api.compare(api.table1_grid(n_cells=32, n_windows=600)).markdown())
+"""
+from repro.api.aif import AifRouter
+from repro.api.engine import rollout
+from repro.api.experiment import (ROUTERS, TABLE1_ROUTERS, Comparison,
+                                  Experiment, RunResult, compare, run,
+                                  table1_grid)
+from repro.api.router import (CapacityRouter, LeastLoadedRouter,
+                              RoundRobinRouter, Router, RouterObs,
+                              ThompsonRouter, TickInfo, UcbRouter,
+                              UniformRouter)
+
+__all__ = [
+    "AifRouter", "CapacityRouter", "Comparison", "Experiment",
+    "LeastLoadedRouter", "ROUTERS", "RoundRobinRouter", "Router",
+    "RouterObs", "RunResult", "TABLE1_ROUTERS", "ThompsonRouter",
+    "TickInfo", "UcbRouter", "UniformRouter", "compare", "rollout", "run",
+    "table1_grid",
+]

@@ -1,0 +1,146 @@
+"""The AIF agent adapted onto the :class:`repro.api.router.Router` protocol.
+
+This is the paper's router as a fleet policy: the spec wraps everything the
+old 13-argument ``fleet_rollout`` signature hand-assembled (agent config,
+observation discretization, utilization-scrape edges/cadence, fused/Pallas
+EFE execution path) into one hashable object the engine treats as a static
+jit argument.  The step/light/slow hooks are *exactly* the agent-side body
+of the pre-refactor ``fleet_rollout`` tick (same ops, same order, same PRNG
+consumption), so the AIF path through :func:`repro.api.engine.rollout` is
+bit-identical to the old entry point — the golden rollout test pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent as agent_mod
+from repro.core import fleet as fleet_mod
+from repro.core import generative, spaces
+from repro.api.router import Router, RouterObs, TickInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class AifRouter(Router):
+    """Fleet spec of the Active Inference router (paper §4).
+
+    Args:
+      cfg: agent hyper-parameters; ``cfg.topology`` fixes every shape.
+      disc: observation discretization (None = paper defaults); its edge
+        rows must match the topology's modalities.
+      util_edges: raw-utilization level edges (None = the topology's).
+      util_period: windows between utilization scrapes.
+      fused: run belief update + EFE through the fused fleet kernel.
+      use_pallas: with ``fused``, dispatch the Pallas TPU kernel rather
+        than the XLA oracle.
+    """
+
+    cfg: generative.AifConfig = dataclasses.field(
+        default_factory=generative.AifConfig)
+    disc: spaces.DiscretizationConfig | None = None
+    util_edges: tuple[float, ...] | None = None
+    util_period: int = 10
+    fused: bool = False
+    use_pallas: bool = False
+
+    name = "aif"
+
+    def __post_init__(self):
+        topo = self.cfg.topology
+        disc = self.disc or spaces.DiscretizationConfig()
+        if len(disc.modality_edges()) != topo.n_modalities:
+            raise ValueError(
+                f"DiscretizationConfig covers {len(disc.modality_edges())} "
+                f"modalities but the topology declares {topo.n_modalities} "
+                f"({topo.modalities}); pass disc with matching `edges` (and "
+                f"an env_step whose raw_obs has one column per modality)")
+        edges = (topo.util_edges if self.util_edges is None
+                 else tuple(self.util_edges))
+        if len(edges) != topo.n_levels - 1:
+            raise ValueError(
+                f"util_edges needs {topo.n_levels - 1} edges for "
+                f"{topo.n_levels}-level state factors, got {edges} "
+                f"(out-of-range bins would make the utilization scrape "
+                f"match no state)")
+        if "error" not in topo.modalities:
+            raise ValueError(
+                f"topology modalities {topo.modalities} lack 'error': the "
+                f"adaptive-preference EMA (paper §4.2) is driven by the "
+                f"error modality's raw value — without it the fleet router "
+                f"would silently track an unrelated telemetry column")
+
+    # ------------------------------------------------------- engine hints
+    @property
+    def n_tiers(self) -> int:
+        return self.cfg.topology.n_tiers
+
+    @property
+    def n_modalities(self) -> int:
+        return self.cfg.topology.n_modalities
+
+    @property
+    def period(self) -> int:
+        return max(int(self.cfg.slow_period_s / self.cfg.fast_period_s), 1)
+
+    @property
+    def dwell(self) -> int:
+        return max(int(self.cfg.action_dwell_s / self.cfg.fast_period_s), 1)
+
+    @property
+    def has_slow(self) -> bool:
+        return True
+
+    def clock_phase(self, carry) -> int | None:
+        t = carry.t
+        if isinstance(t, jax.core.Tracer):
+            raise ValueError(
+                "the rollout cannot infer the fleet clock from a traced "
+                "agent state; pass t0= explicitly (the number of fast ticks "
+                "already elapsed — 0 for a fresh fleet).  Without it the "
+                "dwell/slow schedules would compile against the wrong "
+                "phase and silently freeze action selection.")
+        vals = np.unique(np.asarray(t))
+        # mixed clocks -> None: the engine falls back to the flat safe scan
+        return int(vals[0]) % self.period if vals.size == 1 else None
+
+    # --------------------------------------------------------- transitions
+    def init_carry(self, r: int) -> agent_mod.AgentState:
+        return fleet_mod.init_fleet_state(self.cfg, r)
+
+    def _observe(self, obs: RouterObs):
+        """Shared evidence assembly: discretize the published telemetry and
+        the 10 s utilization scrape (tier order -> state-factor order)."""
+        disc = self.disc or spaces.DiscretizationConfig()
+        topo = self.cfg.topology
+        obs_bins = spaces.discretize_observation(obs.raw_obs, disc)
+        edges = jnp.asarray(
+            topo.util_edges if self.util_edges is None else self.util_edges,
+            jnp.float32)
+        util_hml = obs.tier_utilization[:, ::-1]
+        util_bins = jnp.sum(util_hml[..., None] >= edges,
+                            axis=-1).astype(jnp.int32)
+        util_valid = ((obs.t_idx % self.util_period) == 0) & (obs.t_idx > 0)
+        err_ix = topo.modalities.index("error")   # pinned by __post_init__
+        return obs_bins, util_bins, util_valid, obs.raw_obs[:, err_ix]
+
+    def step(self, carry, obs, obs_mask, keys):
+        obs_bins, util_bins, util_valid, raw_err = self._observe(obs)
+        carry, info = fleet_mod.fleet_fast_step(
+            carry, obs_bins, raw_err, keys, self.cfg, util_bins, util_valid,
+            obs_mask, fused=self.fused, use_pallas=self.use_pallas)
+        return carry, info.routing_weights, TickInfo(action=info.action,
+                                                     unstable=info.unstable)
+
+    def light_step(self, carry, obs, obs_mask):
+        obs_bins, util_bins, util_valid, raw_err = self._observe(obs)
+        carry, info = fleet_mod.fleet_light_step(
+            carry, obs_bins, raw_err, self.cfg, util_bins, util_valid,
+            obs_mask, fused=self.fused)
+        return carry, info.routing_weights, TickInfo(action=info.action,
+                                                     unstable=info.unstable)
+
+    def slow_step(self, carry, keys):
+        return fleet_mod.fleet_slow_step(carry, keys, self.cfg)

@@ -1,0 +1,260 @@
+"""Closed-loop fleet engine over the Router protocol.
+
+One on-device program runs *any* router — the AIF agent or the pure-JAX
+baseline ports (:mod:`repro.api.router`) — against a batched environment:
+each of the ``n_steps`` control windows hands the previous window's
+telemetry to ``router.step`` (inside the jitted ``lax.scan``, no per-tick
+host callbacks), applies the returned (R, K) routing weights to the
+environment, and carries the new observations forward.  This is the engine
+layer the old AIF-only ``fleet_rollout`` was refactored into: the router is
+a static jit argument, its state pytree is the scan carry, and the AIF
+router reproduces the pre-refactor program bit-for-bit (golden test).
+
+Scheduling comes from the router's hints: routers with a slow learning
+cadence (``has_slow``) get the nested slow-period scan with
+once-per-boundary :meth:`~repro.api.router.Router.slow_step`, routers with
+an action dwell > 1 get held ticks dispatched to ``light_step`` (the AIF
+dwell-blocking optimization); memoryless baselines compile to a flat scan.
+
+Telemetry degradation: when the environment adapter declares
+``env_step.emits_mask`` (see :func:`repro.envsim.batched.make_env_step`) —
+or the caller passes ``obs_masked=True`` explicitly for wrapped closures —
+each window's validity mask is carried into the next tick's ``obs_mask``
+and the trace records the effective-observation fraction.  Mask-aware
+routers (AIF) discount the masked evidence; mask-oblivious baselines
+consume the stale re-emitted values, exactly like real pipelines.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.router import Router, RouterObs
+from repro.core.fleet import FleetTrace
+
+
+def rollout(router: Router,
+            carry,
+            env_state,
+            env_step: Callable,
+            n_steps: int,
+            key: jax.Array,
+            *,
+            obs_masked: bool | None = None,
+            t0: int | None = None):
+    """Closed-loop fleet experiment as one on-device ``lax.scan``.
+
+    Args:
+      router: static router spec (hashable; see :class:`repro.api.router`).
+      carry: the router's state pytree (``router.init_carry(r)`` or a
+        previous rollout's final carry), leading cell axis R on every leaf.
+      env_state: environment state pytree with leading cell dim R (e.g.
+        :class:`repro.envsim.batched.FluidState`).
+      env_step: ``(env_state, weights, t_idx, key) -> (env_state, info)``
+        where ``info`` carries ``raw_obs`` (R, M), ``tier_utilization`` /
+        ``tier_up`` / ``tier_queue`` (R, K) and ``obs_mask`` (R, M) — see
+        :func:`repro.envsim.batched.make_env_step`.
+      n_steps: number of control windows T (static).
+      key: PRNG key driving the environment and the per-cell router keys.
+      obs_masked: force (True) / suppress (False) the telemetry-mask carry;
+        None auto-detects from ``env_step.emits_mask``.
+      t0: fast ticks already elapsed on every cell's clock (static).  Only
+        needed when ``carry`` is traced; concrete carries are introspected
+        via ``router.clock_phase``.
+
+    Returns:
+      (final carry, final env state, :class:`~repro.core.fleet.FleetTrace`).
+
+    ``carry`` and ``env_state`` are donated — reuse the returned states.
+    """
+    period = max(int(router.period), 1)
+    clock_phase = (int(t0) % period if t0 is not None
+                   else router.clock_phase(carry))
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
+    return _rollout_impl(carry, env_state, env_step, n_steps, key,
+                         router=router, obs_masked=obs_masked,
+                         clock_phase=clock_phase)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "env_step", "n_steps",
+                                    "obs_masked", "clock_phase"),
+                   donate_argnames=("carry0", "env_state"))
+def _rollout_impl(carry0,
+                  env_state,
+                  env_step: Callable,
+                  n_steps: int,
+                  key: jax.Array,
+                  *,
+                  router: Router,
+                  obs_masked: bool = False,
+                  clock_phase: int | None = 0):
+    r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    k_tiers = router.n_tiers
+    m = router.n_modalities
+    period = max(int(router.period), 1)
+    dwell = max(int(router.dwell), 1)
+    # Dwell blocking: on ticks with t % dwell != 0 the selected action is
+    # pinned, so the router's selection work (for AIF: the EFE launch
+    # streaming the full (R, A, S, S) cached B) is dispatched to the cheap
+    # light_step.  Requires the fleet clock phase to be known and — for
+    # routers with a slow cadence — the dwell pattern to be static within a
+    # period; without a slow cadence the period is irrelevant.
+    dwell_blocked = (dwell > 1 and clock_phase is not None
+                     and (not router.has_slow or period % dwell == 0))
+    # Mask-emitting environments feed each window's telemetry-validity mask
+    # into the next tick; otherwise the mask stays an untouched all-ones
+    # carry and every step runs the mask-free path.  (Resolved statically in
+    # rollout(): env_step.emits_mask or an explicit obs_masked=.)
+    emits_mask = obs_masked
+
+    def tick_body(carry, t_idx, light: bool):
+        rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, _ = (
+            carry)
+        k, k_env, k_agents = jax.random.split(k, 3)
+        keys = jax.random.split(k_agents, r)
+        ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
+        k_fast, k_slow = ks[:, 0], ks[:, 1]
+        obs = RouterObs(raw_obs=raw_obs, tier_utilization=tier_util,
+                        tier_up=tier_up, tier_queue=tier_queue, t_idx=t_idx)
+        mask = obs_mask if emits_mask else None
+        if light:
+            rst, weights, tinfo = router.light_step(rst, obs, mask)
+        else:
+            rst, weights, tinfo = router.step(rst, obs, mask, k_fast)
+        est, win = env_step(est, weights, t_idx, k_env)
+        next_mask = win.obs_mask if emits_mask else obs_mask
+        ys = FleetTrace(actions=tinfo.action,
+                        routing_weights=weights,
+                        raw_obs=raw_obs,
+                        unstable=tinfo.unstable,
+                        obs_frac=jnp.mean(obs_mask, axis=-1),
+                        env=win)
+        return (rst, est, win.raw_obs, win.tier_utilization, win.tier_up,
+                win.tier_queue, next_mask, k, k_slow), ys
+
+    def full_body(carry, t_idx):
+        return tick_body(carry, t_idx, light=False)
+
+    def light_body(carry, t_idx):
+        return tick_body(carry, t_idx, light=True)
+
+    def dwell_block(carry, t_start, n_light: int):
+        """One dwell block: a selecting tick, then n_light held ticks."""
+        carry, y0 = full_body(carry, t_start)
+        y0 = jax.tree_util.tree_map(lambda a: a[None], y0)
+        if not n_light:
+            return carry, y0
+        carry, ys = jax.lax.scan(
+            light_body, carry,
+            t_start + 1 + jnp.arange(n_light, dtype=jnp.int32))
+        return carry, jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), y0, ys)
+
+    def run_ticks(carry, t_start, n: int, phase: int = 0):
+        """n consecutive ticks starting at traced window index ``t_start``,
+        whose first tick sits at dwell offset ``phase`` on the fleet clock
+        (static).  Misaligned heads run as held ticks until the next dwell
+        boundary; then selecting-tick-led blocks."""
+        outs = []
+        if dwell_blocked and n:
+            head = min((dwell - phase) % dwell, n)
+            if head:
+                carry, ys = jax.lax.scan(
+                    light_body, carry,
+                    t_start + jnp.arange(head, dtype=jnp.int32))
+                outs.append(ys)
+            t_start = t_start + head
+            n_blocks, tail = divmod(n - head, dwell)
+            if n_blocks:
+                def block_body(c, tb):
+                    return dwell_block(c, tb, dwell - 1)
+                carry, ys = jax.lax.scan(
+                    block_body, carry,
+                    t_start + dwell * jnp.arange(n_blocks, dtype=jnp.int32))
+                outs.append(jax.tree_util.tree_map(
+                    lambda x: x.reshape((n_blocks * dwell,) + x.shape[2:]),
+                    ys))
+            if tail:
+                carry, ys = dwell_block(carry, t_start + n_blocks * dwell,
+                                        tail - 1)
+                outs.append(ys)
+        else:
+            carry, ys = jax.lax.scan(
+                full_body, carry,
+                t_start + jnp.arange(n, dtype=jnp.int32))
+            outs.append(ys)
+        if len(outs) == 1:
+            return carry, outs[0]
+        return carry, jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *outs)
+
+    def slow_after(carry):
+        rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, \
+            k_slow = carry
+        # Slow learning once per period, with the boundary tick's slow key —
+        # not recomputed-and-discarded on the intermediate ticks.
+        rst = router.slow_step(rst, k_slow)
+        return (rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask,
+                k, k_slow)
+
+    obs0 = jnp.zeros((r, m), jnp.float32)
+    util0 = jnp.zeros((r, k_tiers), jnp.float32)
+    up0 = jnp.ones((r, k_tiers), jnp.float32)
+    queue0 = jnp.zeros((r, k_tiers), jnp.float32)
+    mask0 = jnp.ones((r, m), jnp.float32)
+    k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
+    carry = (carry0, env_state, obs0, util0, up0, queue0, mask0, key, k_slow0)
+    traces = []
+
+    if not router.has_slow:
+        # Memoryless-of-slow-cadence routers (all the baselines): one flat
+        # (dwell-aware) scan, no slow boundaries to respect.
+        phase = (clock_phase or 0) % dwell
+        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), n_steps,
+                              phase=phase)
+        return carry[0], carry[1], ys
+
+    if clock_phase is None:
+        # Mixed router clocks: flat per-tick scan, per-router slow gating
+        # every tick (the pre-nesting reference schedule).
+        def safe_body(c, t_idx):
+            c, ys = full_body(c, t_idx)
+            return slow_after(c), ys
+
+        carry, ys = jax.lax.scan(
+            safe_body, carry, jnp.arange(n_steps, dtype=jnp.int32))
+        return carry[0], carry[1], ys
+
+    # Lead-in up to the next slow boundary (empty for fresh fleets).
+    lead = (-clock_phase) % period
+    lead_eff = min(lead, n_steps)
+    if lead_eff:
+        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), lead_eff,
+                              phase=clock_phase % dwell)
+        traces.append(ys)
+        if lead_eff == lead:    # the boundary tick ran -> learn once
+            carry = slow_after(carry)
+    n_periods, n_rem = divmod(n_steps - lead_eff, period)
+
+    def period_body(carry, p_idx):
+        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period)
+        return slow_after(carry), ys
+
+    if n_periods:
+        carry, ys = jax.lax.scan(
+            period_body, carry, jnp.arange(n_periods, dtype=jnp.int32))
+        traces.append(jax.tree_util.tree_map(
+            lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
+    if n_rem or not traces:
+        carry, ys = run_ticks(
+            carry,
+            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem)
+        traces.append(ys)
+    trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traces)
+    return carry[0], carry[1], trace

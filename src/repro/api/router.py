@@ -1,0 +1,345 @@
+"""The Router protocol: one scan-compatible contract for every routing policy.
+
+The paper's central evidence is AIF against static / least-loaded / bandit
+baselines — but a comparison is only as fast as its slowest contestant.  This
+module defines the *fleet* router contract every policy implements so that
+baselines run inside the same jitted ``lax.scan`` closed loop as the AIF
+agent (:mod:`repro.api.engine`), instead of one-cell-at-a-time through the
+host-bound event simulator:
+
+* ``init_carry(r) -> carry`` — the router's state pytree, batched over the
+  R cells (deterministic; all randomness flows through the engine's keys),
+* ``step(carry, obs, obs_mask, keys) -> (carry, weights, TickInfo)`` — one
+  control tick for all R cells at once: pure JAX, vmap-able over the cell
+  axis, no host callbacks.  ``obs`` is a :class:`RouterObs` view of the
+  previous window's telemetry, ``obs_mask`` the (R, M) validity mask (None =
+  every modality fresh), ``keys`` the (R,) per-cell PRNG keys, ``weights``
+  the (R, K) routing weights to apply this window.
+
+Router *specs* are frozen dataclasses (hashable) so the engine can treat the
+whole policy as a static jit argument — the compiled program is specialized
+per router, and the carry holds all run-time state.
+
+All five baseline families of the paper's comparison (six routers —
+Thompson and UCB are the two members of the bandit family) are ported here
+in pure JAX, each pinned against its NumPy twin in :mod:`repro.baselines`
+by parity test (``tests/test_api.py``): :class:`UniformRouter`,
+:class:`CapacityRouter`, :class:`RoundRobinRouter`,
+:class:`LeastLoadedRouter` and the :class:`ThompsonRouter` /
+:class:`UcbRouter` bandits (same generated policy table as AIF, same
+hand-crafted reward).  The AIF agent itself is adapted onto the protocol by
+:class:`repro.api.aif.AifRouter`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies
+from repro.core.topology import Topology, default_topology
+
+#: Telemetry modalities of the batched engine (p95_s, rps, queue, err).
+N_OBS_MODALITIES = 4
+
+
+class RouterObs(NamedTuple):
+    """Per-tick observation view handed to :meth:`Router.step`.
+
+    Everything a router may legitimately see, assembled by the engine from
+    the previous window's :class:`~repro.envsim.batched.WindowInfo`.  The
+    AIF router uses only the published telemetry + the 10 s utilization
+    scrape (the paper's observability contract); the least-loaded baseline
+    reads the per-tier queue/liveness it is privileged to know.
+    """
+
+    raw_obs: jnp.ndarray           # (R, M) published telemetry
+    tier_utilization: jnp.ndarray  # (R, K) last 10 s scrape, lightest first
+    tier_up: jnp.ndarray           # (R, K) liveness probe (1 = up)
+    tier_queue: jnp.ndarray        # (R, K) per-tier queue depth
+    t_idx: jnp.ndarray             # () int32 window index
+
+
+class TickInfo(NamedTuple):
+    """Per-tick router diagnostics traced by the engine."""
+
+    action: jnp.ndarray            # (R,) int32 policy / arm index (0 if n/a)
+    unstable: jnp.ndarray          # (R,) bool adaptive-mode flag (AIF only)
+
+
+def _no_diag(r: int) -> TickInfo:
+    return TickInfo(action=jnp.zeros((r,), jnp.int32),
+                    unstable=jnp.zeros((r,), bool))
+
+
+class Router:
+    """Base protocol; subclasses are frozen dataclasses (static jit args).
+
+    Engine hints (override where relevant): ``period`` / ``dwell`` are the
+    slow-learning and action-dwell cadences in ticks (the engine exploits
+    them to skip work — 1 means every tick), ``has_slow`` gates the
+    once-per-period :meth:`slow_step`, ``n_tiers`` / ``n_modalities`` fix
+    the observation buffer shapes.
+    """
+
+    name: str = "router"
+
+    # ------------------------------------------------------- engine hints
+    @property
+    def n_tiers(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_modalities(self) -> int:
+        return N_OBS_MODALITIES
+
+    @property
+    def period(self) -> int:
+        return 1
+
+    @property
+    def dwell(self) -> int:
+        return 1
+
+    @property
+    def has_slow(self) -> bool:
+        return False
+
+    def clock_phase(self, carry) -> int | None:
+        """Fast ticks already elapsed on the fleet clock, mod ``period``
+        (None = mixed per-cell clocks; the engine falls back to per-tick
+        slow gating)."""
+        return 0
+
+    # --------------------------------------------------------- transitions
+    def init_carry(self, r: int) -> Any:
+        """Router state pytree with leading cell axis R (deterministic)."""
+        return ()
+
+    def step(self, carry, obs: RouterObs, obs_mask, keys):
+        """One control tick -> (carry, (R, K) weights, TickInfo)."""
+        raise NotImplementedError
+
+    def light_step(self, carry, obs: RouterObs, obs_mask):
+        """Held tick (``dwell`` > 1 only): the selected action is pinned, so
+        a router may skip its selection work.  Never called for dwell == 1."""
+        raise NotImplementedError(
+            f"{type(self).__name__} declares dwell > 1 but no light_step")
+
+    def slow_step(self, carry, keys):
+        """Once-per-period learning (``has_slow`` only)."""
+        return carry
+
+
+# --------------------------------------------------------------- static family
+@dataclasses.dataclass(frozen=True)
+class UniformRouter(Router):
+    """Fixed near-uniform split — the paper's production baseline."""
+
+    tiers: int = 3
+
+    name = "uniform"
+
+    @property
+    def n_tiers(self) -> int:
+        return self.tiers
+
+    def step(self, carry, obs, obs_mask, keys):
+        r = obs.raw_obs.shape[0]
+        w = jnp.asarray(policies.balanced_weights(self.tiers), jnp.float32)
+        return carry, jnp.broadcast_to(w, (r, self.tiers)), _no_diag(r)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityRouter(Router):
+    """Weights proportional to known tier capacities — the prior knowledge
+    AIF denies itself.  ``weights`` is normalized internally."""
+
+    weights: tuple[float, ...] = (0.15, 0.23, 0.62)
+
+    name = "capacity"
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.weights)
+
+    def step(self, carry, obs, obs_mask, keys):
+        r = obs.raw_obs.shape[0]
+        w = jnp.asarray(self.weights, jnp.float32)
+        w = w / jnp.sum(w)
+        return carry, jnp.broadcast_to(w, (r, self.n_tiers)), _no_diag(r)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinRouter(Router):
+    """Cycles a one-hot weight across tiers every control window."""
+
+    tiers: int = 3
+
+    name = "round_robin"
+
+    @property
+    def n_tiers(self) -> int:
+        return self.tiers
+
+    def init_carry(self, r: int):
+        return jnp.zeros((r,), jnp.int32)
+
+    def step(self, carry, obs, obs_mask, keys):
+        tier = carry % self.tiers
+        w = jax.nn.one_hot(tier, self.tiers, dtype=jnp.float32)
+        return carry + 1, w, TickInfo(action=tier,
+                                      unstable=jnp.zeros_like(tier, bool))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastLoadedRouter(Router):
+    """Join-shortest-queue: traffic inversely proportional to per-tier queue
+    depth, never to a down pod (requires the per-tier visibility the paper's
+    router denies itself)."""
+
+    softness: float = 1.0
+    tiers: int = 3
+
+    name = "least_loaded"
+
+    @property
+    def n_tiers(self) -> int:
+        return self.tiers
+
+    def step(self, carry, obs, obs_mask, keys):
+        r = obs.raw_obs.shape[0]
+        load = obs.tier_queue + 1.0
+        w = (1.0 / load ** self.softness) * obs.tier_up
+        total = jnp.sum(w, axis=-1, keepdims=True)
+        w = jnp.where(total > 0, w / jnp.maximum(total, 1e-30),
+                      jnp.full_like(w, 1.0 / self.tiers))
+        return carry, w, _no_diag(r)
+
+
+# --------------------------------------------------------------- bandit family
+def _bandit_reward(obs: RouterObs, latency_scale_s: float,
+                   latency_weight: float) -> jnp.ndarray:
+    """(R,) per-window reward: success share minus normalized P95 — the
+    hand-crafted reward engineering AIF avoids (matches the NumPy twins).
+
+    The warm-up tick credits the engine's zero observation (reward 1.0) to
+    the balanced arm 0 — deliberately so: the event-sim twins snapshot the
+    idle world before the first window and do exactly the same, and the
+    parity tests pin the two implementations sample-for-sample.
+
+    Column indices follow the batched engine's fixed telemetry emission
+    order (p95_s, rps, queue, err — :data:`N_OBS_MODALITIES`), which the
+    fluid engine publishes for every topology regardless of how the AIF
+    observation model orders its modalities.
+    """
+    err = obs.raw_obs[:, 3]
+    p95 = obs.raw_obs[:, 0]
+    return (1.0 - err) - latency_weight * jnp.minimum(
+        p95 / latency_scale_s, 2.0)
+
+
+class ThompsonCarry(NamedTuple):
+    mu: jnp.ndarray          # (R, A) posterior means
+    var: jnp.ndarray         # (R, A) posterior variances
+    active_arm: jnp.ndarray  # (R,) int32 arm credited with the next reward
+
+
+@dataclasses.dataclass(frozen=True)
+class ThompsonRouter(Router):
+    """Gaussian Thompson sampling over the topology's generated policies.
+
+    Arms = the same policy table as AIF (isolating decision rule from action
+    space).  The posterior update is the NumPy twin's Gaussian conjugate
+    update verbatim; only the sampling noise comes from the engine's keys.
+    """
+
+    topology: Topology = dataclasses.field(default_factory=default_topology)
+    latency_scale_s: float = 5.0
+    latency_weight: float = 0.5
+    obs_noise: float = 0.25
+
+    name = "thompson"
+
+    @property
+    def n_tiers(self) -> int:
+        return self.topology.n_tiers
+
+    def init_carry(self, r: int) -> ThompsonCarry:
+        a = policies.n_actions(self.topology)
+        return ThompsonCarry(mu=jnp.zeros((r, a), jnp.float32),
+                             var=jnp.ones((r, a), jnp.float32),
+                             active_arm=jnp.zeros((r,), jnp.int32))
+
+    def step(self, carry: ThompsonCarry, obs, obs_mask, keys):
+        table = policies.policy_table(self.topology)
+        reward = _bandit_reward(obs, self.latency_scale_s,
+                                self.latency_weight)
+
+        def one(c, rwd, key):
+            k = c.active_arm
+            prec = 1.0 / c.var[k] + 1.0 / self.obs_noise
+            mu = c.mu.at[k].set((c.mu[k] / c.var[k] + rwd / self.obs_noise)
+                                / prec)
+            var = c.var.at[k].set(1.0 / prec)
+            eps = jax.random.normal(key, mu.shape)
+            draws = mu + jnp.sqrt(var) * eps
+            arm = jnp.argmax(draws).astype(jnp.int32)
+            return ThompsonCarry(mu=mu, var=var, active_arm=arm), arm
+
+        carry, arms = jax.vmap(one)(carry, reward, keys)
+        return carry, table[arms], TickInfo(
+            action=arms, unstable=jnp.zeros_like(arms, bool))
+
+
+class UcbCarry(NamedTuple):
+    counts: jnp.ndarray      # (R, A) pulls per arm
+    sums: jnp.ndarray        # (R, A) summed rewards per arm
+    active_arm: jnp.ndarray  # (R,) int32
+    t: jnp.ndarray           # (R,) int32 total pulls
+
+
+@dataclasses.dataclass(frozen=True)
+class UcbRouter(Router):
+    """UCB1 over the topology's generated policies (deterministic)."""
+
+    topology: Topology = dataclasses.field(default_factory=default_topology)
+    c: float = 1.0
+    latency_scale_s: float = 5.0
+    latency_weight: float = 0.5
+
+    name = "ucb"
+
+    @property
+    def n_tiers(self) -> int:
+        return self.topology.n_tiers
+
+    def init_carry(self, r: int) -> UcbCarry:
+        a = policies.n_actions(self.topology)
+        return UcbCarry(counts=jnp.zeros((r, a), jnp.float32),
+                        sums=jnp.zeros((r, a), jnp.float32),
+                        active_arm=jnp.zeros((r,), jnp.int32),
+                        t=jnp.zeros((r,), jnp.int32))
+
+    def step(self, carry: UcbCarry, obs, obs_mask, keys):
+        table = policies.policy_table(self.topology)
+        reward = _bandit_reward(obs, self.latency_scale_s,
+                                self.latency_weight)
+
+        def one(c, rwd):
+            t = c.t + 1
+            k = c.active_arm
+            counts = c.counts.at[k].add(1.0)
+            sums = c.sums.at[k].add(rwd)
+            means = sums / jnp.maximum(counts, 1.0)
+            bonus = self.c * jnp.sqrt(jnp.log(t.astype(jnp.float32) + 1.0)
+                                      / jnp.maximum(counts, 1e-9))
+            bonus = jnp.where(counts == 0, 1e9, bonus)
+            arm = jnp.argmax(means + bonus).astype(jnp.int32)
+            return UcbCarry(counts=counts, sums=sums, active_arm=arm, t=t), arm
+
+        carry, arms = jax.vmap(one)(carry, reward)
+        return carry, table[arms], TickInfo(
+            action=arms, unstable=jnp.zeros_like(arms, bool))

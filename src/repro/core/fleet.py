@@ -24,13 +24,15 @@ paper's 1 s / 10 s timescale separation (§4.4) means nothing else about the
 model changes between slow ticks, so the fast loop never re-normalizes
 pseudo-counts.
 
-:func:`fleet_rollout` closes the loop on-device as a *nested*
-``jax.lax.scan``: the outer scan walks slow periods, the inner scan runs the
-``slow_period_s / fast_period_s`` fast ticks of one period, and the slow
-learning step executes exactly once per period (instead of being
-computed-and-discarded every tick).  Agent and environment state buffers are
-donated through :func:`fleet_tick` / :func:`fleet_rollout`, so entering a
-tick never copies the (replay-buffer-dominated) fleet state.
+The closed loop itself lives in the engine layer
+(:func:`repro.api.engine.rollout`, behind the Router protocol): the outer
+scan walks slow periods, the inner scan runs the ``slow_period_s /
+fast_period_s`` fast ticks of one period, and the slow learning step
+executes exactly once per period (instead of being computed-and-discarded
+every tick).  :func:`fleet_rollout` remains as a deprecation shim over that
+engine.  Agent and environment state buffers are donated through
+:func:`fleet_tick` and the rollout, so entering a tick never copies the
+(replay-buffer-dominated) fleet state.
 
 All functions below take/return a *batched* :class:`~repro.core.agent.AgentState`
 whose leaves carry a leading router dimension R.
@@ -38,11 +40,11 @@ whose leaves carry a leading router dimension R.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import agent as agent_mod
 from repro.core import belief as belief_mod
@@ -397,286 +399,38 @@ def fleet_rollout(agent_state: agent_mod.AgentState,
                   use_pallas: bool = False,
                   obs_masked: bool | None = None,
                   t0: int | None = None):
-    """Closed-loop fleet experiment as one on-device *nested* ``lax.scan``.
+    """Deprecated AIF-only entry point — use :mod:`repro.api` instead.
 
-    Each of the ``n_steps`` control windows: discretize the previous window's
-    observations, run one fleet fast step (belief update → EFE → action),
-    apply the selected routing weights to the batched environment, observe.
-    The observation plumbing mirrors :class:`repro.envsim.routers.AifRouter`
-    (same discretization, same 10-second utilization scrape in (H, M, L)
-    order) so a fleet cell behaves like the single-router harness.
+    The closed-loop engine now lives in :func:`repro.api.engine.rollout`
+    behind the Router protocol; this shim keeps the old hand-assembled
+    cfg/disc/util_edges/fused/use_pallas signature working by packing it
+    into a :class:`repro.api.aif.AifRouter` spec and delegating (same
+    program bit-for-bit — the golden rollout test pins it).  Prefer::
 
-    Telemetry degradation: when the environment adapter declares
-    ``env_step.emits_mask`` (see :func:`repro.envsim.batched.make_env_step`)
-    — or the caller passes ``obs_masked=True`` explicitly, for adapters that
-    emit ``WindowInfo.obs_mask`` without carrying the attribute (wrapped
-    closures, ``functools.partial``) — each window's mask is carried into
-    the next tick: masked modalities contribute zero belief evidence,
-    accumulate no A-counts, hold the adaptive-preference error EMA, and
-    drop out of the EFE risk/ambiguity terms; the trace records the
-    effective-observation fraction.  ``obs_masked=False`` forces the
-    mask-free program; the default (None) auto-detects from the attribute.
-    Without masks the rollout compiles the exact pre-mask program
-    (bit-identical to the pre-mask engine; the golden rollout test pins
-    this).
+        from repro import api
+        router = api.AifRouter(cfg=cfg, disc=disc, fused=fused)
+        api.rollout(router, agent_state, env_state, env_step, n_steps, key)
 
-    The scan is nested to exploit the paper's timescale separation: the outer
-    scan walks slow periods (``period = slow_period_s / fast_period_s``),
-    the inner scan runs the ``period`` fast ticks of one period, and
-    :func:`fleet_slow_step` (replay-batch learning + model-cache refresh)
-    executes exactly once per period — at the boundary tick, with that
-    tick's slow key, which reproduces the per-tick reference semantics
-    bit-for-bit.  Within a period, ticks off the action-dwell cadence skip
-    the EFE evaluation (:func:`fleet_light_step`).  Both schedules are
-    compiled against the fleet's *clock phase*: inferred from
-    ``agent_state.t`` when it is a concrete uniform array (so chaining
-    rollouts through the returned state keeps the cadences correct), or
-    passed explicitly via ``t0`` when the state is traced.  Fleets with
-    non-uniform clocks fall back to a flat per-tick scan with per-router
-    slow gating (correct, but without the once-per-period savings).
-
-    ``agent_state`` and ``env_state`` are donated — entering the rollout
-    moves the fleet buffers instead of copying them (the replay buffer
-    dominates: R × capacity × 2|S| floats); reuse the *returned* states.
-
-    Args:
-      agent_state: batched AgentState (leading dim R).
-      env_state: environment state pytree with leading cell dim R (e.g.
-        :class:`repro.envsim.batched.FluidState`).
-      env_step: ``(env_state, weights, t_idx, key) -> (env_state, info)``
-        where ``info.raw_obs`` is (R, M) raw metrics and
-        ``info.tier_utilization`` is (R, K) in tier order (lightest first) —
-        see :func:`repro.envsim.batched.make_env_step`.
-      n_steps: number of control windows T (static).
-      cfg/disc: agent hyper-parameters and observation discretization; the
-        disc edge rows and the env's ``raw_obs`` columns must both match the
-        topology's modalities (the fluid engine emits the default four).
-      util_edges: raw-utilization level edges (default: the topology's).
-      t0: fast ticks already elapsed on every router's clock (static).
-        Only needed when ``agent_state.t`` is a tracer; concrete states are
-        introspected.  Must equal the actual clock or the dwell/slow
-        cadences compile against the wrong phase.
-
-    Returns:
-      (final agent state, final env state, :class:`FleetTrace`).
+    or the declarative :func:`repro.api.run` / :class:`repro.api.Experiment`
+    surface, which also owns the scenario/env assembly.
     """
-    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
-    if t0 is not None:
-        clock_phase = int(t0) % period
-    else:
-        t = agent_state.t
-        if isinstance(t, jax.core.Tracer):
-            raise ValueError(
-                "fleet_rollout cannot infer the fleet clock from a traced "
-                "agent_state; pass t0= explicitly (the number of fast ticks "
-                "already elapsed — 0 for a fresh fleet).  Without it the "
-                "dwell/slow schedules would compile against the wrong "
-                "phase and silently freeze action selection.")
-        vals = np.unique(np.asarray(t))
-        clock_phase = (int(vals[0]) % period if vals.size == 1
-                       else None)        # mixed clocks -> flat safe mode
-    if obs_masked is None:
-        obs_masked = bool(getattr(env_step, "emits_mask", False))
-    return _fleet_rollout_impl(agent_state, env_state, env_step, n_steps,
-                               key, cfg, disc, util_edges, util_period,
-                               fused=fused, use_pallas=use_pallas,
-                               obs_masked=obs_masked,
-                               clock_phase=clock_phase)
+    warnings.warn(
+        "repro.core.fleet.fleet_rollout is deprecated: build a "
+        "repro.api.AifRouter and call repro.api.rollout (or run a "
+        "declarative repro.api.Experiment); this shim keeps the old "
+        "signature working unchanged",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.aif import AifRouter
+    from repro.api.engine import rollout
+    router = AifRouter(cfg=cfg, disc=disc,
+                       util_edges=(None if util_edges is None
+                                   else tuple(util_edges)),
+                       util_period=util_period,
+                       fused=fused, use_pallas=use_pallas)
+    return rollout(router, agent_state, env_state, env_step, n_steps, key,
+                   obs_masked=obs_masked, t0=t0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("env_step", "n_steps", "cfg", "disc",
-                                    "util_edges", "util_period", "fused",
-                                    "use_pallas", "obs_masked",
-                                    "clock_phase"),
-                   donate_argnames=("agent_state", "env_state"))
-def _fleet_rollout_impl(agent_state: agent_mod.AgentState,
-                        env_state,
-                        env_step: Callable,
-                        n_steps: int,
-                        key: jax.Array,
-                        cfg: generative.AifConfig,
-                        disc: spaces.DiscretizationConfig | None = None,
-                        util_edges: tuple[float, ...] | None = None,
-                        util_period: int = 10,
-                        *,
-                        fused: bool = False,
-                        use_pallas: bool = False,
-                        obs_masked: bool = False,
-                        clock_phase: int | None = 0):
-    topo = cfg.topology
-    disc = disc or spaces.DiscretizationConfig()
-    if len(disc.modality_edges()) != topo.n_modalities:
-        raise ValueError(
-            f"DiscretizationConfig covers {len(disc.modality_edges())} "
-            f"modalities but the topology declares {topo.n_modalities} "
-            f"({topo.modalities}); pass disc with matching `edges` (and an "
-            f"env_step whose raw_obs has one column per modality)")
-    r = agent_state.belief.shape[0]
-    util_edges = topo.util_edges if util_edges is None else tuple(util_edges)
-    if len(util_edges) != topo.n_levels - 1:
-        raise ValueError(
-            f"util_edges needs {topo.n_levels - 1} edges for "
-            f"{topo.n_levels}-level state factors, got {util_edges} "
-            f"(out-of-range bins would make the utilization scrape match "
-            f"no state)")
-    edges = jnp.asarray(util_edges, jnp.float32)
-    period = max(int(cfg.slow_period_s / cfg.fast_period_s), 1)
-    dwell = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
-    # Dwell blocking: on ticks with t % dwell != 0 the sampled action is
-    # discarded by apply_action and the rollout does not trace G, so the EFE
-    # evaluation (the dominant per-tick cost — it streams the full
-    # (R, A, S, S) cached B) can be skipped with bit-identical state
-    # evolution.  Requires the dwell pattern to be static within a period
-    # and the fleet clock phase to be known (clock_phase is not None).
-    dwell_blocked = (dwell > 1 and period % dwell == 0
-                     and clock_phase is not None)
-    # Mask-emitting environments feed each window's telemetry-validity mask
-    # into the next tick; otherwise the mask stays an untouched all-ones
-    # carry and every step runs the mask-free path.  (Resolved statically in
-    # fleet_rollout: env_step.emits_mask or an explicit obs_masked=.)
-    emits_mask = obs_masked
-
-    def tick_body(carry, t_idx, light: bool):
-        ast, est, raw_obs, tier_util, obs_mask, k, _ = carry
-        k, k_env, k_agents = jax.random.split(k, 3)
-        keys = jax.random.split(k_agents, r)
-        ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
-        k_fast, k_slow = ks[:, 0], ks[:, 1]
-        obs_bins = spaces.discretize_observation(raw_obs, disc)
-        util_hml = tier_util[:, ::-1]  # tier order -> state-factor order
-        util_bins = jnp.sum(util_hml[..., None] >= edges, axis=-1
-                            ).astype(jnp.int32)
-        util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
-        mask = obs_mask if emits_mask else None
-        if light:
-            ast, info = fleet_light_step(ast, obs_bins, raw_obs[:, 3], cfg,
-                                         util_bins, util_valid, mask,
-                                         fused=fused)
-        else:
-            ast, info = fleet_fast_step(ast, obs_bins, raw_obs[:, 3], k_fast,
-                                        cfg, util_bins, util_valid, mask,
-                                        fused=fused, use_pallas=use_pallas)
-        est, win = env_step(est, info.routing_weights, t_idx, k_env)
-        next_mask = win.obs_mask if emits_mask else obs_mask
-        ys = FleetTrace(actions=info.action,
-                        routing_weights=info.routing_weights,
-                        raw_obs=raw_obs,
-                        unstable=info.unstable,
-                        obs_frac=jnp.mean(obs_mask, axis=-1),
-                        env=win)
-        return (ast, est, win.raw_obs, win.tier_utilization, next_mask, k,
-                k_slow), ys
-
-    def full_body(carry, t_idx):
-        return tick_body(carry, t_idx, light=False)
-
-    def light_body(carry, t_idx):
-        return tick_body(carry, t_idx, light=True)
-
-    def dwell_block(carry, t_start, n_light: int):
-        """One dwell block: a selecting tick, then n_light held ticks."""
-        carry, y0 = full_body(carry, t_start)
-        y0 = jax.tree_util.tree_map(lambda a: a[None], y0)
-        if not n_light:
-            return carry, y0
-        carry, ys = jax.lax.scan(
-            light_body, carry,
-            t_start + 1 + jnp.arange(n_light, dtype=jnp.int32))
-        return carry, jax.tree_util.tree_map(
-            lambda a, b: jnp.concatenate([a, b], axis=0), y0, ys)
-
-    def run_ticks(carry, t_start, n: int, phase: int = 0):
-        """n consecutive ticks starting at traced window index ``t_start``,
-        whose first tick sits at dwell offset ``phase`` on the fleet clock
-        (static).  Misaligned heads run as held ticks until the next dwell
-        boundary; then selecting-tick-led blocks."""
-        outs = []
-        if dwell_blocked and n:
-            head = min((dwell - phase) % dwell, n)
-            if head:
-                carry, ys = jax.lax.scan(
-                    light_body, carry,
-                    t_start + jnp.arange(head, dtype=jnp.int32))
-                outs.append(ys)
-            t_start = t_start + head
-            n_blocks, tail = divmod(n - head, dwell)
-            if n_blocks:
-                def block_body(c, tb):
-                    return dwell_block(c, tb, dwell - 1)
-                carry, ys = jax.lax.scan(
-                    block_body, carry,
-                    t_start + dwell * jnp.arange(n_blocks, dtype=jnp.int32))
-                outs.append(jax.tree_util.tree_map(
-                    lambda x: x.reshape((n_blocks * dwell,) + x.shape[2:]),
-                    ys))
-            if tail:
-                carry, ys = dwell_block(carry, t_start + n_blocks * dwell,
-                                        tail - 1)
-                outs.append(ys)
-        else:
-            carry, ys = jax.lax.scan(
-                full_body, carry,
-                t_start + jnp.arange(n, dtype=jnp.int32))
-            outs.append(ys)
-        if len(outs) == 1:
-            return carry, outs[0]
-        return carry, jax.tree_util.tree_map(
-            lambda *xs: jnp.concatenate(xs, axis=0), *outs)
-
-    def slow_after(carry):
-        ast, est, raw_obs, tier_util, obs_mask, k, k_slow = carry
-        # Slow learning once per period, with the boundary tick's slow key —
-        # not recomputed-and-discarded on the 9 intermediate ticks.
-        ast = fleet_slow_step(ast, k_slow, cfg)
-        return (ast, est, raw_obs, tier_util, obs_mask, k, k_slow)
-
-    obs0 = jnp.zeros((r, topo.n_modalities), jnp.float32)
-    util0 = jnp.zeros((r, topo.n_tiers), jnp.float32)
-    mask0 = jnp.ones((r, topo.n_modalities), jnp.float32)
-    k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
-    carry = (agent_state, env_state, obs0, util0, mask0, key, k_slow0)
-    traces = []
-
-    if clock_phase is None:
-        # Mixed router clocks: flat per-tick scan, per-router slow gating
-        # every tick (the pre-nesting reference schedule).
-        def safe_body(c, t_idx):
-            c, ys = full_body(c, t_idx)
-            return slow_after(c), ys
-
-        carry, ys = jax.lax.scan(
-            safe_body, carry, jnp.arange(n_steps, dtype=jnp.int32))
-        return carry[0], carry[1], ys
-
-    # Lead-in up to the next slow boundary (empty for fresh fleets).
-    lead = (-clock_phase) % period
-    lead_eff = min(lead, n_steps)
-    if lead_eff:
-        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), lead_eff,
-                              phase=clock_phase % dwell)
-        traces.append(ys)
-        if lead_eff == lead:    # the boundary tick ran -> learn once
-            carry = slow_after(carry)
-    n_periods, n_rem = divmod(n_steps - lead_eff, period)
-
-    def period_body(carry, p_idx):
-        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period)
-        return slow_after(carry), ys
-
-    if n_periods:
-        carry, ys = jax.lax.scan(
-            period_body, carry, jnp.arange(n_periods, dtype=jnp.int32))
-        traces.append(jax.tree_util.tree_map(
-            lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
-    if n_rem or not traces:
-        carry, ys = run_ticks(
-            carry,
-            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem)
-        traces.append(ys)
-    trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
-        lambda *xs: jnp.concatenate(xs, axis=0), *traces)
-    return carry[0], carry[1], trace
 
 
 # ------------------------------------------------------- heterogeneous fleet
@@ -705,9 +459,15 @@ class FleetGroup(NamedTuple):
     disc: spaces.DiscretizationConfig | None = None
 
 
+#: Engine options hetero_fleet_rollout forwards to every group's rollout
+#: (per-group options — disc, fused, use_pallas — live on the FleetGroup).
+_HETERO_ROLLOUT_KWARGS = frozenset(
+    {"util_edges", "util_period", "obs_masked", "t0"})
+
+
 def hetero_fleet_rollout(groups, n_steps: int, key: jax.Array,
                          **kwargs) -> dict:
-    """Run a heterogeneous fleet: one :func:`fleet_rollout` per topology group.
+    """Run a heterogeneous fleet: one engine rollout per topology group.
 
     Args:
       groups: sequence of :class:`FleetGroup` (cells pre-grouped by
@@ -715,17 +475,38 @@ def hetero_fleet_rollout(groups, n_steps: int, key: jax.Array,
         ``agent_state`` / ``env_state`` are donated to its rollout.
       n_steps: shared number of control windows.
       key: PRNG key; folded per group so groups stay independent.
+      **kwargs: engine options shared by every group — one of
+        ``util_edges``, ``util_period``, ``obs_masked``, ``t0``.  Unknown
+        keys (e.g. a typo'd ``use_palas=True``) raise ``TypeError`` here at
+        the entry point, naming the valid options, instead of surfacing as
+        an opaque signature error deep inside the per-group loop.
 
     Returns:
       dict group name -> (final agent state, final env state, FleetTrace).
     """
+    unknown = set(kwargs) - _HETERO_ROLLOUT_KWARGS
+    if unknown:
+        raise TypeError(
+            f"hetero_fleet_rollout got unknown engine option(s) "
+            f"{sorted(unknown)}; shared options are "
+            f"{sorted(_HETERO_ROLLOUT_KWARGS)} and per-group options "
+            f"(disc, fused, use_pallas) belong on the FleetGroup")
     names = [g.name for g in groups]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate FleetGroup names: {names}")
+    from repro.api.aif import AifRouter
+    from repro.api.engine import rollout
+    rollout_kwargs = {k: kwargs[k] for k in ("obs_masked", "t0")
+                      if k in kwargs}
     out = {}
     for i, g in enumerate(groups):
-        out[g.name] = fleet_rollout(
-            g.agent_state, g.env_state, g.env_step, n_steps,
-            jax.random.fold_in(key, i), g.cfg, disc=g.disc,
-            fused=g.fused, use_pallas=g.use_pallas, **kwargs)
+        router = AifRouter(
+            cfg=g.cfg, disc=g.disc,
+            util_edges=(tuple(kwargs["util_edges"])
+                        if kwargs.get("util_edges") is not None else None),
+            util_period=kwargs.get("util_period", 10),
+            fused=g.fused, use_pallas=g.use_pallas)
+        out[g.name] = rollout(
+            router, g.agent_state, g.env_state, g.env_step, n_steps,
+            jax.random.fold_in(key, i), **rollout_kwargs)
     return out

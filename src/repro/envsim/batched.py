@@ -121,6 +121,7 @@ class WindowInfo(NamedTuple):
     obs_mask: jnp.ndarray         # (R, M) 1 = fresh sample, 0 = stale/missing
     tier_utilization: jnp.ndarray  # (R, K) 10 s scrape (paper §3)
     tier_up: jnp.ndarray          # (R, K) liveness probe
+    tier_queue: jnp.ndarray       # (R, K) waiting mass per tier (JSQ signal)
     tier_latency_s: jnp.ndarray   # (R, K) mean latency of this window's flow
     tier_p95_s: jnp.ndarray       # (R, K)
     tier_completed: jnp.ndarray   # (R, K) successful mass this window
@@ -344,7 +345,8 @@ def fluid_window_step(params: FluidParams,
                         (1 - a_err) * state.err_ema + a_err * err_frac,
                         state.err_ema)
     rps_ema = (1 - a_rps) * state.rps_ema + a_rps * arrival_rate
-    queue_depth = jnp.sum(jnp.maximum(backlog2 - params.servers, 0.0), axis=-1)
+    tier_queue = jnp.maximum(backlog2 - params.servers, 0.0)   # (R, K)
+    queue_depth = jnp.sum(tier_queue, axis=-1)
 
     # ---- telemetry pipeline (validity mask + stale-hold emission) ---------
     fresh_obs = jnp.stack([p95_ema, rps_ema, queue_depth, err_ema], axis=-1)
@@ -391,6 +393,7 @@ def fluid_window_step(params: FluidParams,
         obs_mask=obs_mask,
         tier_utilization=util_scrape,
         tier_up=(down_left <= _EPS).astype(jnp.float32),
+        tier_queue=tier_queue,
         tier_latency_s=tier_latency,
         tier_p95_s=tier_p95,
         tier_completed=completed,
