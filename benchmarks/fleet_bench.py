@@ -17,7 +17,11 @@ Workloads, all single jitted ``lax.scan`` programs (no Python in the loop):
 * ``api_compare``    — the declarative ``repro.api.compare`` surface
                      end-to-end (AIF + uniform pair, config assembly and
                      host-side summary included), guarding the public
-                     Experiment entry point.
+                     Experiment entry point,
+* ``fleet_sharded``  — (``--shard``) the device-sharded closed loop under
+                     ``shard_map``, weak scaling at fixed cells/device over
+                     1/2/4 devices, plus a roofline line for the compiled
+                     per-device tick.
 
 Each path is recorded as a separate entry in the repo-root
 ``BENCH_fleet.json`` (schema ``{benchmark, device, entries: [{name, config,
@@ -146,6 +150,76 @@ def bench_api_compare(r: int, t: int, scenario: str = "paper-burst") -> dict:
     }
 
 
+def bench_sharded(r_local: int, t: int, devices: int,
+                  scenario: str = "paper-burst") -> dict:
+    """Device-sharded closed loop at weak scaling: R = r_local × devices.
+
+    The fused AIF router under ``shard_map`` with on-device metric
+    reduction (:func:`repro.api.engine.sharded_rollout`) — per-device work
+    is constant across the curve, so on real parallel hardware the wall
+    clock should stay flat as R grows with the mesh.  On a single-core
+    host with virtual devices the row instead measures the sharding
+    machinery's overhead honestly (devices time-share the core).
+    """
+    from repro.api import engine as engine_mod
+    from repro.api.experiment import FleetMetricsReducer, _build_world_padded
+    from repro.core.topology import default_topology
+
+    r = r_local * devices
+    spec = api.ShardSpec(devices=devices)
+    _, params, env_step = _build_world_padded(
+        default_topology(), scenario, r, t, 1.0, 0, r, devices)
+    router = api.AifRouter(cfg=AifConfig(), fused=True)
+    reducer = FleetMetricsReducer(n_cells=r)
+    key = jax.random.key(0)
+
+    def make_args():
+        return (batched.init_fluid_state(params),)
+
+    compile_s, run_s = _bench(
+        make_args,
+        lambda est: engine_mod.sharded_rollout(
+            router, est, env_step, t, key, shard=spec, n_cells=r,
+            reducer=reducer))
+    return {
+        "workload": "fleet_sharded", "r": r, "t": t, "scenario": scenario,
+        "devices": devices,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def _sharded_roofline(r_local: int, t: int, devices: int,
+                      scenario: str = "paper-burst") -> None:
+    """Print roofline terms for the compiled sharded tick (per-device HLO)."""
+    from repro.api import engine as engine_mod
+    from repro.api.experiment import FleetMetricsReducer, _build_world_padded
+    from repro.core.topology import default_topology
+    from repro.launch import hlo_cost, roofline
+
+    r = r_local * devices
+    spec = api.ShardSpec(devices=devices)
+    _, params, env_step = _build_world_padded(
+        default_topology(), scenario, r, t, 1.0, 0, r, devices)
+    router = api.AifRouter(cfg=AifConfig(), fused=True)
+    compiled = engine_mod._sharded_impl.lower(
+        batched.init_fluid_state(params), jax.random.key(0), router=router,
+        env_step=env_step, n_steps=t, obs_masked=False, clock_phase=0,
+        spec=spec, n_cells=r, reducer=FleetMetricsReducer(n_cells=r)
+    ).compile()
+    text = compiled.as_text()
+    st = hlo_cost.analyze_text(text)
+    coll = roofline.parse_collectives(text, default_group=devices)
+    per_win = st.flops / t
+    print(f"roofline[fleet_sharded r={r} t={t} d={devices}]: "
+          f"{st.flops / 1e9:.2f} GFLOP/device ({per_win / 1e6:.1f} MFLOP per "
+          f"window), {st.hbm_bytes / 1e9:.2f} GB HBM, "
+          f"intensity {st.flops / max(st.hbm_bytes, 1.0):.2f} FLOP/B, "
+          f"collectives {sum(coll.counts.values())} ops / "
+          f"{coll.link_bytes / 1e3:.1f} kB link", flush=True)
+
+
 def run(quick: bool = False, use_pallas: bool = False,
         scenario: str = "paper-burst") -> list[dict]:
     rows = []
@@ -179,6 +253,31 @@ def run(quick: bool = False, use_pallas: bool = False,
     return rows
 
 
+def run_shard(quick: bool = False, scenario: str = "paper-burst",
+              r_local: int = 64, t: int = 120) -> list[dict]:
+    """Weak-scaling curve of the device-sharded closed loop.
+
+    Fixed cells-per-device, device counts 1 / 2 / 4 (capped at what is
+    local — run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+    for the full curve on CPU).  ``--quick`` drops the middle point; the
+    endpoints keep the same (name, r, t, scenario) keys as the full curve
+    so the CI regression gate matches them against the committed rows.
+    """
+    avail = jax.local_device_count()
+    counts = [d for d in (1, 2, 4) if d <= avail]
+    if quick and len(counts) > 2:
+        counts = [counts[0], counts[-1]]
+    # env acceptance row first: the machine-speed anchor
+    # check_perf_regression calibrates the fleet_sharded rows against.
+    rows = [bench_env(256, 600)]
+    _print_row(rows[0])
+    for d in counts:
+        rows.append(bench_sharded(r_local, t, d, scenario=scenario))
+        _print_row(rows[-1])
+    _sharded_roofline(r_local, t, counts[-1], scenario=scenario)
+    return rows
+
+
 def _print_row(row: dict) -> None:
     print(f"{row['workload']},r={row['r']},t={row['t']},"
           f"scenario={row.get('scenario', '-')},"
@@ -208,10 +307,13 @@ def _bench_summary(rows: list[dict], existing: dict | None = None) -> dict:
     for e in (existing or {}).get("entries", []):
         merged[key(e)] = dict(e, carried=True)
     for row in rows:
+        cfg = {"r": row["r"], "t": row["t"],
+               "scenario": row.get("scenario")}
+        if "devices" in row:
+            cfg["devices"] = row["devices"]
         entry = {
             "name": row["workload"],
-            "config": {"r": row["r"], "t": row["t"],
-                       "scenario": row.get("scenario")},
+            "config": cfg,
             "cell_windows_per_s": row["cell_windows_per_s"],
             "wall_s": row["run_s"],
         }
@@ -235,23 +337,33 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="also benchmark the fused Pallas kernel path "
                          "(interpret-mode emulation off-TPU)")
+    ap.add_argument("--shard", action="store_true",
+                    help="device-sharded weak-scaling curve (fleet_sharded "
+                         "rows) instead of the standard grid; use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+                         " for the full CPU curve")
     args = ap.parse_args()
     if args.json:     # fail fast on an unwritable path, not after the bench
         open(args.json, "a").close()
-    rows = run(quick=args.quick, use_pallas=args.use_pallas,
-               scenario=args.scenario)
+    rows = (run_shard(quick=args.quick, scenario=args.scenario)
+            if args.shard else
+            run(quick=args.quick, use_pallas=args.use_pallas,
+                scenario=args.scenario))
     if args.json:
+        bench_path = pathlib.Path(__file__).resolve().parent.parent / (
+            "BENCH_fleet.json")
+        # read the committed summary BEFORE writing the artifact: if --json
+        # points at BENCH_fleet.json itself the artifact write would clobber
+        # the entries the merge is meant to carry
+        existing = None
+        if bench_path.exists():
+            with open(bench_path) as f:
+                existing = json.load(f)
         with open(args.json, "w") as f:
             json.dump({"benchmark": "fleet_bench",
                        "device": str(jax.devices()[0]),
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
-        bench_path = pathlib.Path(__file__).resolve().parent.parent / (
-            "BENCH_fleet.json")
-        existing = None
-        if bench_path.exists():
-            with open(bench_path) as f:
-                existing = json.load(f)
         with open(bench_path, "w") as f:
             json.dump(_bench_summary(rows, existing), f, indent=2)
         print(f"wrote {bench_path}")

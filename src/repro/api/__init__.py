@@ -8,7 +8,9 @@ Three layers, smallest import first:
   jitted fleet loop as AIF.  The AIF agent itself is
   :class:`repro.api.aif.AifRouter`.
 * **Engine** (:mod:`repro.api.engine`) — :func:`rollout`: one on-device
-  ``lax.scan`` closed loop over any Router and any batched environment.
+  ``lax.scan`` closed loop over any Router and any batched environment;
+  :func:`sharded_rollout` runs the same loop under ``shard_map`` over a
+  cell-axis device mesh (:class:`~repro.api.shard.ShardSpec`).
 * **Experiments** (:mod:`repro.api.experiment`) — declarative
   :class:`Experiment` specs, :func:`run` (owns all config assembly) and
   :func:`compare` (the paper's Table-1 protocol at fleet scale, markdown /
@@ -19,21 +21,28 @@ Quickstart::
     from repro import api
     result = api.run(api.Experiment(router="aif", scenario="flash-crowd"))
     print(api.compare(api.table1_grid(n_cells=32, n_windows=600)).markdown())
+
+Mega-fleet quickstart (device-sharded, O(R/devices) trace memory)::
+
+    api.run(api.Experiment(router="least_loaded", n_cells=1_000_000,
+                           n_windows=50, shard="auto"))
 """
 from repro.api.aif import AifRouter
-from repro.api.engine import rollout
+from repro.api.engine import rollout, sharded_rollout
 from repro.api.experiment import (ROUTERS, TABLE1_ROUTERS, Comparison,
-                                  Experiment, RunResult, compare, run,
-                                  table1_grid)
+                                  Experiment, FleetMetricsReducer, RunResult,
+                                  compare, run, table1_grid)
 from repro.api.router import (CapacityRouter, LeastLoadedRouter,
                               RoundRobinRouter, Router, RouterObs,
                               ThompsonRouter, TickInfo, UcbRouter,
                               UniformRouter)
+from repro.api.shard import ShardSpec
 
 __all__ = [
     "AifRouter", "CapacityRouter", "Comparison", "Experiment",
-    "LeastLoadedRouter", "ROUTERS", "RoundRobinRouter", "Router",
-    "RouterObs", "RunResult", "TABLE1_ROUTERS", "ThompsonRouter",
-    "TickInfo", "UcbRouter", "UniformRouter", "compare", "rollout", "run",
+    "FleetMetricsReducer", "LeastLoadedRouter", "ROUTERS",
+    "RoundRobinRouter", "Router", "RouterObs", "RunResult", "ShardSpec",
+    "TABLE1_ROUTERS", "ThompsonRouter", "TickInfo", "UcbRouter",
+    "UniformRouter", "compare", "rollout", "run", "sharded_rollout",
     "table1_grid",
 ]

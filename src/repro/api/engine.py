@@ -23,6 +23,14 @@ each window's validity mask is carried into the next tick's ``obs_mask``
 and the trace records the effective-observation fraction.  Mask-aware
 routers (AIF) discount the masked evidence; mask-oblivious baselines
 consume the stale re-emitted values, exactly like real pipelines.
+
+Device sharding (:func:`sharded_rollout`): the same nested scan runs under
+``jax.shard_map`` over a 1-D cell-axis mesh — router carry, env state and
+per-cell PRNG keys sharded along R, randomness drawn at the device-count-
+invariant true-R global shape and row-sliced per shard, and per-tick traces
+replaced by an O(R/devices)-memory metrics accumulator whose reductions are
+``psum``-ed across the mesh at the end.  A 1-device mesh reproduces the
+unsharded engine bit-for-bit.
 """
 from __future__ import annotations
 
@@ -31,6 +39,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.api.router import Router, RouterObs
 from repro.core.fleet import FleetTrace
@@ -80,6 +90,24 @@ def rollout(router: Router,
                          clock_phase=clock_phase)
 
 
+def _row_block_keys(key: jax.Array, row_start: jnp.ndarray, n_true: int,
+                    n_pad: int, n_local: int) -> jax.Array:
+    """This shard's block of the fleet-global per-cell key split.
+
+    JAX PRNG outputs are a function of the requested shape (not
+    prefix-stable), so per-cell keys must be split at the fixed true-R
+    global count on every shard and row-sliced — that is what makes every
+    device count (including 1) reproduce the unsharded engine's key stream
+    exactly.  Phantom pad rows reuse the last real cell's key; their
+    outputs never enter a reduction.
+    """
+    full = jax.random.split(key, n_true)
+    if n_pad > n_true:
+        full = jnp.concatenate(
+            [full, jnp.repeat(full[-1:], n_pad - n_true, axis=0)])
+    return jax.lax.dynamic_slice_in_dim(full, row_start, n_local)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("router", "env_step", "n_steps",
                                     "obs_masked", "clock_phase"),
@@ -93,6 +121,35 @@ def _rollout_impl(carry0,
                   router: Router,
                   obs_masked: bool = False,
                   clock_phase: int | None = 0):
+    carry, est, trace, _ = _rollout_core(
+        carry0, env_state, env_step, n_steps, key, router=router,
+        obs_masked=obs_masked, clock_phase=clock_phase)
+    return carry, est, trace
+
+
+def _rollout_core(carry0,
+                  env_state,
+                  env_step: Callable,
+                  n_steps: int,
+                  key: jax.Array,
+                  *,
+                  router: Router,
+                  obs_masked: bool = False,
+                  clock_phase: int | None = 0,
+                  rows: tuple | None = None,
+                  reducer=None,
+                  stats0=()):
+    """Shared scan core of the (un)sharded rollouts.
+
+    ``rows = (row_start, n_true, n_pad)`` switches the per-cell key split to
+    the fleet-global draw-and-slice mode (see :func:`_row_block_keys`);
+    ``reducer`` replaces the stacked per-tick :class:`FleetTrace` with an
+    O(cells)-memory accumulator (``stats0`` its initial value) — the trace
+    output is then an empty pytree.  With both at their defaults this is
+    exactly the pre-shard engine program, bit for bit.
+
+    Returns (router carry, env state, trace, stats).
+    """
     r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     k_tiers = router.n_tiers
     m = router.n_modalities
@@ -113,10 +170,13 @@ def _rollout_impl(carry0,
     emits_mask = obs_masked
 
     def tick_body(carry, t_idx, light: bool):
-        rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, _ = (
-            carry)
+        (rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, _,
+         stats) = carry
         k, k_env, k_agents = jax.random.split(k, 3)
-        keys = jax.random.split(k_agents, r)
+        if rows is None:
+            keys = jax.random.split(k_agents, r)
+        else:
+            keys = _row_block_keys(k_agents, rows[0], rows[1], rows[2], r)
         ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
         k_fast, k_slow = ks[:, 0], ks[:, 1]
         obs = RouterObs(raw_obs=raw_obs, tier_utilization=tier_util,
@@ -134,8 +194,11 @@ def _rollout_impl(carry0,
                         unstable=tinfo.unstable,
                         obs_frac=jnp.mean(obs_mask, axis=-1),
                         env=win)
+        if reducer is not None:
+            stats = reducer.update(stats, t_idx, ys)
+            ys = ()
         return (rst, est, win.raw_obs, win.tier_utilization, win.tier_up,
-                win.tier_queue, next_mask, k, k_slow), ys
+                win.tier_queue, next_mask, k, k_slow, stats), ys
 
     def full_body(carry, t_idx):
         return tick_body(carry, t_idx, light=False)
@@ -195,12 +258,12 @@ def _rollout_impl(carry0,
 
     def slow_after(carry):
         rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, \
-            k_slow = carry
+            k_slow, stats = carry
         # Slow learning once per period, with the boundary tick's slow key —
         # not recomputed-and-discarded on the intermediate ticks.
         rst = router.slow_step(rst, k_slow)
         return (rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask,
-                k, k_slow)
+                k, k_slow, stats)
 
     obs0 = jnp.zeros((r, m), jnp.float32)
     util0 = jnp.zeros((r, k_tiers), jnp.float32)
@@ -208,7 +271,8 @@ def _rollout_impl(carry0,
     queue0 = jnp.zeros((r, k_tiers), jnp.float32)
     mask0 = jnp.ones((r, m), jnp.float32)
     k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
-    carry = (carry0, env_state, obs0, util0, up0, queue0, mask0, key, k_slow0)
+    carry = (carry0, env_state, obs0, util0, up0, queue0, mask0, key, k_slow0,
+             stats0)
     traces = []
 
     if not router.has_slow:
@@ -217,7 +281,7 @@ def _rollout_impl(carry0,
         phase = (clock_phase or 0) % dwell
         carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), n_steps,
                               phase=phase)
-        return carry[0], carry[1], ys
+        return carry[0], carry[1], ys, carry[-1]
 
     if clock_phase is None:
         # Mixed router clocks: flat per-tick scan, per-router slow gating
@@ -228,7 +292,7 @@ def _rollout_impl(carry0,
 
         carry, ys = jax.lax.scan(
             safe_body, carry, jnp.arange(n_steps, dtype=jnp.int32))
-        return carry[0], carry[1], ys
+        return carry[0], carry[1], ys, carry[-1]
 
     # Lead-in up to the next slow boundary (empty for fresh fleets).
     lead = (-clock_phase) % period
@@ -257,4 +321,115 @@ def _rollout_impl(carry0,
         traces.append(ys)
     trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *traces)
-    return carry[0], carry[1], trace
+    return carry[0], carry[1], trace, carry[-1]
+
+
+# ------------------------------------------------------------- device sharding
+def sharded_rollout(router: Router,
+                    env_state,
+                    env_step: Callable,
+                    n_steps: int,
+                    key: jax.Array,
+                    *,
+                    shard,
+                    n_cells: int,
+                    reducer,
+                    obs_masked: bool | None = None):
+    """:func:`rollout` under ``shard_map`` over a 1-D cell-axis mesh.
+
+    The fleet's R cells are independent until the final metric reduction, so
+    the whole nested scan runs per-shard: the router carry is initialized
+    *inside* the shard at R/devices cells, the env state arrives sharded
+    along its leading axis, and the environment closure is handed this
+    shard's ``row_block`` so it slices its closed-over (T, R) schedules and
+    draws restart randomness at the device-count-invariant global shape.
+    Per-tick traces are replaced by the ``reducer``'s O(cells)-memory
+    accumulator whose reductions are ``psum``-ed across the mesh — trace
+    memory never exceeds O(R/devices).
+
+    Args:
+      router: static router spec; ``init_carry`` must be deterministic in
+        its cell count (all in-repo routers are — zeros / broadcast priors).
+      env_state: environment pytree **padded** to the spec's device multiple
+        (leading dim ``shard.padded(n_cells)[0]`` on every leaf; see
+        :func:`repro.envsim.scenarios.pad_scenario`).
+      env_step: a shard-aware adapter (``env_step.supports_shard``), e.g.
+        :func:`repro.envsim.batched.make_env_step`.
+      n_steps: horizon T (static).
+      key: fleet-global PRNG key — replicated, every shard draws the same
+        global stream and row-slices it, so results are invariant to the
+        device count.
+      shard: a :class:`repro.api.shard.ShardSpec`.
+      n_cells: *true* fleet size R (pre-padding; static).
+      reducer: hashable metrics accumulator with ``init(r_local, row0)``,
+        ``update(stats, t_idx, trace_tick)`` and ``finalize(stats,
+        axis_name)`` (psum inside) — see
+        :class:`repro.api.experiment.FleetMetricsReducer`.
+      obs_masked: as in :func:`rollout`.
+
+    Returns:
+      (final router carry, final env state, reduced stats pytree) — the
+      carry and env state gathered along the padded cell axis, the stats
+      replicated.  On a 1-device mesh the carry and env state are
+      bit-identical to the unsharded engine's.
+    """
+    if not getattr(env_step, "supports_shard", False):
+        raise ValueError(
+            "env_step does not advertise supports_shard=True — sharded "
+            "rollouts need a row_block-aware adapter (see "
+            "repro.envsim.batched.make_env_step); wrap or rebuild the "
+            "closure instead of sharding a schedule-blind one")
+    r_pad, _ = shard.padded(n_cells)
+    lead = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    if lead != r_pad:
+        raise ValueError(
+            f"env_state leading dim {lead} != padded fleet size {r_pad} "
+            f"(R={n_cells} on {shard.n_devices()} devices) — build the "
+            "world at true R, then pad (scenarios.pad_scenario + params at "
+            "the padded size)")
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
+    clock_phase = router.clock_phase(router.init_carry(1))
+    return _sharded_impl(env_state, key, router=router, env_step=env_step,
+                         n_steps=n_steps, obs_masked=obs_masked,
+                         clock_phase=clock_phase, spec=shard,
+                         n_cells=n_cells, reducer=reducer)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "env_step", "n_steps",
+                                    "obs_masked", "clock_phase", "spec",
+                                    "n_cells", "reducer"),
+                   donate_argnames=("env_state",))
+def _sharded_impl(env_state,
+                  key: jax.Array,
+                  *,
+                  router: Router,
+                  env_step: Callable,
+                  n_steps: int,
+                  obs_masked: bool,
+                  clock_phase: int | None,
+                  spec,
+                  n_cells: int,
+                  reducer):
+    mesh = spec.build_mesh()
+    r_pad, r_local = spec.padded(n_cells)
+    axis = spec.axis
+
+    def body(est, k):
+        row0 = jax.lax.axis_index(axis) * r_local
+        carry0 = router.init_carry(r_local)
+
+        def env_local(s, w, t, kk):
+            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad))
+
+        stats0 = reducer.init(r_local, row0)
+        rc, est2, _, stats = _rollout_core(
+            carry0, est, env_local, n_steps, k, router=router,
+            obs_masked=obs_masked, clock_phase=clock_phase,
+            rows=(row0, n_cells, r_pad), reducer=reducer, stats0=stats0)
+        return rc, est2, reducer.finalize(stats, axis)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis), P()),
+                     out_specs=(P(axis), P(axis), P()))(env_state, key)

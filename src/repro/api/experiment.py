@@ -13,6 +13,14 @@ event-sim runs.
 
     from repro import api
     print(api.compare(api.table1_grid(n_cells=32, n_windows=600)).markdown())
+
+Mega-fleets: set ``shard="auto"`` (or a :class:`~repro.api.shard.ShardSpec`)
+and the same experiment runs device-sharded over the cell axis with
+O(R/devices) trace memory — ``Experiment(router="least_loaded",
+n_cells=1_000_000, shard="auto").run()`` is the one-liner.  Reduced metrics
+(success %, P50/P95 via fleet-global latency histograms, tier shares,
+obs fraction) replace the per-tick trace; the final env state still comes
+back per-cell.
 """
 from __future__ import annotations
 
@@ -23,11 +31,13 @@ import time
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api import router as router_mod
 from repro.api.aif import AifRouter
-from repro.api.engine import rollout
+from repro.api.engine import rollout, sharded_rollout
+from repro.api.shard import ShardSpec, resolve as resolve_shard
 from repro.core import generative
 from repro.core.topology import Topology, default_topology, get_topology
 from repro.envsim import batched, scenarios
@@ -79,6 +89,83 @@ TABLE1_ROUTERS = ("aif", "uniform", "capacity", "round_robin",
                   "least_loaded", "thompson", "ucb")
 
 
+# ---------------------------------------------------------- sharded reduction
+#: Fleet-global latency histogram: log-spaced bins over 0.1 ms .. 1000 s.
+#: 512 bins over 7 decades is ~3.2 % bin width (±1.6 % quantization on a
+#: reported quantile) — below the run-to-run noise of every Table-1 metric.
+_HIST_BINS = 512
+_HIST_LO_S = 1e-4
+_HIST_HI_S = 1e3
+_HIST_SCALE = _HIST_BINS / (np.log(_HIST_HI_S) - np.log(_HIST_LO_S))
+
+
+def _hist_quantile(hist: np.ndarray, q: float) -> float:
+    """Mass-weighted quantile (seconds) from a log-spaced latency histogram.
+
+    Reports the geometric midpoint of the first bin whose cumulative mass
+    reaches ``q`` — the same completion-weighted convention as
+    :func:`repro.envsim.batched.summarize`, quantized to the bin width.
+    """
+    total = hist.sum()
+    if total <= 0:
+        return 0.0
+    idx = int(np.searchsorted(np.cumsum(hist) / total, q).clip(
+        0, _HIST_BINS - 1))
+    log_lo = np.log(_HIST_LO_S)
+    return float(np.exp(log_lo + (idx + 0.5) / _HIST_SCALE))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetMetricsReducer:
+    """O(cells)-memory per-tick metrics accumulator for the sharded engine.
+
+    Replaces the stacked (T, R, ...) :class:`~repro.core.fleet.FleetTrace`
+    with four small arrays folded into the scan carry — the contract
+    :func:`repro.api.engine.sharded_rollout` expects (``init`` / ``update``
+    / ``finalize``).  Hashable (frozen, ints only) so the engine can treat
+    it as a static jit argument.
+
+    Stats tuple: ``(valid, hist50, hist95, obs_sum)`` where ``valid`` masks
+    this shard's phantom pad rows (cells >= the true R contribute zero mass
+    to every reduction), the histograms accumulate completion mass over
+    mean / P95 tier-latency atoms, and ``obs_sum`` totals the per-cell
+    effective-observation fraction over the steady ticks (t >= 1).
+    """
+
+    n_cells: int
+
+    def init(self, r_local: int, row0):
+        valid = ((row0 + jnp.arange(r_local)) < self.n_cells)
+        return (valid.astype(jnp.float32),
+                jnp.zeros((_HIST_BINS,), jnp.float32),
+                jnp.zeros((_HIST_BINS,), jnp.float32),
+                jnp.zeros((), jnp.float32))
+
+    @staticmethod
+    def _deposit(hist, lat, mass):
+        # log-spaced bin index; lat == 0 maps to -inf, clipped (as a float,
+        # before the int cast) into bin 0 where its zero mass is harmless.
+        idx = jnp.clip(jnp.floor((jnp.log(jnp.maximum(lat, 0.0))
+                                  - np.log(_HIST_LO_S)) * _HIST_SCALE),
+                       0, _HIST_BINS - 1).astype(jnp.int32)
+        return hist.at[idx.ravel()].add(mass.ravel())
+
+    def update(self, stats, t_idx, ys):
+        valid, hist50, hist95, obs_sum = stats
+        mass = ys.env.tier_completed * valid[:, None]
+        hist50 = self._deposit(hist50, ys.env.tier_latency_s, mass)
+        hist95 = self._deposit(hist95, ys.env.tier_p95_s, mass)
+        # obs_frac[0] is the all-valid warm-up mask; count steady ticks only
+        obs_sum = obs_sum + jnp.where(
+            t_idx >= 1, jnp.sum(ys.obs_frac * valid), 0.0)
+        return (valid, hist50, hist95, obs_sum)
+
+    def finalize(self, stats, axis: str):
+        _, hist50, hist95, obs_sum = stats
+        return (jax.lax.psum(hist50, axis), jax.lax.psum(hist95, axis),
+                jax.lax.psum(obs_sum, axis))
+
+
 @dataclasses.dataclass(frozen=True)
 class Experiment:
     """One declarative fleet experiment (hashable, JSON-friendly).
@@ -93,6 +180,12 @@ class Experiment:
       seed: drives the scenario schedules and the rollout PRNG.
       window_s: control-window length in seconds.
       fused / use_pallas: AIF execution path (ignored for baselines).
+      shard: device sharding of the cell axis — None (unsharded engine,
+        full per-tick trace), ``"auto"`` (all local devices) or a
+        :class:`~repro.api.shard.ShardSpec`.  Sharded runs keep trace
+        memory at O(R/devices) by reducing metrics on device; R is padded
+        up to a device multiple with inert phantom cells unless the spec
+        says ``pad="strict"``.  Results are invariant to the device count.
       label: display name (default: the router name).
     """
 
@@ -105,6 +198,7 @@ class Experiment:
     window_s: float = 1.0
     fused: bool = False
     use_pallas: bool = False
+    shard: ShardSpec | str | None = None
     label: str | None = None
 
     def resolve_topology(self) -> Topology:
@@ -158,8 +252,11 @@ class RunResult:
     obs_frac: float               # effective-observation fraction
     wall_s: float
     fluid: batched.FluidResult
-    trace: Any
+    trace: Any                    # None on sharded runs (metrics reduced)
     final_carry: Any
+    per_device_wall_s: float = 0.0  # wall-clock per device (== wall_s: the
+    #                                 device-parallel region spans the run)
+    cells_per_device: int = 0     # R/devices after padding (R if unsharded)
 
     def summary(self) -> dict:
         """JSON-safe metric dict (one Table-1 row)."""
@@ -178,6 +275,8 @@ class RunResult:
             "restarts": round(self.restarts, 1),
             "obs_frac": round(self.obs_frac, 4),
             "wall_s": round(self.wall_s, 2),
+            "per_device_wall_s": round(self.per_device_wall_s, 2),
+            "cells_per_device": self.cells_per_device,
         }
 
 
@@ -203,6 +302,34 @@ def _build_world(topo: Topology, scenario: str, n_cells: int, n_windows: int,
     return scfg, params, env_step
 
 
+@functools.lru_cache(maxsize=8)
+def _build_world_padded(topo: Topology, scenario: str, n_cells: int,
+                        n_windows: int, window_s: float, seed: int,
+                        r_pad: int, n_devices: int):
+    """Sharded variant of :func:`_build_world`: true-R world, padded to the
+    device multiple.
+
+    The scenario is *built* at the true R (its per-cell randomness is a
+    function of R — building at ``r_pad`` would change every real cell's
+    schedule with the device count) and then padded with inert phantom
+    cells (:func:`repro.envsim.scenarios.pad_scenario`); the fluid params
+    and env adapter live at ``r_pad``.  The cache key carries both the
+    padded size and the resolved device count — two shard specs that pad
+    the same R differently (or the same spec under a different
+    ``XLA_FLAGS`` device count) must not share an ``env_step`` closure,
+    or the engine's identity-hashed static jit arg would replay a stale
+    world shape.
+    """
+    scfg = (SimConfig() if topo == default_topology()
+            else sim_config_for(topo))
+    sc = scenarios.build_scenario(scenario, scfg, n_cells, n_windows,
+                                  window_s=window_s, seed=seed)
+    sc = scenarios.pad_scenario(sc, r_pad)
+    params = batched.params_from_config(scfg, r_pad, sc.capacity_scale)
+    env_step = batched.make_scenario_env_step(params, sc, dt=window_s)
+    return scfg, params, env_step
+
+
 def run(experiment: Experiment) -> RunResult:
     """Assemble and execute one experiment on the batched engine.
 
@@ -213,6 +340,9 @@ def run(experiment: Experiment) -> RunResult:
     """
     e = experiment
     topo = e.resolve_topology()
+    spec = resolve_shard(e.shard)
+    if spec is not None:
+        return _run_sharded(e, topo, spec)
     scfg, params, env_step = _build_world(topo, e.scenario, e.n_cells,
                                           e.n_windows, e.window_s, e.seed)
     router = e.resolve_router(scfg)
@@ -253,6 +383,86 @@ def run(experiment: Experiment) -> RunResult:
         fluid=res,
         trace=trace,
         final_carry=carry,
+        per_device_wall_s=wall,
+        cells_per_device=e.n_cells,
+    )
+
+
+def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
+    """Device-sharded execution path of :func:`run`.
+
+    Same world, same router, same PRNG stream — but the rollout runs under
+    ``shard_map`` with on-device metric reduction instead of a stacked
+    trace, so ``RunResult.trace`` is None and P50/P95 are *fleet-global*
+    completion-weighted quantiles (from the reducer's latency histograms)
+    rather than the unsharded path's mean of per-cell quantiles.  The final
+    env state still comes back per-cell, so success %, tier shares, error
+    breakdown and restarts are computed exactly as in the unsharded path —
+    on the true R rows only.
+    """
+    r_pad, r_local = spec.padded(e.n_cells)
+    scfg, params, env_step = _build_world_padded(
+        topo, e.scenario, e.n_cells, e.n_windows, e.window_s, e.seed,
+        r_pad, spec.n_devices())
+    router = e.resolve_router(scfg)
+    if router.n_tiers != topo.n_tiers:
+        raise ValueError(
+            f"router {router.name!r} routes over {router.n_tiers} tiers but "
+            f"topology {topo.tier_names} has {topo.n_tiers}")
+    reducer = FleetMetricsReducer(n_cells=e.n_cells)
+
+    t0 = time.perf_counter()
+    carry, est, stats = sharded_rollout(
+        router, batched.init_fluid_state(params), env_step, e.n_windows,
+        jax.random.key(e.seed), shard=spec, n_cells=e.n_cells,
+        reducer=reducer)
+    jax.block_until_ready(stats)
+    wall = time.perf_counter() - t0
+
+    hist50, hist95, obs_sum = (np.asarray(s) for s in stats)
+    p50_s = _hist_quantile(hist50, 0.50)
+    p95_s = _hist_quantile(hist95, 0.95)
+    # slice the phantom pad rows off the gathered final state, then reuse
+    # the per-cell accounting (quantile columns get the fleet-global values
+    # — per-cell quantiles would need the trace the sharded path avoids)
+    final = jax.tree_util.tree_map(lambda a: np.asarray(a)[:e.n_cells], est)
+    n_req = np.maximum(final.n_requests, _EPS)
+    n_success = np.maximum(final.n_success, _EPS)
+    res = batched.FluidResult(
+        n_requests=final.n_requests,
+        n_success=final.n_success,
+        success_rate=final.n_success / n_req,
+        error_breakdown={
+            "timeout": final.err_timeout,
+            "overflow": final.err_overflow,
+            "refused": final.err_refused,
+            "restart": final.err_restart,
+        },
+        p95_ms=np.full(e.n_cells, 1000.0 * p95_s),
+        p50_ms=np.full(e.n_cells, 1000.0 * p50_s),
+        tier_requests=final.tier_requests,
+        tier_success=final.tier_success,
+        n_restarts=final.n_restarts,
+    )
+    succ = 100.0 * res.success_rate
+    steady = max(e.n_windows - 1, 1) * e.n_cells
+    return RunResult(
+        experiment=e,
+        name=e.name,
+        success_pct=float(succ.mean()),
+        success_std=float(succ.std()),
+        p50_ms=float(1000.0 * p50_s),
+        p95_ms=float(1000.0 * p95_s),
+        tier_share=(res.tier_success / n_success[:, None]).mean(0),
+        routed_share=(res.tier_requests / n_req[:, None]).mean(0),
+        restarts=float(res.n_restarts.sum()),
+        obs_frac=(float(obs_sum) / steady if e.n_windows > 1 else 1.0),
+        wall_s=wall,
+        fluid=res,
+        trace=None,
+        final_carry=carry,
+        per_device_wall_s=wall,
+        cells_per_device=r_local,
     )
 
 

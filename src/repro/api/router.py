@@ -115,7 +115,15 @@ class Router:
 
     # --------------------------------------------------------- transitions
     def init_carry(self, r: int) -> Any:
-        """Router state pytree with leading cell axis R (deterministic)."""
+        """Router state pytree with leading cell axis R (deterministic).
+
+        Shard contract: the sharded engine
+        (:func:`repro.api.engine.sharded_rollout`) calls this *inside* each
+        mesh shard at R/devices cells, so the returned state must be a pure
+        per-cell function of ``r`` — zeros, broadcast priors, per-cell
+        counters — with no cross-cell coupling and no PRNG draws whose
+        values depend on ``r``.  Every in-repo router satisfies this.
+        """
         return ()
 
     def step(self, carry, obs: RouterObs, obs_mask, keys):

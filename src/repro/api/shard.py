@@ -1,0 +1,124 @@
+"""Device sharding of the fleet's cell axis: :class:`ShardSpec`.
+
+The closed-loop engine scans a fleet of R independent service cells — the
+one axis of the whole program with no cross-element coupling until the final
+metric reduction.  :class:`ShardSpec` names how that axis maps onto the
+local device mesh: how many devices, the mesh axis name, and what happens
+when R is not divisible by the device count.  It is a frozen (hashable)
+dataclass so the engine can treat it as a static jit argument, exactly like
+the router spec.
+
+The actual mesh comes from :func:`repro.launch.mesh.make_cell_mesh` and the
+per-leaf :class:`~jax.sharding.PartitionSpec`/:class:`~jax.sharding.NamedSharding`
+trees from :mod:`repro.sharding`'s rule resolver — the fleet path is the
+first real consumer of both.
+
+Padding rule (``pad="pad"``, the default): R is rounded up to the next
+multiple of the device count; the padded phantom cells receive zero traffic,
+inert restart draws, and are excluded from every reduction, so their only
+cost is ``< devices`` cell-slots of wasted compute.  ``pad="strict"`` raises
+instead, for callers that want the division to be exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro import sharding as sharding_mod
+from repro.launch.mesh import make_cell_mesh
+
+#: Logical-axis name of the fleet's cell dimension (see
+#: :data:`repro.sharding.RULE_PROFILES`-style rule dicts built per spec).
+CELLS = "cells"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How the cell axis R maps onto local devices (hashable static spec).
+
+    Args:
+      devices: number of local devices to shard over; None = all of them
+        (``jax.local_device_count()`` at run time).
+      axis: mesh-axis name carrying the cell dimension.
+      pad: ``"pad"`` rounds R up to a device multiple with inert phantom
+        cells; ``"strict"`` raises when R is not divisible.
+    """
+
+    devices: int | None = None
+    axis: str = CELLS
+    pad: str = "pad"
+
+    def __post_init__(self):
+        if self.pad not in ("pad", "strict"):
+            raise ValueError(
+                f"pad policy must be 'pad' or 'strict', got {self.pad!r}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+
+    # ------------------------------------------------------------ resolution
+    def n_devices(self) -> int:
+        """Resolved device count (queries jax when ``devices`` is None)."""
+        n = (jax.local_device_count() if self.devices is None
+             else self.devices)
+        avail = jax.local_device_count()
+        if n > avail:
+            raise ValueError(
+                f"ShardSpec wants {n} devices but only {avail} are local — "
+                "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n} for a virtual CPU mesh")
+        return n
+
+    def padded(self, n_cells: int) -> tuple[int, int]:
+        """(R padded to a device multiple, cells per device).
+
+        ``"strict"`` pad policy raises on indivisible R instead of padding.
+        """
+        d = self.n_devices()
+        rem = n_cells % d
+        if rem and self.pad == "strict":
+            raise ValueError(
+                f"R={n_cells} is not divisible by {d} devices and the shard "
+                "spec is strict; use pad='pad' (default) or pick R as a "
+                "device multiple")
+        r_pad = n_cells + (d - rem if rem else 0)
+        return r_pad, r_pad // d
+
+    def build_mesh(self):
+        """1-D cell-axis mesh over the resolved local devices."""
+        return make_cell_mesh(self.n_devices(), axis=self.axis)
+
+    # ----------------------------------------------------- partition specs
+    def leaf_spec(self, leaf, mesh) -> jax.sharding.PartitionSpec:
+        """PartitionSpec for one pytree leaf: leading cell axis sharded.
+
+        Resolved through :func:`repro.sharding.resolve_spec` with a
+        single-rule profile mapping the logical ``cells`` name onto this
+        spec's mesh axis, so the divisibility safety valve applies (a leaf
+        whose leading dim cannot split auto-replicates instead of failing
+        to lower — scalars and () leaves are replicated).
+        """
+        shape = tuple(getattr(leaf, "shape", ()))
+        logical = (CELLS,) + (None,) * (len(shape) - 1) if shape else ()
+        rules = (sharding_mod.RULE_PROFILES["fleet"] if self.axis == CELLS
+                 else {CELLS: self.axis})
+        return sharding_mod.resolve_spec(shape, logical, rules, mesh)
+
+    def tree_specs(self, tree, mesh):
+        """Pytree of PartitionSpecs: every leaf's leading axis on the mesh."""
+        return jax.tree_util.tree_map(
+            lambda leaf: self.leaf_spec(leaf, mesh), tree)
+
+
+def resolve(shard) -> ShardSpec | None:
+    """Normalize an ``Experiment.shard``-style argument.
+
+    None stays None (unsharded); ``"auto"`` means all local devices; a
+    ready :class:`ShardSpec` passes through.
+    """
+    if shard is None or isinstance(shard, ShardSpec):
+        return shard
+    if shard == "auto":
+        return ShardSpec()
+    raise ValueError(
+        f"shard must be None, 'auto' or a ShardSpec, got {shard!r}")

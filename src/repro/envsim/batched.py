@@ -145,6 +145,53 @@ class FluidResult(NamedTuple):
 
 
 # --------------------------------------------------------------------- build
+def pad_cells(arr: np.ndarray | jnp.ndarray | None, n_pad: int,
+              fill: float, cell_axis: int = 0):
+    """Pad an array's cell axis up to ``n_pad`` rows with a constant fill.
+
+    Device sharding (:class:`repro.api.shard.ShardSpec`) rounds R up to a
+    device multiple; the phantom rows get neutral schedule values (zero
+    arrivals, zero hazard, all-valid telemetry) so they never influence a
+    reduction.  None passes through (absent optional schedules).
+    """
+    if arr is None:
+        return None
+    arr = np.asarray(arr)
+    pad = n_pad - arr.shape[cell_axis]
+    if pad < 0:
+        raise ValueError(
+            f"cell axis already has {arr.shape[cell_axis]} rows > n_pad="
+            f"{n_pad}")
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[cell_axis] = (0, pad)
+    return np.pad(arr, widths, constant_values=fill)
+
+
+def _row_block_uniform(key: jax.Array, n_true: int, n_pad: int,
+                       row_start: jnp.ndarray, n_local: int,
+                       trailing: tuple[int, ...]) -> jnp.ndarray:
+    """This shard's row block of a fleet-global uniform draw.
+
+    JAX random bits are a function of the *requested shape* — they are not
+    prefix-stable across shapes — so device-count-invariant randomness must
+    be drawn at the fixed true-R global shape on every shard and row-sliced.
+    Phantom pad rows get 1.0, which no restart probability ever reaches, so
+    padded cells never restart (inert by construction, not by masking).
+    """
+    full = jax.random.uniform(key, (n_true,) + trailing)
+    if n_pad > n_true:
+        full = jnp.concatenate(
+            [full, jnp.ones((n_pad - n_true,) + trailing, full.dtype)])
+    return jax.lax.dynamic_slice_in_dim(full, row_start, n_local)
+
+
+def _slice_rows(arr, row_start: jnp.ndarray, n_local: int):
+    """Row block [row_start, row_start + n_local) of a cell-leading array."""
+    return jax.lax.dynamic_slice_in_dim(arr, row_start, n_local)
+
+
 def params_from_config(cfg: SimConfig,
                        n_cells: int,
                        capacity_scale: np.ndarray | None = None) -> FluidParams:
@@ -246,7 +293,8 @@ def fluid_window_step(params: FluidParams,
                       dt: float = 1.0,
                       scrape_every: int = 10,
                       obs_valid: jnp.ndarray | None = None,
-                      restart_blackout: bool = False
+                      restart_blackout: bool = False,
+                      row_block: tuple | None = None
                       ) -> tuple[FluidState, WindowInfo]:
     """Advance every cell one control window under the given routing weights.
 
@@ -264,7 +312,24 @@ def fluid_window_step(params: FluidParams,
         ``WindowInfo.obs_mask``.
       restart_blackout: statically couple telemetry to pod liveness — a cell
         with any tier down publishes nothing (every modality masked).
+      row_block: shard mode — ``(row_start, n_true, n_pad)`` with
+        ``row_start`` the (traced) first global cell row of this shard and
+        ``n_true``/``n_pad`` the static true / padded fleet sizes.  The
+        state carries only this shard's rows; params, schedules and the
+        restart draws are row-sliced here, with the draws generated at the
+        device-count-invariant (n_true, K) global shape so every device
+        count reproduces the unsharded engine's randomness exactly.
     """
+    if row_block is not None:
+        row_start, n_true, n_pad = row_block
+        r_local = state.backlog.shape[0]
+        params = jax.tree_util.tree_map(
+            lambda a: _slice_rows(a, row_start, r_local) if a.ndim else a,
+            params)
+        arrival_rate = _slice_rows(arrival_rate, row_start, r_local)
+        hazard_scale = _slice_rows(hazard_scale, row_start, r_local)
+        if obs_valid is not None:
+            obs_valid = _slice_rows(obs_valid, row_start, r_local)
     w = jnp.maximum(weights, 0.0)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
 
@@ -315,11 +380,19 @@ def fluid_window_step(params: FluidParams,
         / jnp.maximum(cap_rate, _EPS))
     p_restart = 1.0 - jnp.exp(-hazard * dt)
     k_fire, k_dur = jax.random.split(key)
-    u = jax.random.uniform(k_fire, backlog1.shape)
+    if row_block is None:
+        u = jax.random.uniform(k_fire, backlog1.shape)
+        dur_u = jax.random.uniform(k_dur, backlog1.shape)
+    else:
+        trailing = backlog1.shape[1:]
+        u = _row_block_uniform(k_fire, n_true, n_pad, row_start,
+                               backlog1.shape[0], trailing)
+        dur_u = _row_block_uniform(k_dur, n_true, n_pad, row_start,
+                                   backlog1.shape[0], trailing)
     restarted = (up & (u < p_restart)).astype(jnp.float32)
     killed = backlog1 * restarted                     # in-system mass dies
     backlog2 = backlog1 * (1.0 - restarted)
-    dur = params.restart_min_s + jax.random.uniform(k_dur, backlog1.shape) * (
+    dur = params.restart_min_s + dur_u * (
         params.restart_max_s - params.restart_min_s)
     down_left = jnp.maximum(state.down_left - dt, 0.0)
     down_left = jnp.where(restarted > 0, dur, down_left)
@@ -471,21 +544,30 @@ def make_env_step(params: FluidParams,
     ``emits_mask`` attribute tells mask-aware consumers
     (:func:`repro.core.fleet.fleet_rollout`) statically whether degradation
     is configured — without it they compile the exact pre-mask program.
+
+    Device sharding: the closure accepts an optional ``row_block`` (see
+    :func:`fluid_window_step`) and advertises ``supports_shard = True`` so
+    the sharded engine (:func:`repro.api.engine.sharded_rollout`) can hand
+    each device its row block of the closed-over schedules; wrapped custom
+    closures without the attribute are rejected there with a clear error
+    instead of a shape mismatch deep inside ``shard_map``.
     """
     arrival_rate = jnp.asarray(arrival_rate)
     hazard_scale = jnp.asarray(hazard_scale)
     if obs_valid is not None:
         obs_valid = jnp.asarray(obs_valid, jnp.float32)
 
-    def env_step(env_state, weights, t_idx, key):
+    def env_step(env_state, weights, t_idx, key, row_block=None):
         ov = None if obs_valid is None else obs_valid[t_idx]
         return fluid_window_step(params, env_state, weights,
                                  arrival_rate[t_idx], hazard_scale[t_idx],
                                  key, t_idx, dt=dt, scrape_every=scrape_every,
                                  obs_valid=ov,
-                                 restart_blackout=restart_blackout)
+                                 restart_blackout=restart_blackout,
+                                 row_block=row_block)
 
     env_step.emits_mask = obs_valid is not None or restart_blackout
+    env_step.supports_shard = True
     return env_step
 
 

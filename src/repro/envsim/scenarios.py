@@ -41,7 +41,7 @@ from typing import Callable, NamedTuple
 
 import numpy as np
 
-from repro.envsim.batched import N_OBS_MODALITIES
+from repro.envsim.batched import N_OBS_MODALITIES, pad_cells
 from repro.envsim.config import SimConfig
 
 
@@ -345,6 +345,26 @@ SCENARIOS: dict[str, Callable[..., ScenarioBatch]] = {
     "scrape-blackout": _scrape_blackout,
     "stale-cascade": _stale_cascade,
 }
+
+
+def pad_scenario(sc: ScenarioBatch, n_pad: int) -> ScenarioBatch:
+    """Extend a scenario's cell axis to ``n_pad`` cells with phantom rows.
+
+    Device sharding rounds R up to a device multiple
+    (:meth:`repro.api.shard.ShardSpec.padded`); the phantom cells receive
+    zero arrivals, zero hazard, unit capacity and all-valid telemetry, so
+    their dynamics are quiescent and every fleet reduction excludes them by
+    construction.  The real cells' schedules are byte-identical to the
+    unpadded build — scenarios must always be *built* at the true R (the
+    builders' per-cell randomness depends on R) and padded afterwards.
+    """
+    return ScenarioBatch(
+        arrival_rate=pad_cells(sc.arrival_rate, n_pad, 0.0, cell_axis=1),
+        hazard_scale=pad_cells(sc.hazard_scale, n_pad, 0.0, cell_axis=1),
+        capacity_scale=pad_cells(sc.capacity_scale, n_pad, 1.0, cell_axis=0),
+        obs_valid=pad_cells(sc.obs_valid, n_pad, 1.0, cell_axis=1),
+        restart_blackout=sc.restart_blackout,
+    )
 
 
 def build_scenario(name: str, cfg: SimConfig, n_cells: int, n_windows: int,

@@ -36,3 +36,23 @@ def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over whatever devices exist (tests on 1-8 CPU devices)."""
     devices = jax.devices()[: data * model]
     return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))
+
+
+def make_cell_mesh(n_devices: int | None = None, axis: str = "cells") -> Mesh:
+    """1-D mesh carrying the fleet's cell axis (closed-loop engine sharding).
+
+    Unlike the 2-D serving meshes above, the fleet program has exactly one
+    parallel dimension — R independent service cells — so the mesh is a flat
+    device list under a single named axis.  ``n_devices=None`` takes every
+    local device (the ``shard="auto"`` default of
+    :class:`repro.api.shard.ShardSpec`); CI builds a virtual 4-way CPU mesh
+    via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+    devices = jax.local_devices()
+    n = len(devices) if n_devices is None else n_devices
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for a {n}-way cell mesh, have {len(devices)} "
+            "— run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n}")
+    return Mesh(np.asarray(devices[:n]), (axis,))

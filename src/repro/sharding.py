@@ -77,6 +77,11 @@ RULE_PROFILES["train_seqshard"] = dict(RULE_PROFILES["train"],
 # dispatch-buffer resharding added collectives; see §Perf B2).  Kept opt-in.
 RULE_PROFILES["train_capshard"] = dict(RULE_PROFILES["train"],
                                        act_capacity="data")
+# fleet: the closed-loop engine's 1-D cell mesh — every fleet pytree leaf
+# leads with the cell axis R and everything else replicates.  Consumed by
+# repro.api.shard.ShardSpec (which substitutes its own axis name when the
+# spec renames the mesh axis).
+RULE_PROFILES["fleet"] = {"cells": "cells"}
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
