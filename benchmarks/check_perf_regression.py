@@ -18,6 +18,20 @@ comparison.  A slower runner then shifts *all* rows together and passes,
 while a fleet-loop regression shows up against the same-run anchor.  Pass
 ``--no-calibrate`` for raw absolute comparison.
 
+Two structural checks ride on the *current* run alone (machine-invariant
+ratios, no baseline needed):
+
+* megakernel speedup floor — whenever the run measured ``fleet_mega`` and
+  ``fleet_fused`` at the same (R, T, scenario), the megakernel must hold
+  at least ``--mega-speedup-floor`` × (default 10, the PR-7 acceptance
+  bar) over the per-tick fused loop; dropping below fails the gate.
+* sharded weak-scaling — per-device throughput across the
+  ``fleet_sharded`` device curve; decaying below
+  ``--shard-efficiency-floor`` (default 0.7) of the 1-device rate emits a
+  ``::warning`` annotation (not a failure: on a single-core host the
+  devices time-share the core, so the decay measures sharding overhead,
+  not a true scaling loss — the warning keeps the number visible).
+
     python benchmarks/check_perf_regression.py \
         --baseline /tmp/BENCH_fleet.baseline.json --current BENCH_fleet.json
 """
@@ -46,6 +60,61 @@ def _entries(path: str, drop_carried: bool = False) -> dict[tuple, dict]:
     return out
 
 
+def check_mega_speedup(cur: dict[tuple, dict], floor: float) -> bool:
+    """Megakernel acceptance gate on the current run's own rows.
+
+    Same-run fused/mega pairs share the machine, so the ratio needs no
+    calibration.  Returns True when any pair sits below ``floor``.
+    """
+    failed = False
+    fused = {(r, t, s): e for (name, r, t, s), e in cur.items()
+             if name == "fleet_fused"}
+    for (name, r, t, s), e in sorted(cur.items(), key=str):
+        if name != "fleet_mega" or (r, t, s) not in fused:
+            continue
+        base = fused[(r, t, s)]["cell_windows_per_s"]
+        speedup = e["cell_windows_per_s"] / base if base > 0 else 0.0
+        ok = speedup >= floor
+        print(f"{'OK' if ok else 'REGRESSION':>10}  mega-speedup "
+              f"r={r:<5} t={t:<5} scenario={s or '-':<16} "
+              f"fused={base:>12.1f} mega={e['cell_windows_per_s']:>12.1f} "
+              f"({speedup:.1f}x, floor {floor:.1f}x)")
+        if not ok:
+            failed = True
+    return failed
+
+
+def check_shard_scaling(cur: dict[tuple, dict], floor: float) -> None:
+    """Warn when the weak-scaling curve's per-device throughput decays.
+
+    The committed curve (1018 -> 640 cw/s per device over 1 -> 4 virtual
+    devices on one core) decays to 0.63 efficiency — below the default
+    floor, so the annotation fires on every CI run until the curve is
+    measured on genuinely parallel hardware.  That is deliberate: the
+    number should stay in view, but a single-core host cannot *fail* on it.
+    """
+    curve = sorted((e["config"]["devices"], e["cell_windows_per_s"])
+                   for e in cur.values()
+                   if e["name"] == "fleet_sharded"
+                   and e.get("config", {}).get("devices"))
+    if len(curve) < 2:
+        return
+    d0, c0 = curve[0]
+    per0 = c0 / d0
+    for d, c in curve[1:]:
+        eff = (c / d) / per0 if per0 > 0 else 0.0
+        if eff < floor:
+            print(f"{'WARN':>10}  fleet_sharded weak-scaling: "
+                  f"{per0:.1f} -> {c / d:.1f} cw/s per device over "
+                  f"{d0} -> {d} devices (efficiency {eff:.2f} < "
+                  f"floor {floor:.2f})")
+            print(f"::warning::fleet_sharded per-device throughput decays "
+                  f"to {eff:.2f} efficiency across {d0} -> {d} devices "
+                  f"({per0:.1f} -> {c / d:.1f} cw/s); expected on a "
+                  f"time-shared single-core host, a real scaling loss on "
+                  f"parallel hardware")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True,
@@ -57,6 +126,12 @@ def main() -> int:
                     help="max allowed fractional cell-windows/s drop")
     ap.add_argument("--no-calibrate", action="store_true",
                     help="skip env-row machine-speed calibration")
+    ap.add_argument("--mega-speedup-floor", type=float, default=10.0,
+                    help="min fleet_mega / fleet_fused throughput ratio "
+                         "(same-run pair; 0 disables)")
+    ap.add_argument("--shard-efficiency-floor", type=float, default=0.70,
+                    help="per-device fleet_sharded efficiency below which "
+                         "a weak-scaling warning is annotated (0 disables)")
     args = ap.parse_args()
 
     # Carried rows are stale copies merged forward by fleet_bench, possibly
@@ -65,11 +140,19 @@ def main() -> int:
     # baseline row calibrated by a fresh anchor would gate noise).
     base = _entries(args.baseline, drop_carried=True)
     cur = _entries(args.current, drop_carried=True)
+
+    # structural checks on the current run's own rows (machine-invariant
+    # ratios — they run even when no baseline entry matches)
+    mega_failed = (args.mega_speedup_floor > 0
+                   and check_mega_speedup(cur, args.mega_speedup_floor))
+    if args.shard_efficiency_floor > 0:
+        check_shard_scaling(cur, args.shard_efficiency_floor)
+
     matched = sorted(set(base) & set(cur))
     if not matched:
         print("no matching entries between baseline and current run; "
               "nothing to gate")
-        return 0
+        return 1 if mega_failed else 0
 
     scale = 1.0
     anchor = None
@@ -110,10 +193,15 @@ def main() -> int:
               f"scenario={key[3] or '-'} (no baseline entry; not gated)")
         print(f"::warning::new bench row {key} has no baseline entry; "
               f"commit the regenerated BENCH_fleet.json to gate it")
-    if failed:
-        print(f"\nFAIL: cell-windows/s dropped more than "
-              f"{100 * args.threshold:.0f}% on at least one entry "
-              f"(after machine calibration)")
+    if failed or mega_failed:
+        if failed:
+            print(f"\nFAIL: cell-windows/s dropped more than "
+                  f"{100 * args.threshold:.0f}% on at least one entry "
+                  f"(after machine calibration)")
+        if mega_failed:
+            print(f"\nFAIL: fleet_mega fell below the "
+                  f"{args.mega_speedup_floor:.1f}x speedup floor over "
+                  f"fleet_fused")
         return 1
     print("\nperf smoke OK")
     return 0

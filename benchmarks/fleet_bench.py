@@ -14,6 +14,12 @@ Workloads, all single jitted ``lax.scan`` programs (no Python in the loop):
                      (``--use-pallas``; interpret-mode emulation off-TPU, so
                      off by default — it benchmarks the emulator, not the
                      kernel),
+* ``fleet_mega``     — the whole-window megakernel engine path (one fused
+                     launch per slow period: belief → EFE → sampling →
+                     dwell → env window, factored transition slots — see
+                     ``repro.core.mega``); the XLA oracle twin of the
+                     Pallas megakernel, so the row tracks the production
+                     CPU path and the kernel's algorithm at once,
 * ``api_compare``    — the declarative ``repro.api.compare`` surface
                      end-to-end (AIF + uniform pair, config assembly and
                      host-side summary included), guarding the public
@@ -33,6 +39,13 @@ it via ``benchmarks/check_perf_regression.py``.
 ``--scenario`` selects the scenario driving the closed-loop fleet rows
 (default ``paper-burst``); a ``flaky-telemetry`` fused row is always
 recorded as well, tracking the masked partial-observability path's cost.
+
+``--roofline`` additionally lowers the env, fused and megakernel rollouts,
+prices their optimized HLO against the fixed accelerator model of
+``repro.launch.roofline`` (197 TFLOP/s bf16, 819 GB/s HBM) and records
+attained-vs-peak rows under the ``"roofline"`` key of ``BENCH_fleet.json``
+— the arithmetic-intensity trajectory of the kernel lineage, independent
+of the host the bench ran on.
 
 Reports compile time and steady-state throughput per configuration as CSV on
 stdout; ``--json out.json`` additionally writes the raw rows for the CI
@@ -132,6 +145,35 @@ def bench_fleet(r: int, t: int, fused: bool, use_pallas: bool = False,
     }
 
 
+def bench_mega(r: int, t: int, use_pallas: bool = False,
+               scenario: str = "paper-burst") -> dict:
+    """Whole-window megakernel closed loop at (R, T): one launch per slow
+    period, env fused into the window.  Always a fresh fleet (mega carries
+    own their clock), so ``carry=None`` and only the env state is rebuilt
+    per iteration."""
+    sc_cfg = SimConfig()
+    sc = scenarios.build_scenario(scenario, sc_cfg, r, t)
+    params = batched.params_from_config(sc_cfg, r, sc.capacity_scale)
+    env_step = batched.make_scenario_env_step(params, sc)
+    key = jax.random.key(0)
+    router = api.AifRouter(cfg=AifConfig(), fused=True, mega=True,
+                           use_pallas=use_pallas)
+
+    def make_args():
+        return (batched.init_fluid_state(params),)
+
+    compile_s, run_s = _bench(
+        make_args,
+        lambda est: api.rollout(router, None, est, env_step, t, key))
+    name = "fleet_mega_pallas" if use_pallas else "fleet_mega"
+    return {
+        "workload": name, "r": r, "t": t, "scenario": scenario,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
 def bench_api_compare(r: int, t: int, scenario: str = "paper-burst") -> dict:
     """The declarative comparison surface end-to-end: ``repro.api.compare``
     over an AIF + uniform pair, including the config assembly and host-side
@@ -220,6 +262,100 @@ def _sharded_roofline(r_local: int, t: int, devices: int,
           f"{coll.link_bytes / 1e3:.1f} kB link", flush=True)
 
 
+def _lowered_workloads(scenario: str = "paper-burst") -> dict[str, tuple]:
+    """(compiled, r, t) per kernel-lineage workload, for roofline pricing.
+
+    Lowers the same jitted programs the bench rows time — the env engine
+    alone, the fused per-tick closed loop, and the whole-window megakernel
+    — at the CI comparison shapes, and compiles without running.
+    """
+    from repro.api import engine as engine_mod
+    from repro.core import fleet as fleet_mod
+
+    out: dict[str, tuple] = {}
+    # env: the batched fluid engine alone at the acceptance shape
+    r, t = 256, 600
+    cfg = SimConfig()
+    sc = scenarios.build_scenario(scenario, cfg, r, t)
+    params = batched.params_from_config(cfg, r, sc.capacity_scale)
+    w = jnp.asarray([0.15, 0.23, 0.62], jnp.float32)
+    env_fn = jax.jit(lambda p, a, h, ww, k: batched.run_fluid(p, a, h, ww, k))
+    out["env"] = (env_fn.lower(params, jnp.asarray(sc.arrival_rate),
+                               jnp.asarray(sc.hazard_scale), w,
+                               jax.random.key(0)).compile(), r, t)
+    # closed loops at the apples-to-apples comparison shape
+    r, t = 64, 120
+    cfg = SimConfig()
+    sc = scenarios.build_scenario(scenario, cfg, r, t)
+    params = batched.params_from_config(cfg, r, sc.capacity_scale)
+    env_step = batched.make_scenario_env_step(params, sc)
+    key = jax.random.key(0)
+    acfg = AifConfig()
+    fused = api.AifRouter(cfg=acfg, fused=True)
+    out["fleet_fused"] = (engine_mod._rollout_impl.lower(
+        fleet_mod.init_fleet_state(acfg, r), batched.init_fluid_state(params),
+        env_step, t, key, router=fused).compile(), r, t)
+    mega = api.AifRouter(cfg=acfg, fused=True, mega=True)
+    fl = env_step.fluid
+    out["fleet_mega"] = (engine_mod._mega_impl.lower(
+        batched.init_fluid_state(params), fl.params, fl.arrival_rate,
+        fl.hazard_scale, fl.obs_valid, key, router=mega, n_steps=t,
+        obs_masked=False, dt=fl.dt, scrape_every=fl.scrape_every,
+        restart_blackout=fl.restart_blackout).compile(), r, t)
+    return out
+
+
+def run_roofline(measured: list[dict],
+                 scenario: str = "paper-burst") -> list[dict]:
+    """Attained-vs-peak rows per kernel (env / fleet_fused / fleet_mega).
+
+    Prices each compiled rollout's optimized HLO against the fixed
+    accelerator model (197 TFLOP/s bf16, 819 GB/s HBM — see
+    ``repro.launch.roofline``): per-rollout FLOPs, HBM traffic, arithmetic
+    intensity and the modeled compute/memory bound.  When this bench run
+    measured the matching throughput row, the attained FLOP/s and the
+    fraction of the modeled roofline are attached — on a CPU host that
+    fraction is honest about how far the XLA path sits from the model
+    hardware; on a TPU it becomes the kernel's efficiency gate.
+    """
+    from repro.launch import hlo_cost
+    from repro.launch import roofline as rl
+
+    wall = {(row["workload"], row["r"], row["t"], row.get("scenario")):
+            row["run_s"] for row in measured}
+    rows = []
+    for name, (compiled, r, t) in _lowered_workloads(scenario).items():
+        st = hlo_cost.analyze_text(compiled.as_text())
+        compute_s = st.flops / rl.PEAK_FLOPS
+        memory_s = st.hbm_bytes / rl.HBM_BW
+        bound_s = max(compute_s, memory_s)
+        row = {
+            "name": f"roofline_{name}",
+            "config": {"r": r, "t": t, "scenario": scenario},
+            "flops": st.flops,
+            "hbm_bytes": st.hbm_bytes,
+            "intensity_flop_per_byte": round(
+                st.flops / max(st.hbm_bytes, 1.0), 3),
+            "bound": "compute" if compute_s >= memory_s else "memory",
+            "model_bound_s": bound_s,
+            "model_cell_windows_per_s": round(r * t / max(bound_s, 1e-12), 1),
+        }
+        run_s = wall.get((name, r, t, scenario))
+        if run_s:
+            row["measured_wall_s"] = run_s
+            row["attained_gflops"] = round(st.flops / run_s / 1e9, 3)
+            row["pct_of_model_roofline"] = round(100 * bound_s / run_s, 4)
+        rows.append(row)
+        print(f"roofline[{name} r={r} t={t}]: "
+              f"{st.flops / 1e9:.2f} GFLOP, {st.hbm_bytes / 1e9:.2f} GB HBM, "
+              f"intensity {row['intensity_flop_per_byte']:.2f} FLOP/B, "
+              f"{row['bound']}-bound {bound_s * 1e3:.3f} ms on model HW"
+              + (f", attained {row['attained_gflops']:.1f} GFLOP/s "
+                 f"({row['pct_of_model_roofline']:.3f}% of model roofline)"
+                 if run_s else ""), flush=True)
+    return rows
+
+
 def run(quick: bool = False, use_pallas: bool = False,
         scenario: str = "paper-burst") -> list[dict]:
     rows = []
@@ -237,6 +373,14 @@ def run(quick: bool = False, use_pallas: bool = False,
     for r, t, fused in fleet_grid:
         rows.append(bench_fleet(r, t, fused, scenario=scenario))
         _print_row(rows[-1])
+    # whole-window megakernel path: the (64, 120) row pairs with the fused
+    # row above for the speedup gate; the full run adds the paper-burst
+    # acceptance shape (R=64 x T=120 is also the --quick row, so quick-mode
+    # CI gates the megakernel's trajectory too).
+    mega_grid = [(64, 120)] if quick else [(64, 120), (256, 600)]
+    for r, t in mega_grid:
+        rows.append(bench_mega(r, t, scenario=scenario))
+        _print_row(rows[-1])
     # masked partial-observability path (always recorded: tracks the cost of
     # the mask-aware belief/EFE/learning plumbing vs the clean rows above)
     if scenario != "flaky-telemetry":
@@ -249,6 +393,8 @@ def run(quick: bool = False, use_pallas: bool = False,
     if use_pallas:
         rows.append(bench_fleet(16, 60, fused=True, use_pallas=True,
                                 scenario=scenario))
+        _print_row(rows[-1])
+        rows.append(bench_mega(4, 20, use_pallas=True, scenario=scenario))
         _print_row(rows[-1])
     return rows
 
@@ -285,7 +431,8 @@ def _print_row(row: dict) -> None:
           f"{row['cell_windows_per_s']}cw/s", flush=True)
 
 
-def _bench_summary(rows: list[dict], existing: dict | None = None) -> dict:
+def _bench_summary(rows: list[dict], existing: dict | None = None,
+                   roofline_rows: list[dict] | None = None) -> dict:
     """Repo-root BENCH_fleet.json: one entry per (workload path, R × T,
     scenario) configuration, so the CI regression gate can match quick-mode
     runs against the committed trajectory entry-by-entry.
@@ -318,11 +465,17 @@ def _bench_summary(rows: list[dict], existing: dict | None = None) -> dict:
             "wall_s": row["run_s"],
         }
         merged[key(entry)] = entry
-    return {
+    out = {
         "benchmark": "fleet_bench",
         "device": str(jax.devices()[0]),
         "entries": list(merged.values()),
     }
+    # roofline rows are HLO-derived (machine-independent): a run without
+    # --roofline carries the committed section forward unchanged.
+    roof = roofline_rows or (existing or {}).get("roofline")
+    if roof:
+        out["roofline"] = roof
+    return out
 
 
 def main() -> None:
@@ -337,6 +490,10 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true",
                     help="also benchmark the fused Pallas kernel path "
                          "(interpret-mode emulation off-TPU)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="price the env / fused / megakernel rollouts "
+                         "against the fixed accelerator model and record "
+                         "attained-vs-peak rows in BENCH_fleet.json")
     ap.add_argument("--shard", action="store_true",
                     help="device-sharded weak-scaling curve (fleet_sharded "
                          "rows) instead of the standard grid; use "
@@ -349,6 +506,8 @@ def main() -> None:
             if args.shard else
             run(quick=args.quick, use_pallas=args.use_pallas,
                 scenario=args.scenario))
+    roofline_rows = (run_roofline(rows, scenario=args.scenario)
+                     if args.roofline else None)
     if args.json:
         bench_path = pathlib.Path(__file__).resolve().parent.parent / (
             "BENCH_fleet.json")
@@ -365,7 +524,8 @@ def main() -> None:
                        "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
         with open(bench_path, "w") as f:
-            json.dump(_bench_summary(rows, existing), f, indent=2)
+            json.dump(_bench_summary(rows, existing, roofline_rows),
+                      f, indent=2)
         print(f"wrote {bench_path}")
 
 

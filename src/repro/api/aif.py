@@ -36,6 +36,16 @@ class AifRouter(Router):
       fused: run belief update + EFE through the fused fleet kernel.
       use_pallas: with ``fused``, dispatch the Pallas TPU kernel rather
         than the XLA oracle.
+      mega: run the whole-window megakernel engine path — the transition
+        model stays in factored (slot) form, W fast ticks fuse into one
+        launch per slow period and the rollout carry becomes a
+        :class:`repro.core.mega.MegaFleetState` (densify with
+        :func:`repro.core.mega.to_agent_state`).  With ``use_pallas`` the
+        window dispatches the Pallas megakernel instead of its XLA oracle.
+      mega_slot_dtype: storage dtype of the (R, J, S) transition slots on
+        the mega path — "float32" (default) or "bfloat16" (halves slot
+        memory traffic; accumulation stays float32, drift is bounded by
+        the mixed-precision test).
     """
 
     cfg: generative.AifConfig = dataclasses.field(
@@ -45,6 +55,8 @@ class AifRouter(Router):
     util_period: int = 10
     fused: bool = False
     use_pallas: bool = False
+    mega: bool = False
+    mega_slot_dtype: str = "float32"
 
     name = "aif"
 
@@ -71,6 +83,22 @@ class AifRouter(Router):
                 f"adaptive-preference EMA (paper §4.2) is driven by the "
                 f"error modality's raw value — without it the fleet router "
                 f"would silently track an unrelated telemetry column")
+        if self.mega:
+            if self.period % self.dwell != 0:
+                raise ValueError(
+                    f"mega=True needs the dwell ({self.dwell} ticks) to "
+                    f"divide the slow period ({self.period} ticks): the "
+                    f"megakernel compiles the selecting/held tick structure "
+                    f"statically per window")
+            if self.cfg.novelty_weight != 0.0:
+                raise ValueError(
+                    "mega=True does not implement the beyond-paper novelty "
+                    "bonus (novelty_weight != 0) — the fused kernels drop "
+                    "it; run the unfused per-tick path instead")
+        if self.mega_slot_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"mega_slot_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.mega_slot_dtype!r}")
 
     # ------------------------------------------------------- engine hints
     @property
@@ -93,6 +121,18 @@ class AifRouter(Router):
     def has_slow(self) -> bool:
         return True
 
+    # Evidence-assembly statics the whole-window engine path inlines into
+    # the megakernel window (the per-tick paths consume them via _observe).
+    @property
+    def resolved_disc(self) -> spaces.DiscretizationConfig:
+        return self.disc or spaces.DiscretizationConfig()
+
+    @property
+    def resolved_util_edges(self) -> tuple[float, ...]:
+        topo = self.cfg.topology
+        return (topo.util_edges if self.util_edges is None
+                else tuple(self.util_edges))
+
     def clock_phase(self, carry) -> int | None:
         t = carry.t
         if isinstance(t, jax.core.Tracer):
@@ -113,12 +153,10 @@ class AifRouter(Router):
     def _observe(self, obs: RouterObs):
         """Shared evidence assembly: discretize the published telemetry and
         the 10 s utilization scrape (tier order -> state-factor order)."""
-        disc = self.disc or spaces.DiscretizationConfig()
         topo = self.cfg.topology
-        obs_bins = spaces.discretize_observation(obs.raw_obs, disc)
-        edges = jnp.asarray(
-            topo.util_edges if self.util_edges is None else self.util_edges,
-            jnp.float32)
+        obs_bins = spaces.discretize_observation(obs.raw_obs,
+                                                 self.resolved_disc)
+        edges = jnp.asarray(self.resolved_util_edges, jnp.float32)
         util_hml = obs.tier_utilization[:, ::-1]
         util_bins = jnp.sum(util_hml[..., None] >= edges,
                             axis=-1).astype(jnp.int32)

@@ -39,11 +39,14 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.api.router import Router, RouterObs
+from repro.core import mega as mega_mod
 from repro.core.fleet import FleetTrace
+from repro.kernels.efe import ops as efe_ops
 
 
 def rollout(router: Router,
@@ -80,6 +83,9 @@ def rollout(router: Router,
 
     ``carry`` and ``env_state`` are donated — reuse the returned states.
     """
+    if getattr(router, "mega", False):
+        return _mega_rollout(router, carry, env_state, env_step, n_steps,
+                             key, obs_masked=obs_masked, t0=t0)
     period = max(int(router.period), 1)
     clock_phase = (int(t0) % period if t0 is not None
                    else router.clock_phase(carry))
@@ -106,6 +112,31 @@ def _row_block_keys(key: jax.Array, row_start: jnp.ndarray, n_true: int,
         full = jnp.concatenate(
             [full, jnp.repeat(full[-1:], n_pad - n_true, axis=0)])
     return jax.lax.dynamic_slice_in_dim(full, row_start, n_local)
+
+
+def _key_block(key: jax.Array, n: int, r: int, rows: tuple | None = None):
+    """Pre-split the engine's per-tick key chain for ``n`` ticks at once.
+
+    The per-tick chain is ``k, k_env, k_agents = split(k, 3)`` followed by an
+    R-way per-cell split and a fast/slow split per cell — 3 + R + R splits
+    serialized inside every tick of the rollout scan.  Hoisting the whole
+    chain into one block per slow period takes the key derivation off the
+    tick's critical path; the split *tree* is unchanged, so the produced
+    keys (and therefore the rollout) are bit-identical to the per-tick
+    chain (pinned by ``tests/test_mega.py::test_key_block_replays_chain``).
+
+    Returns (advanced chain key, (k_env (n,), k_fast (n, R), k_slow (n, R))).
+    """
+    def body(k, _):
+        k, k_env, k_agents = jax.random.split(k, 3)
+        if rows is None:
+            keys = jax.random.split(k_agents, r)
+        else:
+            keys = _row_block_keys(k_agents, rows[0], rows[1], rows[2], r)
+        ks = jax.vmap(jax.random.split)(keys)
+        return k, (k_env, ks[:, 0], ks[:, 1])
+
+    return jax.lax.scan(body, key, None, length=n)
 
 
 @functools.partial(jax.jit,
@@ -169,16 +200,9 @@ def _rollout_core(carry0,
     # rollout(): env_step.emits_mask or an explicit obs_masked=.)
     emits_mask = obs_masked
 
-    def tick_body(carry, t_idx, light: bool):
+    def tick_core(carry, t_idx, k_env, k_fast, k_slow, light: bool):
         (rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask, k, _,
          stats) = carry
-        k, k_env, k_agents = jax.random.split(k, 3)
-        if rows is None:
-            keys = jax.random.split(k_agents, r)
-        else:
-            keys = _row_block_keys(k_agents, rows[0], rows[1], rows[2], r)
-        ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
-        k_fast, k_slow = ks[:, 0], ks[:, 1]
         obs = RouterObs(raw_obs=raw_obs, tier_utilization=tier_util,
                         tier_up=tier_up, tier_queue=tier_queue, t_idx=t_idx)
         mask = obs_mask if emits_mask else None
@@ -200,56 +224,107 @@ def _rollout_core(carry0,
         return (rst, est, win.raw_obs, win.tier_utilization, win.tier_up,
                 win.tier_queue, next_mask, k, k_slow, stats), ys
 
+    def tick_body(carry, t_idx, light: bool):
+        # Per-tick key chain — flat scans only; the nested slow-period path
+        # consumes pre-split blocks from _key_block instead (same tree).
+        k, k_env, k_agents = jax.random.split(carry[7], 3)
+        if rows is None:
+            keys = jax.random.split(k_agents, r)
+        else:
+            keys = _row_block_keys(k_agents, rows[0], rows[1], rows[2], r)
+        ks = jax.vmap(jax.random.split)(keys)          # (R, 2) keys
+        carry = carry[:7] + (k,) + carry[8:]
+        return tick_core(carry, t_idx, k_env, ks[:, 0], ks[:, 1], light)
+
     def full_body(carry, t_idx):
         return tick_body(carry, t_idx, light=False)
 
     def light_body(carry, t_idx):
         return tick_body(carry, t_idx, light=True)
 
-    def dwell_block(carry, t_start, n_light: int):
+    def full_xs(carry, xs):
+        return tick_core(carry, *xs, light=False)
+
+    def light_xs(carry, xs):
+        return tick_core(carry, *xs, light=True)
+
+    def dwell_block(carry, t_start, n_light: int, keys3=None):
         """One dwell block: a selecting tick, then n_light held ticks."""
-        carry, y0 = full_body(carry, t_start)
+        if keys3 is None:
+            carry, y0 = full_body(carry, t_start)
+        else:
+            carry, y0 = full_xs(carry,
+                                (t_start,) + tuple(a[0] for a in keys3))
         y0 = jax.tree_util.tree_map(lambda a: a[None], y0)
         if not n_light:
             return carry, y0
-        carry, ys = jax.lax.scan(
-            light_body, carry,
-            t_start + 1 + jnp.arange(n_light, dtype=jnp.int32))
+        ts = t_start + 1 + jnp.arange(n_light, dtype=jnp.int32)
+        if keys3 is None:
+            carry, ys = jax.lax.scan(light_body, carry, ts)
+        else:
+            carry, ys = jax.lax.scan(
+                light_xs, carry, (ts,) + tuple(a[1:] for a in keys3))
         return carry, jax.tree_util.tree_map(
             lambda a, b: jnp.concatenate([a, b], axis=0), y0, ys)
 
-    def run_ticks(carry, t_start, n: int, phase: int = 0):
+    def run_ticks(carry, t_start, n: int, phase: int = 0,
+                  hoisted: bool = False):
         """n consecutive ticks starting at traced window index ``t_start``,
         whose first tick sits at dwell offset ``phase`` on the fleet clock
         (static).  Misaligned heads run as held ticks until the next dwell
-        boundary; then selecting-tick-led blocks."""
+        boundary; then selecting-tick-led blocks.  ``hoisted`` pre-splits
+        the whole key block for the n ticks up front (the slow-period path:
+        n <= period, so the block stays a few-KB (n, R) key array)."""
+        keys3 = None
+        if hoisted and n:
+            k, keys3 = _key_block(carry[7], n, r, rows)
+            carry = carry[:7] + (k,) + carry[8:]
         outs = []
         if dwell_blocked and n:
             head = min((dwell - phase) % dwell, n)
             if head:
-                carry, ys = jax.lax.scan(
-                    light_body, carry,
-                    t_start + jnp.arange(head, dtype=jnp.int32))
+                ts = t_start + jnp.arange(head, dtype=jnp.int32)
+                if keys3 is None:
+                    carry, ys = jax.lax.scan(light_body, carry, ts)
+                else:
+                    carry, ys = jax.lax.scan(
+                        light_xs, carry,
+                        (ts,) + tuple(a[:head] for a in keys3))
                 outs.append(ys)
             t_start = t_start + head
             n_blocks, tail = divmod(n - head, dwell)
             if n_blocks:
-                def block_body(c, tb):
-                    return dwell_block(c, tb, dwell - 1)
-                carry, ys = jax.lax.scan(
-                    block_body, carry,
-                    t_start + dwell * jnp.arange(n_blocks, dtype=jnp.int32))
+                tb = t_start + dwell * jnp.arange(n_blocks, dtype=jnp.int32)
+                if keys3 is None:
+                    def block_body(c, t):
+                        return dwell_block(c, t, dwell - 1)
+                    carry, ys = jax.lax.scan(block_body, carry, tb)
+                else:
+                    blk = tuple(
+                        a[head:head + n_blocks * dwell].reshape(
+                            (n_blocks, dwell) + a.shape[1:])
+                        for a in keys3)
+
+                    def block_body(c, xs):
+                        t, ke, kf, ksl = xs
+                        return dwell_block(c, t, dwell - 1,
+                                           keys3=(ke, kf, ksl))
+                    carry, ys = jax.lax.scan(block_body, carry, (tb,) + blk)
                 outs.append(jax.tree_util.tree_map(
                     lambda x: x.reshape((n_blocks * dwell,) + x.shape[2:]),
                     ys))
             if tail:
+                k3 = (None if keys3 is None else
+                      tuple(a[head + n_blocks * dwell:] for a in keys3))
                 carry, ys = dwell_block(carry, t_start + n_blocks * dwell,
-                                        tail - 1)
+                                        tail - 1, keys3=k3)
                 outs.append(ys)
         else:
-            carry, ys = jax.lax.scan(
-                full_body, carry,
-                t_start + jnp.arange(n, dtype=jnp.int32))
+            ts = t_start + jnp.arange(n, dtype=jnp.int32)
+            if keys3 is None:
+                carry, ys = jax.lax.scan(full_body, carry, ts)
+            else:
+                carry, ys = jax.lax.scan(full_xs, carry, (ts,) + keys3)
             outs.append(ys)
         if len(outs) == 1:
             return carry, outs[0]
@@ -299,14 +374,15 @@ def _rollout_core(carry0,
     lead_eff = min(lead, n_steps)
     if lead_eff:
         carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), lead_eff,
-                              phase=clock_phase % dwell)
+                              phase=clock_phase % dwell, hoisted=True)
         traces.append(ys)
         if lead_eff == lead:    # the boundary tick ran -> learn once
             carry = slow_after(carry)
     n_periods, n_rem = divmod(n_steps - lead_eff, period)
 
     def period_body(carry, p_idx):
-        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period)
+        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period,
+                              hoisted=True)
         return slow_after(carry), ys
 
     if n_periods:
@@ -317,11 +393,140 @@ def _rollout_core(carry0,
     if n_rem or not traces:
         carry, ys = run_ticks(
             carry,
-            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem)
+            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem,
+            hoisted=True)
         traces.append(ys)
     trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *traces)
     return carry[0], carry[1], trace, carry[-1]
+
+
+# ------------------------------------------------------------ megakernel path
+def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
+                  key: jax.Array, *, obs_masked: bool | None,
+                  t0: int | None):
+    """Whole-window engine path (``router.mega``).
+
+    One launch per slow period instead of per tick: the router carry is the
+    factored :class:`repro.core.mega.MegaFleetState` (slots + derived
+    cache, no dense B), the per-period key chain is pre-split
+    (:func:`_key_block` — same tree as the per-tick engine, so the
+    environment and sampling randomness match it bit-for-bit) and the env
+    advances *inside* the fused window.  Requires the env adapter's
+    ``.fluid`` ingredients (:func:`repro.envsim.batched.make_env_step`)
+    and a fresh fleet clock — slots are indexed by global tick.
+    """
+    fl = getattr(env_step, "fluid", None)
+    if fl is None:
+        raise ValueError(
+            "mega rollouts need the env adapter's whole-window ingredients "
+            "(env_step.fluid, set by repro.envsim.batched.make_env_step) — "
+            "a wrapped per-tick closure cannot be fused into the window; "
+            "rebuild the adapter or set mega=False")
+    if n_steps <= 0:
+        raise ValueError("mega rollouts need n_steps >= 1")
+    if t0 not in (None, 0):
+        raise ValueError(
+            f"mega rollouts start on a fresh fleet clock (t0=0), got "
+            f"t0={t0}: transition slots are indexed by the global tick")
+    t = getattr(carry, "t", None)
+    if t is not None:
+        if isinstance(t, jax.core.Tracer):
+            raise ValueError(
+                "mega rollouts cannot resume from a traced carry — pass "
+                "carry=None (or a fresh init_carry) outside jit")
+        if np.asarray(t).size and np.any(np.asarray(t) != 0):
+            raise ValueError(
+                "mega rollouts start from a fresh fleet (t == 0 on every "
+                "cell); to continue a warm fleet run the per-tick engine "
+                "(mega=False), or densify the mega carry with "
+                "repro.core.mega.to_agent_state first")
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
+    return _mega_impl(env_state, fl.params, fl.arrival_rate, fl.hazard_scale,
+                      fl.obs_valid, key, router=router, n_steps=n_steps,
+                      obs_masked=obs_masked, dt=fl.dt,
+                      scrape_every=fl.scrape_every,
+                      restart_blackout=fl.restart_blackout)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "n_steps", "obs_masked", "dt",
+                                    "scrape_every", "restart_blackout"),
+                   donate_argnames=("env_state",))
+def _mega_impl(env_state,
+               params,
+               arrival: jnp.ndarray,
+               hazard: jnp.ndarray,
+               obs_valid: jnp.ndarray | None,
+               key: jax.Array,
+               *,
+               router,
+               n_steps: int,
+               obs_masked: bool,
+               dt: float,
+               scrape_every: int,
+               restart_blackout: bool):
+    cfg = router.cfg
+    r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    a_n = cfg.n_actions
+    period = max(int(router.period), 1)
+    slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
+                  else jnp.float32)
+    state = mega_mod.init_mega_state(cfg, r, n_steps, slot_dtype=slot_dtype)
+    m, k_tiers = router.n_modalities, router.n_tiers
+    obs_carry = (jnp.zeros((r, m), jnp.float32),
+                 jnp.zeros((r, k_tiers), jnp.float32),
+                 jnp.ones((r, k_tiers), jnp.float32),
+                 jnp.zeros((r, k_tiers), jnp.float32),
+                 jnp.ones((r, m), jnp.float32))
+    statics = dict(cfg=cfg, disc=router.resolved_disc,
+                   util_edges=router.resolved_util_edges,
+                   util_period=router.util_period, dt=dt,
+                   scrape_every=scrape_every,
+                   restart_blackout=restart_blackout,
+                   emits_mask=obs_masked, use_pallas=router.use_pallas)
+
+    def window(carry, t_start, w_ticks: int, do_slow: bool):
+        state, est, obs, k = carry
+        k, (k_env, k_fast, k_slow) = _key_block(k, w_ticks, r)
+        gum = jax.vmap(jax.vmap(
+            lambda kk: jax.random.gumbel(kk, (a_n,))))(k_fast)
+        arr_w = jax.lax.dynamic_slice_in_dim(arrival, t_start, w_ticks)
+        haz_w = jax.lax.dynamic_slice_in_dim(hazard, t_start, w_ticks)
+        ov_w = (None if obs_valid is None
+                else jax.lax.dynamic_slice_in_dim(obs_valid, t_start,
+                                                  w_ticks))
+        state, est, obs, ys = efe_ops.mega_window(
+            state, est, obs, params, arr_w, haz_w, ov_w, k_env, gum,
+            jnp.asarray(t_start, jnp.int32), **statics)
+        if do_slow:
+            # the boundary tick's per-cell slow keys, as in the per-tick
+            # engine's slow_after
+            state = mega_mod.mega_slow_step(state, k_slow[-1], cfg)
+        return (state, est, obs, k), ys
+
+    carry = (state, env_state, obs_carry, key)
+    n_periods, n_rem = divmod(n_steps, period)
+    traces = []
+    if n_periods:
+        def period_body(c, p_idx):
+            return window(c, p_idx * period, period, do_slow=True)
+
+        carry, ys = jax.lax.scan(period_body, carry,
+                                 jnp.arange(n_periods, dtype=jnp.int32))
+        traces.append(jax.tree_util.tree_map(
+            lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
+    if n_rem:
+        carry, ys = window(carry, n_periods * period, n_rem, do_slow=False)
+        traces.append(ys)
+    ys = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traces)
+    state, est, _, _ = carry
+    actions, weights, raw_obs, unstable, obs_frac, win = ys
+    return state, est, FleetTrace(actions=actions, routing_weights=weights,
+                                  raw_obs=raw_obs, unstable=unstable,
+                                  obs_frac=obs_frac, env=win)
 
 
 # ------------------------------------------------------------- device sharding
@@ -379,6 +584,12 @@ def sharded_rollout(router: Router,
             "rollouts need a row_block-aware adapter (see "
             "repro.envsim.batched.make_env_step); wrap or rebuild the "
             "closure instead of sharding a schedule-blind one")
+    if getattr(router, "mega", False):
+        raise ValueError(
+            "sharded_rollout does not support mega=True yet: the megakernel "
+            "window manages its own PRNG block and trace layout, which the "
+            "shard_map reducer contract does not cover — run the mega path "
+            "unsharded (rollout) or set mega=False for multi-device runs")
     r_pad, _ = shard.padded(n_cells)
     lead = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     if lead != r_pad:

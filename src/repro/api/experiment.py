@@ -48,10 +48,12 @@ _EPS = 1e-9
 
 # ------------------------------------------------------------ router registry
 def _make_aif(topo: Topology, scfg: SimConfig, fused: bool,
-              use_pallas: bool) -> AifRouter:
+              use_pallas: bool, mega: bool,
+              mega_slot_dtype: str = "float32") -> AifRouter:
     return AifRouter(cfg=generative.AifConfig(topology=topo),
                      disc=discretization_for(scfg),
-                     fused=fused, use_pallas=use_pallas)
+                     fused=fused, use_pallas=use_pallas, mega=mega,
+                     mega_slot_dtype=mega_slot_dtype)
 
 
 def _capacity_weights(scfg: SimConfig) -> tuple[float, ...]:
@@ -64,22 +66,24 @@ def _capacity_weights(scfg: SimConfig) -> tuple[float, ...]:
     return tuple(w) + (round(1.0 - sum(w), 2),)
 
 
-#: Router registry: name -> (topology, sim config, fused, use_pallas) ->
-#: Router.  ``capacity`` derives its weights from the sim config's tier CPU
+#: Router registry: name -> (topology, sim config, fused, use_pallas, mega,
+#: ...) -> Router.  The baseline builders ignore the trailing AIF execution
+#: options (``*_``) so the registry call shape can grow without touching
+#: them.  ``capacity`` derives its weights from the sim config's tier CPU
 #: limits — the prior knowledge AIF learns online.
 ROUTERS: dict[str, Callable[..., router_mod.Router]] = {
     "aif": _make_aif,
-    "uniform": lambda topo, scfg, fused, use_pallas:
+    "uniform": lambda topo, scfg, *_:
         router_mod.UniformRouter(tiers=topo.n_tiers),
-    "capacity": lambda topo, scfg, fused, use_pallas:
+    "capacity": lambda topo, scfg, *_:
         router_mod.CapacityRouter(weights=_capacity_weights(scfg)),
-    "round_robin": lambda topo, scfg, fused, use_pallas:
+    "round_robin": lambda topo, scfg, *_:
         router_mod.RoundRobinRouter(tiers=topo.n_tiers),
-    "least_loaded": lambda topo, scfg, fused, use_pallas:
+    "least_loaded": lambda topo, scfg, *_:
         router_mod.LeastLoadedRouter(tiers=topo.n_tiers),
-    "thompson": lambda topo, scfg, fused, use_pallas:
+    "thompson": lambda topo, scfg, *_:
         router_mod.ThompsonRouter(topology=topo),
-    "ucb": lambda topo, scfg, fused, use_pallas:
+    "ucb": lambda topo, scfg, *_:
         router_mod.UcbRouter(topology=topo),
 }
 
@@ -180,6 +184,13 @@ class Experiment:
       seed: drives the scenario schedules and the rollout PRNG.
       window_s: control-window length in seconds.
       fused / use_pallas: AIF execution path (ignored for baselines).
+      mega: run AIF on the whole-window megakernel engine path (one fused
+        launch per slow period, factored transition cache — see
+        :mod:`repro.core.mega`).  Requires a fresh fleet clock, so the run
+        always starts from ``carry=None``; incompatible with ``shard``.
+      mega_slot_dtype: storage dtype of the megakernel's transition slots
+        ("float32" or "bfloat16" — mixed precision: bf16 store, fp32
+        accumulate).
       shard: device sharding of the cell axis — None (unsharded engine,
         full per-tick trace), ``"auto"`` (all local devices) or a
         :class:`~repro.api.shard.ShardSpec`.  Sharded runs keep trace
@@ -198,6 +209,8 @@ class Experiment:
     window_s: float = 1.0
     fused: bool = False
     use_pallas: bool = False
+    mega: bool = False
+    mega_slot_dtype: str = "float32"
     shard: ShardSpec | str | None = None
     label: str | None = None
 
@@ -207,10 +220,10 @@ class Experiment:
 
     def resolve_router(self, scfg: SimConfig) -> router_mod.Router:
         if isinstance(self.router, router_mod.Router):
-            if self.fused or self.use_pallas:
+            if self.fused or self.use_pallas or self.mega:
                 raise ValueError(
-                    "fused/use_pallas only apply to registry-built routers; "
-                    "set them on the Router instance itself (e.g. "
+                    "fused/use_pallas/mega only apply to registry-built "
+                    "routers; set them on the Router instance itself (e.g. "
                     "AifRouter(fused=True)) — silently ignoring them would "
                     "misreport which execution path ran")
             return self.router
@@ -219,8 +232,12 @@ class Experiment:
         except KeyError:
             raise KeyError(f"unknown router {self.router!r}; "
                            f"available: {sorted(ROUTERS)}") from None
+        if self.router == "aif":
+            return _make_aif(self.resolve_topology(), scfg, self.fused,
+                             self.use_pallas, self.mega,
+                             self.mega_slot_dtype)
         return make(self.resolve_topology(), scfg, self.fused,
-                    self.use_pallas)
+                    self.use_pallas, self.mega)
 
     @property
     def name(self) -> str:
@@ -352,8 +369,11 @@ def run(experiment: Experiment) -> RunResult:
             f"topology {topo.tier_names} has {topo.n_tiers}")
 
     t0 = time.perf_counter()
+    # mega routers own their carry (factored MegaFleetState, fresh clock)
+    init = (None if getattr(router, "mega", False)
+            else router.init_carry(e.n_cells))
     carry, est, trace = rollout(
-        router, router.init_carry(e.n_cells),
+        router, init,
         batched.init_fluid_state(params), env_step, e.n_windows,
         jax.random.key(e.seed))
     jax.block_until_ready(est)

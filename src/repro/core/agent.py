@@ -141,6 +141,28 @@ def pre_action(state: AgentState,
     return model, q_next, replay, error_ema, unstable
 
 
+def dwell_gate(t: jnp.ndarray,
+               prev_action: jnp.ndarray,
+               dt_since_change: jnp.ndarray,
+               sampled: jnp.ndarray,
+               cfg: generative.AifConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dwell-gate a sampled action against the agent clock.
+
+    The single definition of the dwell rule — shared by
+    :func:`apply_action` and the whole-window megakernel path
+    (:mod:`repro.core.mega`), so the two engines cannot drift on when an
+    action may change.  Elementwise over any leading batch shape.
+
+    Returns (applied action (int32), new dt_since_change).
+    """
+    dwell_ticks = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
+    do_select = (t % dwell_ticks) == 0
+    action = jnp.where(do_select, sampled, prev_action)
+    changed = action != prev_action
+    dt = jnp.where(changed, 0.0, dt_since_change + cfg.fast_period_s)
+    return action.astype(jnp.int32), dt
+
+
 def apply_action(state: AgentState,
                  model: generative.GenerativeModel,
                  q_next: jnp.ndarray,
@@ -158,11 +180,8 @@ def apply_action(state: AgentState,
 
     Returns (new_state, applied action).
     """
-    dwell_ticks = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
-    do_select = (state.t % dwell_ticks) == 0
-    action = jnp.where(do_select, sampled, state.prev_action)
-    changed = action != state.prev_action
-    dt = jnp.where(changed, 0.0, state.dt_since_change + cfg.fast_period_s)
+    action, dt = dwell_gate(state.t, state.prev_action, state.dt_since_change,
+                            sampled, cfg)
 
     new_state = AgentState(
         model=model,

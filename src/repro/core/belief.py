@@ -98,14 +98,15 @@ def util_log_likelihood(util_bins: jnp.ndarray, topo: Topology,
     the other levels.
 
     Args:
-      util_bins: (K,) int32 utilization bins in state-factor order
-        (heaviest tier first).
+      util_bins: (..., K) int32 utilization bins in state-factor order
+        (heaviest tier first); any leading batch shape (the whole-window
+        fleet path passes (R, K) directly instead of vmapping).
     """
     k = topo.n_tiers
     tbl = jnp.asarray(spaces.state_factor_table(topo))    # (S, 2+K)
-    match = tbl[:, 2:2 + k] == util_bins[None, :]         # (S, K)
+    match = tbl[:, 2:2 + k] == util_bins[..., None, :]    # (..., S, K)
     p = jnp.where(match, 1.0 - eps, eps / (topo.n_levels - 1))
-    return jnp.sum(jnp.log(p), axis=-1)                   # (S,)
+    return jnp.sum(jnp.log(p), axis=-1)                   # (..., S)
 
 
 def posterior_from_logp(logp: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,488 @@
+"""Whole-window factored fleet state for the AIF megakernel engine path.
+
+The per-tick fleet engine spends almost its entire budget on the dense
+(R, A, S, S) transition pseudo-counts: the slow loop materializes a 300 MB
+``b_counts`` update + renormalization every period, and every belief update
+streams an (S, S) row of it.  But the counts are *structurally low rank*:
+
+    b_counts = b0 + α_B · Σ_j  w_j · 1[act_j = a] · q_next_j ⊗ q_prev_j
+
+where ``b0 = u + d·I`` is the sticky prior and the sum runs over replayed
+transition slots ``j`` with weights that change only on slow boundaries
+(``w_j = settle(Δt_j) · #times-sampled``).  This module keeps the model in
+that factored form — the dense B is *never* materialized:
+
+* :class:`MegaSlots` — every pushed transition of the rollout, one slot per
+  tick (the rollout horizon is bounded by the replay capacity, so the
+  legacy ring buffer never wraps and slot index == tick index).
+* :class:`MegaCache` — the per-slow-period derived tensors: per-slot
+  coefficients, the (R, A, S) column sums of the implicit B, the normalized
+  observation model and its EFE projection rows.  All quasi-static within a
+  period (same invariant the legacy ``ModelCache`` pins).
+* Factored belief prior and EFE that touch O(J·S) instead of O(S²) per
+  tick — belief update → EFE → Gumbel argmax sampling → dwell gate → env
+  window update run as one fused whole-window program
+  (:func:`mega_window`), the XLA oracle twin of the Pallas megakernel.
+
+Semantics match the legacy fused path term-for-term (same guard constants,
+same op order); only floating-point reassociation differs (the j-sum
+replaces a dense matvec), pinned by the rollout-parity tests at 1e-4.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import agent as agent_mod
+from repro.core import belief as belief_mod
+from repro.core import generative, learning, policies, preferences, spaces
+from repro.envsim import batched
+
+
+class MegaSlots(NamedTuple):
+    """All pushed transitions of a rollout, slot ``j`` == fast tick ``j``.
+
+    The legacy replay ring never wraps when the horizon T fits the replay
+    capacity (enforced at init), so slots are written once, in tick order,
+    and ``wcount`` — how many times slot ``j`` was drawn across all slow
+    steps so far — is the *only* mutable learning state:
+    the implicit B-count contribution of slot ``j`` is
+    ``α_B · settle(Δt_j) · wcount_j · q_next_j ⊗ q_prev_j``.
+
+    ``q_prev`` / ``q_next`` may be stored in bfloat16 (``slot_dtype``) —
+    every consumer accumulates in float32.
+    """
+
+    q_prev: jnp.ndarray           # (R, J, S) belief before the tick
+    q_next: jnp.ndarray           # (R, J, S) posterior after the tick
+    obs_bins: jnp.ndarray         # (R, J, M) int32
+    obs_mask: jnp.ndarray         # (R, J, M) float32 validity at push time
+    action: jnp.ndarray           # (R, J) int32 action in force at the tick
+    dt_since_change: jnp.ndarray  # (R, J) float32 dwell age at the tick
+    wcount: jnp.ndarray           # (R, J) float32 times sampled by slow steps
+
+
+class MegaCache(NamedTuple):
+    """Quasi-static derived tensors, refreshed once per slow period.
+
+    With ``u = b_prior_uniform / S`` and ``d = b_prior_sticky``:
+
+      colsum[a, s]  = (b_prior_uniform + b_prior_sticky)
+                      + Σ_j coefact[j, a] · Σ_t q_next_j[t] · q_prev_j[s]
+                      (the per-column normalizer of the implicit B)
+      coefw[j]      = α_B · settle(Δt_j) · wcount_j
+      coefact[j, a] = coefw[j] · 1[action_j = a]
+      proj          = the EFE's (P, S) projection rows: the M·NB normalized
+                      observation rows followed by the M per-modality
+                      ambiguity rows — o_pred and the ambiguity term are
+                      both ``proj @ s_pred``.
+      qnproj[j, p]  = proj[p] · q_next_j   (per-slot EFE contribution)
+      sumqn[j]      = Σ_t q_next_j[t]  (≈ 1; kept exact for the colsum)
+    """
+
+    colsum: jnp.ndarray    # (R, A, S)
+    proj: jnp.ndarray      # (R, P, S) with P = M·max_bins + M
+    projsum: jnp.ndarray   # (R, P)
+    qnproj: jnp.ndarray    # (R, J, P)
+    sumqn: jnp.ndarray     # (R, J)
+    coefw: jnp.ndarray     # (R, J)
+    coefact: jnp.ndarray   # (R, J, A)
+    logna: jnp.ndarray     # (R, M, max_bins, S) log(max(na, 1e-16))
+
+
+class MegaFleetState(NamedTuple):
+    """Factored fleet carry of the megakernel engine path."""
+
+    a_counts: jnp.ndarray         # (R, M, max_bins, S) — stays dense (small)
+    slots: MegaSlots
+    cache: MegaCache
+    belief: jnp.ndarray           # (R, S)
+    prev_action: jnp.ndarray      # (R,) int32
+    dt_since_change: jnp.ndarray  # (R,) float32
+    error_ema: jnp.ndarray        # (R,) float32
+    unstable: jnp.ndarray         # (R,) bool
+    t: jnp.ndarray                # (R,) int32 fast ticks elapsed
+
+
+def n_proj(topo) -> int:
+    """Rows of the EFE projection: M·max_bins observation rows + M
+    per-modality ambiguity rows."""
+    return topo.n_modalities * topo.max_bins + topo.n_modalities
+
+
+def _refresh_cache(a_counts: jnp.ndarray, slots: MegaSlots,
+                   cfg: generative.AifConfig) -> MegaCache:
+    """Recompute every derived tensor (slow boundaries and init only)."""
+    topo = cfg.topology
+    r = a_counts.shape[0]
+    s, a_n = topo.n_states, cfg.n_actions
+    m, nb = topo.n_modalities, topo.max_bins
+    qp = slots.q_prev.astype(jnp.float32)
+    qn = slots.q_next.astype(jnp.float32)
+
+    settle = learning.settle_weight(slots.dt_since_change, cfg)
+    coefw = cfg.alpha_b * settle * slots.wcount                   # (R, J)
+    coefact = coefw[..., None] * jax.nn.one_hot(
+        slots.action, a_n, dtype=jnp.float32)                     # (R, J, A)
+    sumqn = jnp.sum(qn, axis=-1)                                  # (R, J)
+    colsum = (cfg.b_prior_uniform + cfg.b_prior_sticky
+              + jnp.einsum("rja,rjs->ras", coefact * sumqn[..., None], qp))
+
+    # batched normalize_a (same masked counts / bin-sum, axis made
+    # batch-generic) + the EFE projection stack
+    mask = spaces.bins_mask(topo)[:, :, None]                     # (M, NB, 1)
+    counts = a_counts * mask
+    na = counts / jnp.maximum(jnp.sum(counts, axis=-2, keepdims=True), 1e-30)
+    logna = jnp.log(jnp.maximum(na, 1e-16))
+    amb_m = generative.modality_ambiguity_from_normalized(na, topo)
+    proj = jnp.concatenate([na.reshape(r, m * nb, s), amb_m], axis=1)
+    projsum = jnp.sum(proj, axis=-1)
+    qnproj = jnp.einsum("rps,rjs->rjp", proj, qn)
+    return MegaCache(colsum=colsum, proj=proj, projsum=projsum,
+                     qnproj=qnproj, sumqn=sumqn, coefw=coefw,
+                     coefact=coefact, logna=logna)
+
+
+def init_mega_state(cfg: generative.AifConfig, r: int, n_slots: int,
+                    slot_dtype=jnp.float32) -> MegaFleetState:
+    """Fresh factored fleet state with ``n_slots`` (== rollout horizon) slots.
+
+    Raises if the horizon exceeds the replay capacity — the factored form
+    relies on the legacy ring buffer never wrapping (slot == tick).
+    """
+    if n_slots > cfg.replay_capacity:
+        raise ValueError(
+            f"megakernel path supports horizons up to the replay capacity "
+            f"({cfg.replay_capacity}); got {n_slots} ticks — beyond that the "
+            f"legacy ring buffer overwrites slots and the factored "
+            f"slot==tick invariant breaks.  Split the rollout or raise "
+            f"cfg.replay_capacity.")
+    topo = cfg.topology
+    s, m, nb = topo.n_states, topo.n_modalities, topo.max_bins
+    a0 = jnp.broadcast_to(
+        generative.init_generative_model(cfg).a_counts, (r, m, nb, s))
+    slots = MegaSlots(
+        q_prev=jnp.zeros((r, n_slots, s), slot_dtype),
+        q_next=jnp.zeros((r, n_slots, s), slot_dtype),
+        obs_bins=jnp.zeros((r, n_slots, m), jnp.int32),
+        obs_mask=jnp.ones((r, n_slots, m), jnp.float32),
+        action=jnp.zeros((r, n_slots), jnp.int32),
+        dt_since_change=jnp.zeros((r, n_slots), jnp.float32),
+        wcount=jnp.zeros((r, n_slots), jnp.float32),
+    )
+    return MegaFleetState(
+        a_counts=a0,
+        slots=slots,
+        cache=_refresh_cache(a0, slots, cfg),
+        belief=jnp.full((r, s), 1.0 / s, jnp.float32),
+        prev_action=jnp.full((r,), policies.BALANCED_ACTION, jnp.int32),
+        dt_since_change=jnp.zeros((r,), jnp.float32),
+        error_ema=jnp.zeros((r,), jnp.float32),
+        unstable=jnp.zeros((r,), bool),
+        t=jnp.zeros((r,), jnp.int32),
+    )
+
+
+# ------------------------------------------------------------- factored math
+def factored_prior(cache: MegaCache, slots: MegaSlots, belief: jnp.ndarray,
+                   prev_action: jnp.ndarray,
+                   cfg: generative.AifConfig) -> jnp.ndarray:
+    """Normalized belief prior ``B_{a_prev} q`` without materializing B.
+
+    With ``q̃ = q / colsum[a_prev]``:
+
+      prior[t] ∝ u·Σ_s q̃[s] + d·q̃[t] + Σ_j pend_j · q_next_j[t],
+      pend_j = coefact[j, a_prev] · (q_prev_j · q̃)
+
+    — exactly the legacy ``row/colsum @ q`` with the count sum unrolled
+    over slots (two (J, S) GEMVs per router instead of an (S, S) matvec).
+    """
+    s = belief.shape[-1]
+    u = cfg.b_prior_uniform / s
+    d = cfg.b_prior_sticky
+    qp = slots.q_prev.astype(jnp.float32)
+    qn = slots.q_next.astype(jnp.float32)
+    csum = jnp.take_along_axis(
+        cache.colsum, prev_action[:, None, None], axis=1)[:, 0]   # (R, S)
+    qt = belief / csum
+    cw = jnp.take_along_axis(
+        cache.coefact, prev_action[:, None, None], axis=2)[..., 0]  # (R, J)
+    pend = cw * jnp.einsum("rjs,rs->rj", qp, qt)
+    num = (u * jnp.sum(qt, -1, keepdims=True) + d * qt
+           + jnp.einsum("rj,rjt->rt", pend, qn))
+    return num / jnp.maximum(jnp.sum(num, -1, keepdims=True), 1e-30)
+
+
+def factored_efe(cache: MegaCache, slots: MegaSlots, q: jnp.ndarray,
+                 logc: jnp.ndarray, cost: jnp.ndarray,
+                 cfg: generative.AifConfig,
+                 obs_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """G (R, A) from the factored model (legacy kernel-ref term-for-term).
+
+    The predicted state ``ŝ_a ∝ B_a q`` is never materialized either: both
+    the predicted observation and the ambiguity term are linear in ``ŝ_a``,
+    so only its P projections through ``cache.proj`` are computed —
+    ``o_pred[a] = (proj @ ŝ_num_a) / Σ_t ŝ_num_a[t]``, with the slot sum
+    entering through the precomputed ``qnproj``.
+    """
+    topo = cfg.topology
+    s = q.shape[-1]
+    m, nb = topo.n_modalities, topo.max_bins
+    u = cfg.b_prior_uniform / s
+    d = cfg.b_prior_sticky
+    qp = slots.q_prev.astype(jnp.float32)
+
+    qa = q[:, None, :] / cache.colsum                             # (R, A, S)
+    sqa = jnp.sum(qa, axis=-1)                                    # (R, A)
+    dots = jnp.einsum("rjs,ras->rja", qp, qa)                     # (R, J, A)
+    pend = cache.coefact * dots
+    o_num = (u * sqa[:, :, None] * cache.projsum[:, None, :]
+             + d * jnp.einsum("rps,ras->rap", cache.proj, qa)
+             + jnp.einsum("rja,rjp->rap", pend, cache.qnproj))    # (R, A, P)
+    sden = jnp.maximum((u * s + d) * sqa
+                       + jnp.einsum("rja,rj->ra", pend, cache.sumqn), 1e-30)
+    o_pred = o_num / sden[..., None]
+
+    o_obs = o_pred[:, :, :m * nb].reshape(q.shape[0], -1, m, nb)
+    terms = jnp.where(o_obs > 1e-20,
+                      o_obs * (jnp.log(jnp.maximum(o_obs, 1e-30))
+                               - logc[:, None]), 0.0)
+    amb_rows = o_pred[:, :, m * nb:]                              # (R, A, M)
+    if obs_mask is not None:
+        terms = terms * obs_mask[:, None, :, None]
+        ambiguity = jnp.sum(amb_rows * obs_mask[:, None, :], axis=-1)
+    else:
+        ambiguity = jnp.sum(amb_rows, axis=-1)
+    risk = jnp.sum(terms, axis=(2, 3))
+    return risk + ambiguity + cost[None, :]
+
+
+def _push_slot(slots: MegaSlots, idx, q_prev, q_next, obs_bins, obs_mask,
+               action, dt_since_change) -> MegaSlots:
+    """Write one transition at (traced) slot index ``idx`` on every router."""
+    def put(arr, val):
+        return jax.lax.dynamic_update_slice_in_dim(
+            arr, val[:, None].astype(arr.dtype), idx, axis=1)
+
+    return slots._replace(
+        q_prev=put(slots.q_prev, q_prev),
+        q_next=put(slots.q_next, q_next),
+        obs_bins=put(slots.obs_bins, obs_bins),
+        obs_mask=put(slots.obs_mask, obs_mask),
+        action=put(slots.action, action),
+        dt_since_change=put(slots.dt_since_change, dt_since_change),
+    )
+
+
+# ------------------------------------------------------------ whole window
+def mega_window(state: MegaFleetState, est, obs_carry, params,
+                arrival: jnp.ndarray, hazard: jnp.ndarray,
+                obs_valid: jnp.ndarray | None, k_env: jax.Array,
+                gumbel: jnp.ndarray, t0, *,
+                cfg: generative.AifConfig, disc, util_edges,
+                util_period: int, dt: float, scrape_every: int,
+                restart_blackout: bool, emits_mask: bool):
+    """W fused fast ticks: belief → EFE → sample → dwell → preferences → env.
+
+    The XLA oracle twin of the Pallas megakernel — one launch advances the
+    whole fleet W ticks with the quasi-static :class:`MegaCache` held fixed
+    (the engine calls :func:`mega_slow_step` between windows).  Ticks are
+    Python-unrolled so selecting ticks (t % dwell == 0) compile the EFE +
+    sampling path and held ticks compile only the belief update, mirroring
+    the per-tick engine's dwell blocking.
+
+    Args:
+      obs_carry: (raw_obs, tier_util, tier_up, tier_queue, obs_mask) — the
+        engine's lagged-telemetry carry (window t's router consumes window
+        t-1's published telemetry).
+      arrival/hazard/obs_valid: this window's (W, ...) schedule slices.
+      k_env: (W,) env keys; gumbel: (W, R, A) pre-drawn Gumbel noise whose
+        argmax reproduces ``jax.random.categorical`` of the legacy per-tick
+        sampling keys bit-for-bit.
+      t0: traced global tick of the window's first tick; must sit on a
+        dwell boundary (the engine only launches windows there).
+
+    Returns (state, env state, obs_carry, per-tick trace tuple) with the
+    trace leaves stacked (W, ...) in tick order.
+    """
+    topo = cfg.topology
+    w_ticks = gumbel.shape[0]
+    dwell = max(int(cfg.action_dwell_s / cfg.fast_period_s), 1)
+    raw_obs, tier_util, tier_up, tier_queue, obs_mask = obs_carry
+    logc_nom, logc_uns = preferences.preference_log_tables(cfg)
+    cost = cfg.cost_weight * policies.policy_concentration_cost(topo)
+    edges = jnp.asarray(util_edges, jnp.float32)
+    err_ix = topo.modalities.index("error")
+    ys = []
+
+    for w in range(w_ticks):
+        t_idx = t0 + w
+        mask = obs_mask if emits_mask else None
+
+        # --- observe (the router-spec's evidence assembly, inlined)
+        obs_bins = spaces.discretize_observation(raw_obs, disc)
+        util_hml = tier_util[:, ::-1]
+        util_bins = jnp.sum(util_hml[..., None] >= edges,
+                            axis=-1).astype(jnp.int32)
+        util_valid = ((t_idx % util_period) == 0) & (t_idx > 0)
+
+        # --- adaptive preferences + evidence
+        error_ema = agent_mod.masked_error_ema(
+            state.error_ema, raw_obs[:, err_ix], cfg, mask)
+        unstable = error_ema > cfg.error_trigger
+        per_mod = jnp.take_along_axis(
+            state.cache.logna, obs_bins[..., None, None], axis=-2)[..., 0, :]
+        if mask is not None:
+            per_mod = per_mod * mask[..., None]
+        loglik = jnp.sum(per_mod, axis=-2)
+        loglik = loglik + jnp.where(
+            util_valid, belief_mod.util_log_likelihood(util_bins, topo), 0.0)
+
+        # --- belief update (factored prior, legacy posterior guards)
+        prior = factored_prior(state.cache, state.slots, state.belief,
+                               state.prev_action, cfg)
+        logp = loglik + jnp.log(jnp.maximum(prior, 1e-30))
+        logp = logp - jnp.max(logp, axis=-1, keepdims=True)
+        q_unnorm = jnp.exp(logp)
+        q_next = q_unnorm / jnp.maximum(
+            jnp.sum(q_unnorm, -1, keepdims=True), 1e-30)
+
+        # --- EFE + in-window categorical via pre-drawn Gumbel noise
+        if w % dwell == 0:
+            logc = jnp.where(unstable[:, None, None], logc_uns, logc_nom)
+            g = factored_efe(state.cache, state.slots, q_next, logc, cost,
+                             cfg, obs_mask=mask)
+            probs = jax.nn.softmax(-cfg.beta * g, axis=-1)
+            sampled = jnp.argmax(
+                jnp.log(jnp.maximum(probs, 1e-30)) + gumbel[w],
+                axis=-1).astype(jnp.int32)
+        else:
+            sampled = state.prev_action
+
+        # --- push the transition slot (slot index == global tick)
+        slots = _push_slot(
+            state.slots, t_idx, state.belief, q_next, obs_bins,
+            mask if mask is not None else jnp.ones_like(obs_mask),
+            state.prev_action, state.dt_since_change)
+
+        # --- dwell gate + env window
+        action, dtc = agent_mod.dwell_gate(
+            state.t, state.prev_action, state.dt_since_change, sampled, cfg)
+        state = state._replace(
+            slots=slots, belief=q_next, prev_action=action,
+            dt_since_change=dtc, error_ema=error_ema, unstable=unstable,
+            t=state.t + 1)
+        weights = policies.routing_weights(action, topo)
+        ov = None if obs_valid is None else obs_valid[w]
+        est, win = batched.fluid_window_step(
+            params, est, weights, arrival[w], hazard[w], k_env[w], t_idx,
+            dt=dt, scrape_every=scrape_every, obs_valid=ov,
+            restart_blackout=restart_blackout)
+
+        ys.append((action, weights, raw_obs, unstable,
+                   jnp.mean(obs_mask, axis=-1), win))
+        raw_obs, tier_util = win.raw_obs, win.tier_utilization
+        tier_up, tier_queue = win.tier_up, win.tier_queue
+        if emits_mask:
+            obs_mask = win.obs_mask
+
+    trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ys)
+    return (state, est,
+            (raw_obs, tier_util, tier_up, tier_queue, obs_mask), trace)
+
+
+# -------------------------------------------------------------- slow update
+def mega_slow_step(state: MegaFleetState, k_slow: jax.Array,
+                   cfg: generative.AifConfig) -> MegaFleetState:
+    """One slow boundary: replay-sample, learn A exactly, bump B slot
+    weights, refresh the cache.
+
+    The replayed index draws are the legacy per-router
+    ``randint(key, (batch,), 0, max(size, 1))`` bit-for-bit (slot == tick,
+    so the legacy ``idx % capacity`` is the identity here).  The A update is
+    the legacy einsum on the gathered slots; the B update reduces to a
+    scatter-add on ``wcount`` — the dense (R, A, S, S) accumulate happens
+    implicitly, forever.
+    """
+    topo = cfg.topology
+    slots = state.slots
+    r, j = slots.action.shape
+    batch = cfg.replay_batch
+    size = jnp.minimum(state.t, j)                               # == t
+    idx = jax.vmap(
+        lambda k, n: jax.random.randint(k, (batch,), 0,
+                                        jnp.maximum(n, 1)))(k_slow, size)
+    valid = ((size > 0).astype(jnp.float32)[:, None]
+             * jnp.ones((1, batch), jnp.float32))                # (R, batch)
+
+    # exact legacy observation-model update on the gathered slots
+    qn_b = jnp.take_along_axis(slots.q_next.astype(jnp.float32),
+                               idx[..., None], axis=1)
+    ob_b = jnp.take_along_axis(slots.obs_bins, idx[..., None], axis=1)
+    om_b = jnp.take_along_axis(slots.obs_mask, idx[..., None], axis=1)
+    onehot = spaces.one_hot_observation(ob_b, topo.max_bins)     # (R,n,M,NB)
+    wgt = onehot * valid[..., None, None] * om_b[..., None]
+    a_counts = state.a_counts + cfg.alpha_a * jnp.einsum(
+        "rnmb,rns->rmbs", wgt, qn_b)
+
+    # the whole B update: count how often each slot was replayed
+    wcount = slots.wcount.at[jnp.arange(r)[:, None], idx].add(valid)
+    slots = slots._replace(wcount=wcount)
+    return state._replace(a_counts=a_counts, slots=slots,
+                          cache=_refresh_cache(a_counts, slots, cfg))
+
+
+# ---------------------------------------------------------------- densify
+def to_agent_state(state: MegaFleetState,
+                   cfg: generative.AifConfig) -> agent_mod.AgentState:
+    """Densify the factored carry into a legacy (R,)-batched AgentState.
+
+    Materializes the (R, A, S, S) transition counts and the replay buffer —
+    expensive by design (this is exactly the memory traffic the factored
+    path exists to avoid); intended for checkpoint interop, drill-down and
+    parity tests, not the hot loop.
+    """
+    topo = cfg.topology
+    slots = state.slots
+    r, j = slots.action.shape
+    s, a_n = topo.n_states, cfg.n_actions
+    qp = slots.q_prev.astype(jnp.float32)
+    qn = slots.q_next.astype(jnp.float32)
+    eye = jnp.eye(s, dtype=jnp.float32)
+    b0 = cfg.b_prior_uniform / s + cfg.b_prior_sticky * eye
+    coefact = state.cache.coefact                                 # (R, J, A)
+    # one action at a time keeps the peak temp at (R, J, S) not (R, A, S, S)
+    b_counts = jnp.stack(
+        [b0 + jnp.einsum("rj,rjt,rjs->rts", coefact[:, :, a], qn, qp)
+         for a in range(a_n)], axis=1)
+
+    cap = cfg.replay_capacity
+    def pad(arr, fill):
+        tail = jnp.full((r, cap - j) + arr.shape[2:], fill, arr.dtype)
+        return jnp.concatenate([arr.astype(tail.dtype), tail], axis=1)
+
+    replay = learning.ReplayBuffer(
+        q_prev=pad(qp, 0.0), q_next=pad(qn, 0.0),
+        obs_bins=pad(slots.obs_bins, 0), obs_mask=pad(slots.obs_mask, 1.0),
+        action=pad(slots.action, 0),
+        dt_since_change=pad(slots.dt_since_change, 0.0),
+        cursor=jnp.minimum(state.t, j) % cap,
+        size=jnp.minimum(state.t, cap),
+    )
+    c_nom = generative.nominal_c_log(cfg)
+    c_uns = generative.unstable_c_log(cfg)
+    model = generative.GenerativeModel(
+        a_counts=state.a_counts,
+        b_counts=b_counts,
+        c_log=jnp.where(state.unstable[:, None, None], c_uns, c_nom),
+        d_prior=jnp.broadcast_to(jnp.full((s,), 1.0 / s, jnp.float32),
+                                 (r, s)),
+    )
+    cache = jax.vmap(lambda m: generative.derive_cache(m, topo))(model)
+    return agent_mod.AgentState(
+        model=model, cache=cache, belief=state.belief, replay=replay,
+        prev_action=state.prev_action,
+        dt_since_change=state.dt_since_change,
+        error_ema=state.error_ema, unstable=state.unstable, t=state.t)

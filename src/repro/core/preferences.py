@@ -35,3 +35,20 @@ def adapt_preferences(error_ema: jnp.ndarray,
     c_uns = generative.unstable_c_log(cfg)
     cond = unstable.reshape(unstable.shape + (1, 1))   # broadcast over (M, B)
     return jnp.where(cond, c_uns, c_nom), unstable
+
+
+def preference_log_tables(cfg: generative.AifConfig
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Both masked log-σ(C) tables, precomputed: (nominal, unstable).
+
+    The fast loop only ever evaluates ``masked_log_c`` on one of the two
+    preference tables :func:`adapt_preferences` switches between, and the
+    switch selects a *whole* (M, max_bins) table per agent — so
+    ``masked_log_c(where(unstable, c_uns, c_nom))`` equals
+    ``where(unstable, masked_log_c(c_uns), masked_log_c(c_nom))`` exactly.
+    The whole-window engine path exploits this to hoist the per-tick
+    log-softmax out of the rollout entirely.
+    """
+    topo = cfg.topology
+    return (generative.masked_log_c(generative.nominal_c_log(cfg), topo),
+            generative.masked_log_c(generative.unstable_c_log(cfg), topo))

@@ -523,6 +523,26 @@ def run_fluid(params: FluidParams,
     return jax.lax.scan(step, init_fluid_state(params), xs)
 
 
+class FluidIngredients(NamedTuple):
+    """Everything :func:`make_env_step` closes over, as data.
+
+    The whole-window (megakernel) engine path cannot use the per-tick
+    ``env_step`` closure — it advances a full slow period per launch and
+    needs the schedules as slices, not one-row lookups.  ``env_step.fluid``
+    carries these ingredients so that path drives
+    :func:`fluid_window_step` itself with *exactly* the same world
+    (params, schedules, mask semantics) as the per-tick engine.
+    """
+
+    params: FluidParams
+    arrival_rate: jnp.ndarray          # (T, R)
+    hazard_scale: jnp.ndarray          # (T, R, K)
+    dt: float
+    scrape_every: int
+    obs_valid: jnp.ndarray | None      # (T, R, M) or None
+    restart_blackout: bool
+
+
 def make_env_step(params: FluidParams,
                   arrival_rate: jnp.ndarray,
                   hazard_scale: jnp.ndarray,
@@ -568,6 +588,13 @@ def make_env_step(params: FluidParams,
 
     env_step.emits_mask = obs_valid is not None or restart_blackout
     env_step.supports_shard = True
+    # Whole-window consumers (the megakernel engine path) re-dispatch
+    # fluid_window_step over a whole slow period per launch instead of
+    # calling the per-tick closure — hand them the raw ingredients.
+    env_step.fluid = FluidIngredients(
+        params=params, arrival_rate=arrival_rate, hazard_scale=hazard_scale,
+        dt=dt, scrape_every=scrape_every, obs_valid=obs_valid,
+        restart_blackout=restart_blackout)
     return env_step
 
 

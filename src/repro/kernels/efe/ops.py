@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import generative, policies
+from repro.core import mega as mega_core
 from repro.kernels.efe.efe import (belief_efe_fleet_pallas, default_block_r,
                                    efe_fleet_pallas)
 from repro.kernels.efe.ref import (belief_efe_fleet_ref, belief_posterior_ref,
@@ -181,3 +182,52 @@ def fleet_efe(a_counts: jnp.ndarray, b_counts: jnp.ndarray,
                             obs_mask=obs_mask,
                             use_pallas=use_pallas, interpret=interpret,
                             block_r=block_r)
+
+
+def mega_window(state, est, obs_carry, params,
+                arrival: jnp.ndarray, hazard: jnp.ndarray,
+                obs_valid: jnp.ndarray | None,
+                k_env: jnp.ndarray, gumbel: jnp.ndarray, t0: jnp.ndarray, *,
+                cfg: generative.AifConfig, disc, util_edges, util_period: int,
+                dt: float, scrape_every: int, restart_blackout: bool,
+                emits_mask: bool, use_pallas: bool = False,
+                interpret: bool | None = None):
+    """One whole-window launch: W fused fast ticks of the mega engine path.
+
+    Dispatch twin of :func:`fleet_belief_efe` at window granularity — the
+    XLA oracle is :func:`repro.core.mega.mega_window` (the factored
+    belief→EFE→sample→env tick, Python-unrolled over the window); with
+    ``use_pallas`` the window runs as the Pallas megakernel
+    (:mod:`repro.kernels.efe.mega`), which keeps the posterior, factored
+    transition cache, preference tables and env carry resident in VMEM for
+    all W ticks.  Inputs/outputs are identical either way:
+
+      state:     :class:`repro.core.mega.MegaFleetState`.
+      est:       batched env :class:`~repro.envsim.batched.FluidState`.
+      obs_carry: (raw_obs, tier_util, tier_up, tier_queue, obs_mask) tuple
+        carried across windows (the *published* telemetry of the previous
+        tick, which this window's first belief update consumes).
+      arrival/hazard/obs_valid: (W, ...) schedule slices for this window.
+      k_env:     (W,) per-tick env keys; gumbel: (W, R, A) pre-drawn policy
+        noise (in-kernel categorical = argmax(logp + gumbel), bitwise equal
+        to ``jax.random.categorical``).
+      t0:        global tick index of the window's first tick (traced ok).
+
+    Returns ``(state, est, obs_carry, ys)`` with ys a per-tick trace tuple
+    of (action, weights, raw_obs, unstable, obs_frac, env_window).
+    """
+    if use_pallas:
+        from repro.kernels.efe import mega as mega_kernel
+        if interpret is None:
+            interpret = _auto_interpret()
+        return mega_kernel.mega_window_pallas(
+            state, est, obs_carry, params, arrival, hazard, obs_valid,
+            k_env, gumbel, t0, cfg=cfg, disc=disc, util_edges=util_edges,
+            util_period=util_period, dt=dt, scrape_every=scrape_every,
+            restart_blackout=restart_blackout, emits_mask=emits_mask,
+            interpret=interpret)
+    return mega_core.mega_window(
+        state, est, obs_carry, params, arrival, hazard, obs_valid,
+        k_env, gumbel, t0, cfg=cfg, disc=disc, util_edges=util_edges,
+        util_period=util_period, dt=dt, scrape_every=scrape_every,
+        restart_blackout=restart_blackout, emits_mask=emits_mask)

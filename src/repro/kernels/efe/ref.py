@@ -84,3 +84,15 @@ def belief_efe_fleet_ref(b_prev: jnp.ndarray, q_prev: jnp.ndarray,
     """
     q = belief_posterior_ref(b_prev, q_prev, loglik)
     return efe_fleet_ref(b_norm, q, a_norm, logc, amb, cost, obs_mask), q
+
+
+def mega_window_ref(*args, **kwargs):
+    """XLA oracle twin of the whole-window megakernel.
+
+    Thin alias of :func:`repro.core.mega.mega_window` so the kernel package
+    exposes the oracle next to the Pallas entry point, mirroring the
+    ``efe_fleet_pallas`` / ``efe_fleet_ref`` pairing.  Imported lazily to
+    keep this module free of core-package imports at import time.
+    """
+    from repro.core import mega as mega_core
+    return mega_core.mega_window(*args, **kwargs)

@@ -1,0 +1,181 @@
+"""Whole-window megakernel path: PRNG hoisting contracts, engine parity
+(clean + masked telemetry, odd R, dwell/slow boundaries, K sweeps), mixed
+precision, carry densification, Pallas interpret parity and guards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import engine
+from repro.api.aif import AifRouter
+from repro.api.experiment import Experiment, run
+from repro.core import generative
+from repro.core import mega as mega_core
+from repro.core.topology import Topology, default_topology, five_tier_topology
+from repro.kernels.attention.ops import on_tpu
+
+KEY = jax.random.key(0)
+
+TWO_TIER = Topology(tier_names=("edge", "cloud"),
+                    tier_classes=("edge-medium", "server"))
+
+
+def _pair(scenario="paper-burst", t=25, r=6, topology="paper-3tier",
+          seed=0, **mega_kw):
+    """(legacy fused run, mega run) on the same world."""
+    base = dict(router="aif", fused=True, scenario=scenario, n_cells=r,
+                n_windows=t, seed=seed, topology=topology)
+    return (run(Experiment(**base)),
+            run(Experiment(**base, mega=True, **mega_kw)))
+
+
+def _assert_rollouts_match(r1, r2, atol=1e-4):
+    a1, a2 = np.asarray(r1.trace.actions), np.asarray(r2.trace.actions)
+    np.testing.assert_array_equal(a1, a2)
+    for name in ("routing_weights", "raw_obs", "unstable", "obs_frac"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(r1.trace, name), np.float64),
+            np.asarray(getattr(r2.trace, name), np.float64),
+            atol=atol, err_msg=f"trace.{name}")
+    for f in r1.trace.env._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(r1.trace.env, f), np.float64),
+            np.asarray(getattr(r2.trace.env, f), np.float64),
+            atol=atol, err_msg=f"env.{f}")
+    assert np.all(np.isfinite(r2.fluid.n_requests))
+
+
+# ------------------------------------------------------------ PRNG contracts
+def test_key_block_replays_chain():
+    """The hoisted per-window key block is the per-tick split chain verbatim
+    (satellite: pre-split key blocks must not change a single draw)."""
+    n, r = 7, 5
+    k = jax.random.key(42)
+    kk, naive = k, []
+    for _ in range(n):
+        kk, k_env, k_agents = jax.random.split(kk, 3)
+        ks = jax.vmap(jax.random.split)(jax.random.split(k_agents, r))
+        naive.append((k_env, ks[:, 0], ks[:, 1]))
+    k_out, (k_env_b, k_fast_b, k_slow_b) = engine._key_block(k, n, r)
+    np.testing.assert_array_equal(jax.random.key_data(k_out),
+                                  jax.random.key_data(kk))
+    for w, (k_env, k_fast, k_slow) in enumerate(naive):
+        np.testing.assert_array_equal(jax.random.key_data(k_env_b[w]),
+                                      jax.random.key_data(k_env))
+        np.testing.assert_array_equal(jax.random.key_data(k_fast_b[w]),
+                                      jax.random.key_data(k_fast))
+        np.testing.assert_array_equal(jax.random.key_data(k_slow_b[w]),
+                                      jax.random.key_data(k_slow))
+
+
+def test_categorical_matches_gumbel_argmax():
+    """In-window sampling contract: argmax(log p + gumbel(key)) is bitwise
+    ``jax.random.categorical(key, log p)`` (the legacy sampler)."""
+    a_n = 20
+    keys = jax.random.split(KEY, 64)
+    probs = jax.random.dirichlet(jax.random.key(3), jnp.ones(a_n), (64,))
+    logp = jnp.log(jnp.maximum(probs, 1e-30))
+    legacy = jax.vmap(jax.random.categorical)(keys, logp)
+    gum = jax.vmap(lambda k: jax.random.gumbel(k, (a_n,)))(keys)
+    mega = jnp.argmax(logp + gum, axis=-1)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(mega))
+
+
+# ------------------------------------------------------- engine-level parity
+def test_mega_matches_legacy_clean():
+    """Oracle megakernel vs per-tick engine: bit-equal actions, <=1e-4
+    telemetry/env parity on the clean-scenario paper world."""
+    _assert_rollouts_match(*_pair())
+
+
+def test_mega_matches_legacy_masked():
+    """Masked-telemetry scenario (PR-4 path): stale-hold, obs_mask and the
+    gated error EMA all survive the window fusion."""
+    r1, r2 = _pair(scenario="flaky-telemetry", t=25, r=6)
+    assert np.asarray(r1.trace.obs_frac)[1:].min() < 1.0  # mask exercised
+    _assert_rollouts_match(r1, r2)
+
+
+def test_mega_blackout_scenario():
+    """restart_blackout coupling (telemetry dies with the pods)."""
+    _assert_rollouts_match(*_pair(scenario="scrape-blackout", t=25, r=5))
+
+
+@pytest.mark.parametrize("topo", [TWO_TIER, five_tier_topology()],
+                         ids=["k2", "k5"])
+def test_mega_parity_across_topologies(topo):
+    """Parity holds off the paper's K=3: K=2 (no pairwise policies) and the
+    K=5 continuum (odd util factors, 37 actions, |S|=128)."""
+    _assert_rollouts_match(*_pair(t=15, r=4, topology=topo))
+
+
+def test_mega_odd_r_and_boundaries():
+    """Odd fleet size + horizon not a multiple of the period (T=23 ends with
+    a 3-tick remainder window: slow boundaries at 10/20, dwell-held tail)."""
+    _assert_rollouts_match(*_pair(t=23, r=5))
+
+
+def test_mega_bf16_slots_bounded_drift():
+    """bfloat16 slot storage: same world stays finite and close to the f32
+    engine at a short horizon (fp32 accumulate bounds the drift)."""
+    r1, r2 = _pair(t=20, r=4, mega_slot_dtype="bfloat16")
+    assert np.all(np.isfinite(np.asarray(r2.trace.raw_obs)))
+    belief = np.asarray(r2.final_carry.belief)
+    np.testing.assert_allclose(belief.sum(-1), 1.0, atol=1e-3)
+    assert abs(r1.success_pct - r2.success_pct) < 10.0
+
+
+def test_to_agent_state_roundtrip():
+    """Densifying the factored mega carry reproduces the legacy AgentState
+    (belief, clocks, and the never-materialized B pseudo-counts)."""
+    r1, r2 = _pair(t=20, r=4)
+    dense = mega_core.to_agent_state(
+        r2.final_carry, AifRouter(fused=True, mega=True).cfg)
+    legacy = r1.final_carry
+    for f in ("belief", "error_ema", "dt_since_change"):
+        np.testing.assert_allclose(np.asarray(getattr(legacy, f)),
+                                   np.asarray(getattr(dense, f)), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(legacy.prev_action),
+                                  np.asarray(dense.prev_action))
+    np.testing.assert_array_equal(np.asarray(legacy.t), np.asarray(dense.t))
+    np.testing.assert_allclose(np.asarray(legacy.model.a_counts),
+                               np.asarray(dense.model.a_counts), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(legacy.model.b_counts),
+                               np.asarray(dense.model.b_counts), atol=1e-4)
+
+
+# ------------------------------------------------------------------- guards
+def test_mega_horizon_exceeds_capacity_raises():
+    cfg = generative.AifConfig(topology=default_topology(),
+                               replay_capacity=16)
+    with pytest.raises(ValueError, match="replay_capacity"):
+        run(Experiment(router=AifRouter(cfg=cfg, fused=True, mega=True),
+                       n_cells=2, n_windows=20))
+
+
+def test_mega_sharded_raises():
+    with pytest.raises(ValueError, match="mega"):
+        run(Experiment(router="aif", fused=True, mega=True, shard="auto",
+                       n_cells=2, n_windows=10))
+
+
+# ---------------------------------------------------------- Pallas megakernel
+def test_mega_pallas_interpret_matches_oracle():
+    """Interpret-mode Pallas megakernel vs the XLA oracle twin: bit-equal
+    actions, <=1e-4 everywhere (CI smoke for the kernel body)."""
+    base = dict(router="aif", fused=True, mega=True, n_cells=2,
+                n_windows=12)
+    r1 = run(Experiment(**base))
+    r2 = run(Experiment(**base, use_pallas=True))
+    _assert_rollouts_match(r1, r2)
+
+
+@pytest.mark.skipif(not on_tpu(), reason="compiled Pallas megakernel needs "
+                    "a TPU backend (interpret-only on CPU)")
+def test_mega_pallas_compiled_matches_oracle():
+    """Accelerator-gated non-interpret parity (scaffolding for TPU CI)."""
+    base = dict(router="aif", fused=True, mega=True, n_cells=8,
+                n_windows=20)
+    r1 = run(Experiment(**base))
+    r2 = run(Experiment(**base, use_pallas=True))
+    _assert_rollouts_match(r1, r2)
