@@ -18,13 +18,18 @@ comparison.  A slower runner then shifts *all* rows together and passes,
 while a fleet-loop regression shows up against the same-run anchor.  Pass
 ``--no-calibrate`` for raw absolute comparison.
 
-Two structural checks ride on the *current* run alone (machine-invariant
+Three structural checks ride on the *current* run alone (machine-invariant
 ratios, no baseline needed):
 
 * megakernel speedup floor — whenever the run measured ``fleet_mega`` and
   ``fleet_fused`` at the same (R, T, scenario), the megakernel must hold
   at least ``--mega-speedup-floor`` × (default 10, the PR-7 acceptance
   bar) over the per-tick fused loop; dropping below fails the gate.
+* watchdog clean-path overhead — whenever the run measured ``fleet_fused``
+  and its watchdog-free ``fleet_fused_nowd`` twin at the same (R, T,
+  scenario), the watchdog row must stay within
+  ``--watchdog-overhead-max`` (default 10 %) of the twin's throughput;
+  exceeding it fails the gate.
 * sharded weak-scaling — per-device throughput across the
   ``fleet_sharded`` device curve; decaying below
   ``--shard-efficiency-floor`` (default 0.7) of the 1-device rate emits a
@@ -84,6 +89,36 @@ def check_mega_speedup(cur: dict[tuple, dict], floor: float) -> bool:
     return failed
 
 
+def check_watchdog_overhead(cur: dict[tuple, dict], max_frac: float) -> bool:
+    """Clean-path watchdog overhead gate on the current run's own rows.
+
+    Whenever the run measured ``fleet_fused`` (watchdog on — the default)
+    and its ``fleet_fused_nowd`` twin at the same (R, T, scenario), the
+    watchdog row must stay within ``max_frac`` of the watchdog-free
+    throughput: on a healthy fleet the per-tick check is a handful of
+    reductions and a never-taken ``cond`` branch, so anything past ~10 %
+    means the quarantine path leaked into the hot loop.  Same-run pair —
+    machine-invariant, no calibration.  Returns True on failure.
+    """
+    failed = False
+    nowd = {(r, t, s): e for (name, r, t, s), e in cur.items()
+            if name == "fleet_fused_nowd"}
+    for (name, r, t, s), e in sorted(cur.items(), key=str):
+        if name != "fleet_fused" or (r, t, s) not in nowd:
+            continue
+        free = nowd[(r, t, s)]["cell_windows_per_s"]
+        wd = e["cell_windows_per_s"]
+        overhead = free / wd - 1.0 if wd > 0 else float("inf")
+        ok = overhead <= max_frac
+        print(f"{'OK' if ok else 'REGRESSION':>10}  watchdog-overhead "
+              f"r={r:<5} t={t:<5} scenario={s or '-':<16} "
+              f"nowd={free:>12.1f} wd={wd:>12.1f} "
+              f"({100 * overhead:+.1f}%, max {100 * max_frac:.0f}%)")
+        if not ok:
+            failed = True
+    return failed
+
+
 def check_shard_scaling(cur: dict[tuple, dict], floor: float) -> None:
     """Warn when the weak-scaling curve's per-device throughput decays.
 
@@ -132,6 +167,10 @@ def main() -> int:
     ap.add_argument("--shard-efficiency-floor", type=float, default=0.70,
                     help="per-device fleet_sharded efficiency below which "
                          "a weak-scaling warning is annotated (0 disables)")
+    ap.add_argument("--watchdog-overhead-max", type=float, default=0.10,
+                    help="max fractional clean-path slowdown of the "
+                         "watchdog fleet_fused row vs its fleet_fused_nowd "
+                         "twin (same-run pair; 0 disables)")
     args = ap.parse_args()
 
     # Carried rows are stale copies merged forward by fleet_bench, possibly
@@ -145,6 +184,8 @@ def main() -> int:
     # ratios — they run even when no baseline entry matches)
     mega_failed = (args.mega_speedup_floor > 0
                    and check_mega_speedup(cur, args.mega_speedup_floor))
+    wd_failed = (args.watchdog_overhead_max > 0
+                 and check_watchdog_overhead(cur, args.watchdog_overhead_max))
     if args.shard_efficiency_floor > 0:
         check_shard_scaling(cur, args.shard_efficiency_floor)
 
@@ -152,7 +193,7 @@ def main() -> int:
     if not matched:
         print("no matching entries between baseline and current run; "
               "nothing to gate")
-        return 1 if mega_failed else 0
+        return 1 if (mega_failed or wd_failed) else 0
 
     scale = 1.0
     anchor = None
@@ -193,7 +234,7 @@ def main() -> int:
               f"scenario={key[3] or '-'} (no baseline entry; not gated)")
         print(f"::warning::new bench row {key} has no baseline entry; "
               f"commit the regenerated BENCH_fleet.json to gate it")
-    if failed or mega_failed:
+    if failed or mega_failed or wd_failed:
         if failed:
             print(f"\nFAIL: cell-windows/s dropped more than "
                   f"{100 * args.threshold:.0f}% on at least one entry "
@@ -202,6 +243,10 @@ def main() -> int:
             print(f"\nFAIL: fleet_mega fell below the "
                   f"{args.mega_speedup_floor:.1f}x speedup floor over "
                   f"fleet_fused")
+        if wd_failed:
+            print(f"\nFAIL: the watchdog fleet_fused row runs more than "
+                  f"{100 * args.watchdog_overhead_max:.0f}% slower than "
+                  f"its fleet_fused_nowd twin")
         return 1
     print("\nperf smoke OK")
     return 0

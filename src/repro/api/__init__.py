@@ -10,7 +10,12 @@ Three layers, smallest import first:
 * **Engine** (:mod:`repro.api.engine`) — :func:`rollout`: one on-device
   ``lax.scan`` closed loop over any Router and any batched environment;
   :func:`sharded_rollout` runs the same loop under ``shard_map`` over a
-  cell-axis device mesh (:class:`~repro.api.shard.ShardSpec`).
+  cell-axis device mesh (:class:`~repro.api.shard.ShardSpec`).  The
+  resumable variants (:func:`resumable_rollout`,
+  :func:`sharded_resumable_rollout` + :func:`sharded_finalize`) split a
+  run into boundary-aligned chunks whose concatenation is bit-identical
+  to the uninterrupted program — the substrate for
+  ``Experiment(checkpoint_every=..., resume_from=...)``.
 * **Experiments** (:mod:`repro.api.experiment`) — declarative
   :class:`Experiment` specs, :func:`run` (owns all config assembly) and
   :func:`compare` (the paper's Table-1 protocol at fleet scale, markdown /
@@ -28,7 +33,8 @@ Mega-fleet quickstart (device-sharded, O(R/devices) trace memory)::
                            n_windows=50, shard="auto"))
 """
 from repro.api.aif import AifRouter
-from repro.api.engine import rollout, sharded_rollout
+from repro.api.engine import (resumable_rollout, rollout, sharded_finalize,
+                              sharded_resumable_rollout, sharded_rollout)
 from repro.api.experiment import (ROUTERS, TABLE1_ROUTERS, Comparison,
                                   Experiment, FleetMetricsReducer, RunResult,
                                   compare, run, table1_grid)
@@ -43,6 +49,7 @@ __all__ = [
     "FleetMetricsReducer", "LeastLoadedRouter", "ROUTERS",
     "RoundRobinRouter", "Router", "RouterObs", "RunResult", "ShardSpec",
     "TABLE1_ROUTERS", "ThompsonRouter", "TickInfo", "UcbRouter",
-    "UniformRouter", "compare", "rollout", "run", "sharded_rollout",
+    "UniformRouter", "compare", "resumable_rollout", "rollout", "run",
+    "sharded_finalize", "sharded_resumable_rollout", "sharded_rollout",
     "table1_grid",
 ]

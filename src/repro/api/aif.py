@@ -164,21 +164,44 @@ class AifRouter(Router):
         err_ix = topo.modalities.index("error")   # pinned by __post_init__
         return obs_bins, util_bins, util_valid, obs.raw_obs[:, err_ix]
 
+    def _watchdog(self, carry):
+        """Quarantine-and-reinit diverged cells on the incoming carry.
+
+        The check runs *before* the tick so a poisoned cell is healed before
+        its state flows into this tick's belief/EFE math; the ``lax.cond``
+        identity branch keeps a healthy fleet's program bit-identical to
+        ``cfg.watchdog=False``.  Returns (carry, (R,) float 0/1 events).
+        """
+        bad = fleet_mod.fleet_watchdog_bad(carry)
+        carry = jax.lax.cond(
+            jnp.any(bad),
+            lambda c: fleet_mod.fleet_quarantine(c, bad, self.cfg),
+            lambda c: c, carry)
+        return carry, bad.astype(jnp.float32)
+
     def step(self, carry, obs, obs_mask, keys):
+        wd = None
+        if self.cfg.watchdog:
+            carry, wd = self._watchdog(carry)
         obs_bins, util_bins, util_valid, raw_err = self._observe(obs)
         carry, info = fleet_mod.fleet_fast_step(
             carry, obs_bins, raw_err, keys, self.cfg, util_bins, util_valid,
             obs_mask, fused=self.fused, use_pallas=self.use_pallas)
         return carry, info.routing_weights, TickInfo(action=info.action,
-                                                     unstable=info.unstable)
+                                                     unstable=info.unstable,
+                                                     watchdog=wd)
 
     def light_step(self, carry, obs, obs_mask):
+        wd = None
+        if self.cfg.watchdog:
+            carry, wd = self._watchdog(carry)
         obs_bins, util_bins, util_valid, raw_err = self._observe(obs)
         carry, info = fleet_mod.fleet_light_step(
             carry, obs_bins, raw_err, self.cfg, util_bins, util_valid,
             obs_mask, fused=self.fused)
         return carry, info.routing_weights, TickInfo(action=info.action,
-                                                     unstable=info.unstable)
+                                                     unstable=info.unstable,
+                                                     watchdog=wd)
 
     def slow_step(self, carry, keys):
         return fleet_mod.fleet_slow_step(carry, keys, self.cfg)

@@ -84,8 +84,10 @@ def rollout(router: Router,
     ``carry`` and ``env_state`` are donated — reuse the returned states.
     """
     if getattr(router, "mega", False):
-        return _mega_rollout(router, carry, env_state, env_step, n_steps,
-                             key, obs_masked=obs_masked, t0=t0)
+        state, est, trace, _ = _mega_rollout(
+            router, carry, env_state, env_step, n_steps, key,
+            obs_masked=obs_masked, t0=t0)
+        return state, est, trace
     period = max(int(router.period), 1)
     clock_phase = (int(t0) % period if t0 is not None
                    else router.clock_phase(carry))
@@ -152,10 +154,37 @@ def _rollout_impl(carry0,
                   router: Router,
                   obs_masked: bool = False,
                   clock_phase: int | None = 0):
-    carry, est, trace, _ = _rollout_core(
+    carry, trace = _rollout_core(
         carry0, env_state, env_step, n_steps, key, router=router,
         obs_masked=obs_masked, clock_phase=clock_phase)
-    return carry, est, trace
+    return carry[0], carry[1], trace
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "env_step", "n_steps",
+                                    "obs_masked", "clock_phase"),
+                   donate_argnames=("carry0", "env_state"))
+def _resumable_impl(carry0,
+                    env_state,
+                    obs_init,
+                    t_begin,
+                    env_step: Callable,
+                    n_steps: int,
+                    key: jax.Array,
+                    *,
+                    router: Router,
+                    obs_masked: bool = False,
+                    clock_phase: int | None = 0):
+    """The chunked twin of :func:`_rollout_impl`: traced ``t_begin`` (so
+    equal-length chunks share one compilation) plus the full telemetry
+    carry in and out.  The extra snapshot output is
+    ``(raw_obs, tier_util, tier_up, tier_queue, obs_mask, chain_key)``."""
+    carry, trace = _rollout_core(
+        carry0, env_state, env_step, n_steps, key, router=router,
+        obs_masked=obs_masked, clock_phase=clock_phase,
+        t_begin=t_begin, obs_init=obs_init)
+    snap = (carry[2], carry[3], carry[4], carry[5], carry[6], carry[7])
+    return carry[0], carry[1], trace, snap
 
 
 def _rollout_core(carry0,
@@ -169,7 +198,9 @@ def _rollout_core(carry0,
                   clock_phase: int | None = 0,
                   rows: tuple | None = None,
                   reducer=None,
-                  stats0=()):
+                  stats0=(),
+                  t_begin=None,
+                  obs_init=None):
     """Shared scan core of the (un)sharded rollouts.
 
     ``rows = (row_start, n_true, n_pad)`` switches the per-cell key split to
@@ -179,7 +210,18 @@ def _rollout_core(carry0,
     output is then an empty pytree.  With both at their defaults this is
     exactly the pre-shard engine program, bit for bit.
 
-    Returns (router carry, env state, trace, stats).
+    Resumable chunks: ``t_begin`` (traced scalar, None = the literal fresh
+    program) offsets every window index — schedules, scrape clock and
+    router ``t_idx`` all see global time — and ``obs_init`` replaces the
+    fresh zeros/ones telemetry carry with a snapshot's
+    ``(raw_obs, tier_util, tier_up, tier_queue, obs_mask)``.  Because the
+    per-tick key chain folds forward from ``key`` and the slow schedule is
+    phase-aligned by the caller, a chunked run replays the uninterrupted
+    op sequence exactly.
+
+    Returns (full scan carry, trace) — carry[0] router state, carry[1] env
+    state, carry[-1] reducer stats, carry[2:7] the telemetry carry,
+    carry[7] the advanced chain key.
     """
     r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     k_tiers = router.n_tiers
@@ -217,7 +259,8 @@ def _rollout_core(carry0,
                         raw_obs=raw_obs,
                         unstable=tinfo.unstable,
                         obs_frac=jnp.mean(obs_mask, axis=-1),
-                        env=win)
+                        env=win,
+                        watchdog=tinfo.watchdog)
         if reducer is not None:
             stats = reducer.update(stats, t_idx, ys)
             ys = ()
@@ -340,11 +383,18 @@ def _rollout_core(carry0,
         return (rst, est, raw_obs, tier_util, tier_up, tier_queue, obs_mask,
                 k, k_slow, stats)
 
-    obs0 = jnp.zeros((r, m), jnp.float32)
-    util0 = jnp.zeros((r, k_tiers), jnp.float32)
-    up0 = jnp.ones((r, k_tiers), jnp.float32)
-    queue0 = jnp.zeros((r, k_tiers), jnp.float32)
-    mask0 = jnp.ones((r, m), jnp.float32)
+    if obs_init is None:
+        obs0 = jnp.zeros((r, m), jnp.float32)
+        util0 = jnp.zeros((r, k_tiers), jnp.float32)
+        up0 = jnp.ones((r, k_tiers), jnp.float32)
+        queue0 = jnp.zeros((r, k_tiers), jnp.float32)
+        mask0 = jnp.ones((r, m), jnp.float32)
+    else:
+        obs0, util0, up0, queue0, mask0 = obs_init
+    # the fresh/resumed first window index; kept a Python literal on the
+    # fresh path so the pre-resume program is byte-identical
+    t00 = (jnp.asarray(0, jnp.int32) if t_begin is None
+           else jnp.asarray(t_begin, jnp.int32))
     k_slow0 = jax.random.split(key, r)   # dummy; overwritten every tick
     carry = (carry0, env_state, obs0, util0, up0, queue0, mask0, key, k_slow0,
              stats0)
@@ -354,9 +404,8 @@ def _rollout_core(carry0,
         # Memoryless-of-slow-cadence routers (all the baselines): one flat
         # (dwell-aware) scan, no slow boundaries to respect.
         phase = (clock_phase or 0) % dwell
-        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), n_steps,
-                              phase=phase)
-        return carry[0], carry[1], ys, carry[-1]
+        carry, ys = run_ticks(carry, t00, n_steps, phase=phase)
+        return carry, ys
 
     if clock_phase is None:
         # Mixed router clocks: flat per-tick scan, per-router slow gating
@@ -365,15 +414,17 @@ def _rollout_core(carry0,
             c, ys = full_body(c, t_idx)
             return slow_after(c), ys
 
-        carry, ys = jax.lax.scan(
-            safe_body, carry, jnp.arange(n_steps, dtype=jnp.int32))
-        return carry[0], carry[1], ys, carry[-1]
+        ts = jnp.arange(n_steps, dtype=jnp.int32)
+        if t_begin is not None:
+            ts = ts + t00
+        carry, ys = jax.lax.scan(safe_body, carry, ts)
+        return carry, ys
 
     # Lead-in up to the next slow boundary (empty for fresh fleets).
     lead = (-clock_phase) % period
     lead_eff = min(lead, n_steps)
     if lead_eff:
-        carry, ys = run_ticks(carry, jnp.asarray(0, jnp.int32), lead_eff,
+        carry, ys = run_ticks(carry, t00, lead_eff,
                               phase=clock_phase % dwell, hoisted=True)
         traces.append(ys)
         if lead_eff == lead:    # the boundary tick ran -> learn once
@@ -381,8 +432,10 @@ def _rollout_core(carry0,
     n_periods, n_rem = divmod(n_steps - lead_eff, period)
 
     def period_body(carry, p_idx):
-        carry, ys = run_ticks(carry, lead_eff + p_idx * period, period,
-                              hoisted=True)
+        t_start = lead_eff + p_idx * period
+        if t_begin is not None:
+            t_start = t_start + t00
+        carry, ys = run_ticks(carry, t_start, period, hoisted=True)
         return slow_after(carry), ys
 
     if n_periods:
@@ -391,20 +444,21 @@ def _rollout_core(carry0,
         traces.append(jax.tree_util.tree_map(
             lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
     if n_rem or not traces:
-        carry, ys = run_ticks(
-            carry,
-            jnp.asarray(lead_eff + n_periods * period, jnp.int32), n_rem,
-            hoisted=True)
+        t_tail = jnp.asarray(lead_eff + n_periods * period, jnp.int32)
+        if t_begin is not None:
+            t_tail = t_tail + t00
+        carry, ys = run_ticks(carry, t_tail, n_rem, hoisted=True)
         traces.append(ys)
     trace = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *traces)
-    return carry[0], carry[1], trace, carry[-1]
+    return carry, trace
 
 
 # ------------------------------------------------------------ megakernel path
 def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
                   key: jax.Array, *, obs_masked: bool | None,
-                  t0: int | None):
+                  t0: int | None, t_begin: int = 0, state_in=None,
+                  obs_carry=None, n_total: int | None = None):
     """Whole-window engine path (``router.mega``).
 
     One launch per slow period instead of per tick: the router carry is the
@@ -443,23 +497,47 @@ def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
                 "repro.core.mega.to_agent_state first")
     if obs_masked is None:
         obs_masked = bool(getattr(env_step, "emits_mask", False))
-    return _mega_impl(env_state, fl.params, fl.arrival_rate, fl.hazard_scale,
-                      fl.obs_valid, key, router=router, n_steps=n_steps,
-                      obs_masked=obs_masked, dt=fl.dt,
-                      scrape_every=fl.scrape_every,
-                      restart_blackout=fl.restart_blackout)
+    cfg = router.cfg
+    r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    if state_in is None:
+        # slots are indexed by global tick, so a chunked run must size them
+        # to the *whole* horizon up front (n_total), not this chunk's
+        slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
+                      else jnp.float32)
+        state_in = mega_mod.init_mega_state(
+            cfg, r, n_total if n_total is not None else n_steps,
+            slot_dtype=slot_dtype)
+    if obs_carry is None:
+        m, k_tiers = router.n_modalities, router.n_tiers
+        obs_carry = (jnp.zeros((r, m), jnp.float32),
+                     jnp.zeros((r, k_tiers), jnp.float32),
+                     jnp.ones((r, k_tiers), jnp.float32),
+                     jnp.zeros((r, k_tiers), jnp.float32),
+                     jnp.ones((r, m), jnp.float32))
+    state, est, trace, snap = _mega_impl(
+        state_in, env_state, obs_carry, fl.params, fl.arrival_rate,
+        fl.hazard_scale, fl.obs_valid, fl.forced_down, fl.speed, key,
+        jnp.asarray(t_begin, jnp.int32), router=router, n_steps=n_steps,
+        obs_masked=obs_masked, dt=fl.dt, scrape_every=fl.scrape_every,
+        restart_blackout=fl.restart_blackout)
+    return state, est, trace, snap
 
 
 @functools.partial(jax.jit,
                    static_argnames=("router", "n_steps", "obs_masked", "dt",
                                     "scrape_every", "restart_blackout"),
-                   donate_argnames=("env_state",))
-def _mega_impl(env_state,
+                   donate_argnames=("state", "env_state"))
+def _mega_impl(state,
+               env_state,
+               obs_carry,
                params,
                arrival: jnp.ndarray,
                hazard: jnp.ndarray,
                obs_valid: jnp.ndarray | None,
+               forced_down: jnp.ndarray | None,
+               speed: jnp.ndarray | None,
                key: jax.Array,
+               t_begin: jnp.ndarray,
                *,
                router,
                n_steps: int,
@@ -471,15 +549,6 @@ def _mega_impl(env_state,
     r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     a_n = cfg.n_actions
     period = max(int(router.period), 1)
-    slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
-                  else jnp.float32)
-    state = mega_mod.init_mega_state(cfg, r, n_steps, slot_dtype=slot_dtype)
-    m, k_tiers = router.n_modalities, router.n_tiers
-    obs_carry = (jnp.zeros((r, m), jnp.float32),
-                 jnp.zeros((r, k_tiers), jnp.float32),
-                 jnp.ones((r, k_tiers), jnp.float32),
-                 jnp.zeros((r, k_tiers), jnp.float32),
-                 jnp.ones((r, m), jnp.float32))
     statics = dict(cfg=cfg, disc=router.resolved_disc,
                    util_edges=router.resolved_util_edges,
                    util_period=router.util_period, dt=dt,
@@ -497,36 +566,54 @@ def _mega_impl(env_state,
         ov_w = (None if obs_valid is None
                 else jax.lax.dynamic_slice_in_dim(obs_valid, t_start,
                                                   w_ticks))
+        fd_w = (None if forced_down is None
+                else jax.lax.dynamic_slice_in_dim(forced_down, t_start,
+                                                  w_ticks))
+        sp_w = (None if speed is None
+                else jax.lax.dynamic_slice_in_dim(speed, t_start, w_ticks))
         state, est, obs, ys = efe_ops.mega_window(
             state, est, obs, params, arr_w, haz_w, ov_w, k_env, gum,
-            jnp.asarray(t_start, jnp.int32), **statics)
+            jnp.asarray(t_start, jnp.int32), forced_down=fd_w, speed=sp_w,
+            **statics)
         if do_slow:
             # the boundary tick's per-cell slow keys, as in the per-tick
             # engine's slow_after
             state = mega_mod.mega_slow_step(state, k_slow[-1], cfg)
-        return (state, est, obs, k), ys
+        # numerical watchdog at window granularity: quarantine-and-reinit
+        # diverged cells so the next window starts from priors
+        ev = jnp.zeros((w_ticks, r), jnp.float32)
+        if getattr(cfg, "watchdog", False):
+            bad = mega_mod.mega_watchdog_bad(state)
+            state = jax.lax.cond(
+                jnp.any(bad),
+                lambda s: mega_mod.mega_quarantine(s, bad, cfg),
+                lambda s: s, state)
+            ev = ev.at[-1].set(bad.astype(jnp.float32))
+        return (state, est, obs, k), ys + (ev,)
 
     carry = (state, env_state, obs_carry, key)
     n_periods, n_rem = divmod(n_steps, period)
     traces = []
     if n_periods:
         def period_body(c, p_idx):
-            return window(c, p_idx * period, period, do_slow=True)
+            return window(c, t_begin + p_idx * period, period, do_slow=True)
 
         carry, ys = jax.lax.scan(period_body, carry,
                                  jnp.arange(n_periods, dtype=jnp.int32))
         traces.append(jax.tree_util.tree_map(
             lambda x: x.reshape((n_periods * period,) + x.shape[2:]), ys))
     if n_rem:
-        carry, ys = window(carry, n_periods * period, n_rem, do_slow=False)
+        carry, ys = window(carry, t_begin + n_periods * period, n_rem,
+                           do_slow=False)
         traces.append(ys)
     ys = traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *traces)
-    state, est, _, _ = carry
-    actions, weights, raw_obs, unstable, obs_frac, win = ys
-    return state, est, FleetTrace(actions=actions, routing_weights=weights,
-                                  raw_obs=raw_obs, unstable=unstable,
-                                  obs_frac=obs_frac, env=win)
+    state, est, obs, k = carry
+    actions, weights, raw_obs, unstable, obs_frac, win, wd = ys
+    trace = FleetTrace(actions=actions, routing_weights=weights,
+                       raw_obs=raw_obs, unstable=unstable,
+                       obs_frac=obs_frac, env=win, watchdog=wd)
+    return state, est, trace, (obs, k)
 
 
 # ------------------------------------------------------------- device sharding
@@ -635,12 +722,263 @@ def _sharded_impl(env_state,
             return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad))
 
         stats0 = reducer.init(r_local, row0)
-        rc, est2, _, stats = _rollout_core(
+        carry, _ = _rollout_core(
             carry0, est, env_local, n_steps, k, router=router,
             obs_masked=obs_masked, clock_phase=clock_phase,
             rows=(row0, n_cells, r_pad), reducer=reducer, stats0=stats0)
-        return rc, est2, reducer.finalize(stats, axis)
+        return carry[0], carry[1], reducer.finalize(carry[-1], axis)
 
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axis), P()),
                      out_specs=(P(axis), P(axis), P()))(env_state, key)
+
+
+# ------------------------------------------------------- checkpointed chunking
+def _advance_chain_key(key: jax.Array, n: int) -> jax.Array:
+    """The engine's tick-chain key after ``n`` ticks.
+
+    Every engine tick folds the chain forward exactly once
+    (``k = split(k, 3)[0]`` — per-tick and hoisted :func:`_key_block` paths
+    alike), so the chain position is a pure function of (run key, ticks
+    elapsed).  The sharded engine keeps the chain inside ``shard_map`` where
+    it cannot be cheaply returned replicated; this recomputes it host-side
+    for the resume snapshot.
+    """
+    if n <= 0:
+        return key
+
+    def body(k, _):
+        return jax.random.split(k, 3)[0], None
+
+    return jax.lax.scan(body, key, None, length=int(n))[0]
+
+
+def _check_boundary(router: Router, t_begin: int) -> None:
+    period = max(int(router.period), 1)
+    dwell = max(int(router.dwell), 1)
+    if t_begin % period or t_begin % dwell:
+        raise ValueError(
+            f"resumable chunks must start on a slow-period and dwell "
+            f"boundary (t_begin % {period} == 0 and % {dwell} == 0), got "
+            f"t_begin={t_begin} — pick checkpoint_every as a multiple of "
+            "the router's period")
+
+
+def _fresh_obs_carry(r: int, m: int, k_tiers: int):
+    return (jnp.zeros((r, m), jnp.float32),
+            jnp.zeros((r, k_tiers), jnp.float32),
+            jnp.ones((r, k_tiers), jnp.float32),
+            jnp.zeros((r, k_tiers), jnp.float32),
+            jnp.ones((r, m), jnp.float32))
+
+
+def resumable_rollout(router: Router,
+                      carry,
+                      env_state,
+                      env_step: Callable,
+                      n_steps: int,
+                      key: jax.Array,
+                      *,
+                      t_begin: int = 0,
+                      snapshot=None,
+                      obs_masked: bool | None = None,
+                      n_total: int | None = None):
+    """One chunk of a checkpointable rollout: ticks [t_begin, t_begin+n).
+
+    The chunked twin of :func:`rollout` (per-tick and ``mega`` paths).  A
+    fresh run is chunk 0 (``t_begin=0, snapshot=None``); every later chunk
+    passes the previous chunk's returned ``snapshot`` — the opaque
+    telemetry + PRNG-chain carry that, together with the router carry and
+    env state, makes *stop at a boundary + resume* replay the uninterrupted
+    program's op sequence exactly (bit-identical final states; pinned by
+    ``tests/test_chaos.py``).  ``key`` is the *run* key: it seeds chunk 0
+    and is ignored once a snapshot carries the advanced chain key.
+
+    Chunks must start on a slow-period (and dwell) boundary so the fleet
+    clock phase is statically zero.  For ``mega`` routers ``n_total`` (the
+    whole horizon) must be passed on chunk 0 so the replay slots are sized
+    once for the full run; ``carry`` is the previous chunk's
+    :class:`~repro.core.mega.MegaFleetState` (or the fresh dense carry on
+    chunk 0, kept only for the freshness validation).
+
+    Returns (router carry, env state, trace-of-this-chunk, snapshot).
+    """
+    _check_boundary(router, t_begin)
+    if (t_begin == 0) != (snapshot is None):
+        raise ValueError(
+            "chunk 0 (t_begin=0) takes snapshot=None; resumed chunks "
+            "(t_begin>0) need the previous chunk's snapshot")
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
+    if getattr(router, "mega", False):
+        if snapshot is None:
+            obs_c = None
+            state_in = None
+        else:
+            obs_c, key = snapshot
+            state_in = carry
+        state, est, trace, (obs_out, k_out) = _mega_rollout(
+            router, carry if snapshot is None else None, env_state, env_step,
+            n_steps, key, obs_masked=obs_masked, t0=None, t_begin=t_begin,
+            state_in=state_in, obs_carry=obs_c, n_total=n_total)
+        return state, est, trace, (obs_out, k_out)
+    r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    if snapshot is None:
+        # materialized host-side (not the in-core None default) so every
+        # chunk shares one compiled program
+        obs_init = _fresh_obs_carry(r, router.n_modalities, router.n_tiers)
+    else:
+        obs_init = snapshot[:5]
+        key = snapshot[5]
+    rc, est, trace, snap = _resumable_impl(
+        carry, env_state, obs_init, jnp.asarray(t_begin, jnp.int32),
+        env_step, n_steps, key, router=router, obs_masked=obs_masked,
+        clock_phase=0)
+    return rc, est, trace, snap
+
+
+def sharded_resumable_rollout(router: Router,
+                              carry,
+                              env_state,
+                              env_step: Callable,
+                              n_steps: int,
+                              key: jax.Array,
+                              *,
+                              shard,
+                              n_cells: int,
+                              reducer,
+                              t_begin: int = 0,
+                              snapshot=None,
+                              obs_masked: bool | None = None):
+    """One chunk of a checkpointable :func:`sharded_rollout`.
+
+    Same contract as :func:`resumable_rollout`, on the shard_map engine:
+    the snapshot is ``(obs_carry, raw_stats, chain_key)`` with the
+    telemetry carry and the reducer's *unreduced* per-shard accumulator
+    gathered along the (padded) cell axis, and the chain key recomputed
+    host-side (:func:`_advance_chain_key`).  ``carry`` is the gathered
+    router carry (chunk 0 ignores it — each shard inits its own rows).
+    The returned stats are still raw; call :func:`sharded_finalize` on the
+    last chunk's stats to get the psum-reduced metrics of
+    :func:`sharded_rollout`.
+
+    Returns (router carry, env state, raw stats, snapshot).
+    """
+    if not getattr(env_step, "supports_shard", False):
+        raise ValueError(
+            "env_step does not advertise supports_shard=True — sharded "
+            "rollouts need a row_block-aware adapter (see "
+            "repro.envsim.batched.make_env_step)")
+    if getattr(router, "mega", False):
+        raise ValueError("sharded_resumable_rollout does not support "
+                         "mega=True (see sharded_rollout)")
+    _check_boundary(router, t_begin)
+    if (t_begin == 0) != (snapshot is None):
+        raise ValueError(
+            "chunk 0 (t_begin=0) takes snapshot=None; resumed chunks "
+            "(t_begin>0) need the previous chunk's snapshot")
+    r_pad, _ = shard.padded(n_cells)
+    lead = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+    if lead != r_pad:
+        raise ValueError(
+            f"env_state leading dim {lead} != padded fleet size {r_pad}")
+    if obs_masked is None:
+        obs_masked = bool(getattr(env_step, "emits_mask", False))
+    if snapshot is None:
+        carry_in, obs_in, stats_in = (), (), ()
+        chain_key = key
+    else:
+        obs_in, stats_in, chain_key = snapshot
+        carry_in = carry
+    rc, est, obs_out, stats_out = _sharded_chunk_impl(
+        env_state, chain_key, carry_in, obs_in, stats_in,
+        jnp.asarray(t_begin, jnp.int32), router=router, env_step=env_step,
+        n_steps=n_steps, obs_masked=obs_masked, spec=shard, n_cells=n_cells,
+        reducer=reducer, fresh=snapshot is None)
+    k_next = _advance_chain_key(chain_key, n_steps)
+    return rc, est, stats_out, (obs_out, stats_out, k_next)
+
+
+def sharded_finalize(stats, *, shard, reducer):
+    """psum-reduce a chunked run's raw stats (see sharded_resumable_rollout).
+
+    Bit-equal to the reduction :func:`sharded_rollout` applies in-shard at
+    the end of an uninterrupted run.
+    """
+    return _sharded_finalize_impl(stats, spec=shard, reducer=reducer)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "reducer"))
+def _sharded_finalize_impl(stats, *, spec, reducer):
+    mesh = spec.build_mesh()
+    axis = spec.axis
+
+    def body(s):
+        local = jax.tree_util.tree_map(lambda a: a[0], s)
+        return reducer.finalize(local, axis)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(axis),),
+                     out_specs=P())(stats)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "env_step", "n_steps",
+                                    "obs_masked", "spec", "n_cells",
+                                    "reducer", "fresh"),
+                   donate_argnames=("env_state", "carry_in", "obs_in",
+                                    "stats_in"))
+def _sharded_chunk_impl(env_state,
+                        key: jax.Array,
+                        carry_in,
+                        obs_in,
+                        stats_in,
+                        t_begin,
+                        *,
+                        router: Router,
+                        env_step: Callable,
+                        n_steps: int,
+                        obs_masked: bool,
+                        spec,
+                        n_cells: int,
+                        reducer,
+                        fresh: bool):
+    """Chunked twin of :func:`_sharded_impl`.
+
+    ``fresh`` statically selects chunk 0 (in-shard carry/stats init, fresh
+    telemetry; the snapshot pytrees arrive as empty placeholders) vs a
+    resumed chunk.  Stats cross the shard_map boundary with a leading
+    per-shard axis (``a[None]`` out / ``a[0]`` back in) so reducer leaves
+    that lack a cell axis still gather under ``P(axis)``.
+    """
+    mesh = spec.build_mesh()
+    r_pad, r_local = spec.padded(n_cells)
+    axis = spec.axis
+
+    def body(est, k, tb, carry_in, obs_in, stats_in):
+        row0 = jax.lax.axis_index(axis) * r_local
+
+        def env_local(s, w, t, kk):
+            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad))
+
+        if fresh:
+            carry0 = router.init_carry(r_local)
+            stats0 = reducer.init(r_local, row0)
+            obs_init = _fresh_obs_carry(r_local, router.n_modalities,
+                                        router.n_tiers)
+        else:
+            carry0 = carry_in
+            stats0 = jax.tree_util.tree_map(lambda a: a[0], stats_in)
+            obs_init = obs_in
+        carry, _ = _rollout_core(
+            carry0, est, env_local, n_steps, k, router=router,
+            obs_masked=obs_masked, clock_phase=0,
+            rows=(row0, n_cells, r_pad), reducer=reducer, stats0=stats0,
+            t_begin=tb, obs_init=obs_init)
+        obs_out = (carry[2], carry[3], carry[4], carry[5], carry[6])
+        stats_out = jax.tree_util.tree_map(lambda a: a[None], carry[-1])
+        return carry[0], carry[1], obs_out, stats_out
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis), P(), P(), P(axis), P(axis), P(axis)),
+                     out_specs=(P(axis), P(axis), P(axis), P(axis)))(
+                         env_state, key, t_begin, carry_in, obs_in, stats_in)

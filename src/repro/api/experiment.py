@@ -34,13 +34,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import engine as engine_mod
 from repro.api import router as router_mod
 from repro.api.aif import AifRouter
-from repro.api.engine import rollout, sharded_rollout
+from repro.api.engine import (resumable_rollout, rollout, sharded_finalize,
+                              sharded_resumable_rollout, sharded_rollout)
 from repro.api.shard import ShardSpec, resolve as resolve_shard
+from repro.checkpoint import Checkpointer
 from repro.core import generative
+from repro.core import mega as mega_mod
 from repro.core.topology import Topology, default_topology, get_topology
 from repro.envsim import batched, scenarios
+from repro.envsim import chaos as chaos_mod
 from repro.envsim.config import SimConfig, discretization_for, sim_config_for
 
 _EPS = 1e-9
@@ -197,6 +202,24 @@ class Experiment:
         memory at O(R/devices) by reducing metrics on device; R is padded
         up to a device multiple with inert phantom cells unless the spec
         says ``pad="strict"``.  Results are invariant to the device count.
+      checkpoint_every: windows between checkpoints (0 = off).  Must be a
+        multiple of the router's slow period (and dwell) so every chunk
+        boundary sits on a fleet-clock phase of zero; the run then executes
+        as boundary-aligned :func:`~repro.api.engine.resumable_rollout`
+        chunks whose concatenation is bit-identical to the uninterrupted
+        program, and a :class:`~repro.checkpoint.Checkpointer` snapshot
+        (router carry + env state + telemetry/PRNG snapshot) lands at every
+        interior boundary.
+      checkpoint_dir: where the checkpoints go (required when
+        ``checkpoint_every > 0``; defaults to ``resume_from``).
+      resume_from: checkpoint directory of a previous (interrupted) run of
+        this same experiment — the run restores the newest readable
+        checkpoint (corrupt ones are skipped with a warning) and continues
+        to ``n_windows``.  The final states are bit-identical to the
+        uninterrupted run; trace-derived metrics cover the post-resume
+        windows only (the cumulative env counters still cover the whole
+        horizon).  Sharded resumes need the same device count the
+        checkpoint was written under.
       label: display name (default: the router name).
     """
 
@@ -212,6 +235,9 @@ class Experiment:
     mega: bool = False
     mega_slot_dtype: str = "float32"
     shard: ShardSpec | str | None = None
+    checkpoint_every: int = 0
+    checkpoint_dir: str | None = None
+    resume_from: str | None = None
     label: str | None = None
 
     def resolve_topology(self) -> Topology:
@@ -274,6 +300,13 @@ class RunResult:
     per_device_wall_s: float = 0.0  # wall-clock per device (== wall_s: the
     #                                 device-parallel region spans the run)
     cells_per_device: int = 0     # R/devices after padding (R if unsharded)
+    watchdog_events: float = 0.0  # quarantine-and-reinit events over the run
+    resume_points: tuple = ()     # chunk boundaries (windows): interior
+    #                               checkpoint saves, plus the restored
+    #                               start window on a resumed run
+    recovery: dict | None = None  # chaos recovery metrics (None: scenario
+    #                               has no registered control, or sharded
+    #                               run — no per-window trace to curve over)
 
     def summary(self) -> dict:
         """JSON-safe metric dict (one Table-1 row)."""
@@ -294,6 +327,10 @@ class RunResult:
             "wall_s": round(self.wall_s, 2),
             "per_device_wall_s": round(self.per_device_wall_s, 2),
             "cells_per_device": self.cells_per_device,
+            "watchdog_events": round(self.watchdog_events, 1),
+            **({"recovery": {k: (round(v, 4) if isinstance(v, float) else v)
+                             for k, v in self.recovery.items()}}
+               if self.recovery is not None else {}),
         }
 
 
@@ -354,12 +391,29 @@ def run(experiment: Experiment) -> RunResult:
     scenario schedules, adapts the fluid engine, initializes the router
     carry and runs the whole closed loop as one jitted scan — the plumbing
     previously copy-pasted across every example and benchmark.
+
+    Chaos scenarios (:data:`repro.envsim.chaos.CHAOS_INFO`) additionally
+    get recovery metrics: the same experiment is re-run on the registered
+    uninjured *control* scenario and the per-window success curves are
+    compared (``RunResult.recovery``) — sharded runs skip this (their trace
+    is reduced away on device).
     """
     e = experiment
     topo = e.resolve_topology()
     spec = resolve_shard(e.shard)
-    if spec is not None:
-        return _run_sharded(e, topo, spec)
+    res = (_run_sharded(e, topo, spec) if spec is not None
+           else _run_dense(e, topo))
+    info = chaos_mod.CHAOS_INFO.get(e.scenario)
+    if info is not None and res.trace is not None:
+        control = run(dataclasses.replace(
+            e, scenario=info.base, checkpoint_every=0, checkpoint_dir=None,
+            resume_from=None))
+        res.recovery = _recovery_metrics(e, info, res, control)
+    return res
+
+
+def _run_dense(e: Experiment, topo: Topology) -> RunResult:
+    """Unsharded execution path of :func:`run` (per-tick or mega engine)."""
     scfg, params, env_step = _build_world(topo, e.scenario, e.n_cells,
                                           e.n_windows, e.window_s, e.seed)
     router = e.resolve_router(scfg)
@@ -369,13 +423,18 @@ def run(experiment: Experiment) -> RunResult:
             f"topology {topo.tier_names} has {topo.n_tiers}")
 
     t0 = time.perf_counter()
-    # mega routers own their carry (factored MegaFleetState, fresh clock)
-    init = (None if getattr(router, "mega", False)
-            else router.init_carry(e.n_cells))
-    carry, est, trace = rollout(
-        router, init,
-        batched.init_fluid_state(params), env_step, e.n_windows,
-        jax.random.key(e.seed))
+    if e.checkpoint_every or e.resume_from:
+        carry, est, trace, boundaries = _chunked_rollout(e, router, params,
+                                                         env_step)
+    else:
+        # mega routers own their carry (factored MegaFleetState, fresh clock)
+        init = (None if getattr(router, "mega", False)
+                else router.init_carry(e.n_cells))
+        carry, est, trace = rollout(
+            router, init,
+            batched.init_fluid_state(params), env_step, e.n_windows,
+            jax.random.key(e.seed))
+        boundaries = ()
     jax.block_until_ready(est)
     wall = time.perf_counter() - t0
 
@@ -405,7 +464,221 @@ def run(experiment: Experiment) -> RunResult:
         final_carry=carry,
         per_device_wall_s=wall,
         cells_per_device=e.n_cells,
+        watchdog_events=_watchdog_total(trace),
+        resume_points=tuple(boundaries),
     )
+
+
+# ------------------------------------------- checkpointing + recovery metrics
+def _watchdog_total(trace) -> float:
+    """Total quarantine-and-reinit events recorded in a trace (0.0 if the
+    router has no watchdog or the trace was reduced away)."""
+    wd = getattr(trace, "watchdog", None)
+    return float(np.asarray(wd).sum()) if wd is not None else 0.0
+
+
+def _ckpt_payload(e: Experiment, router, carry, env, snapshot, sharded: bool):
+    """Checkpoint tree for one boundary: engine snapshot split into its
+    telemetry / reducer-stats / PRNG-chain parts (typed keys stored as raw
+    key data — ``.npy`` cannot hold extended dtypes)."""
+    if sharded:
+        obs, stats, chain = snapshot
+        extra_stats = {"stats": stats}
+    elif getattr(router, "mega", False):
+        (obs, chain), extra_stats = snapshot, {}
+    else:
+        obs, chain, extra_stats = snapshot[:5], snapshot[5], {}
+    return {"carry": carry, "env": env, "obs": tuple(obs),
+            "key": jax.random.key_data(chain), **extra_stats}
+
+
+def _ckpt_template(e: Experiment, router, params, spec: ShardSpec | None,
+                   reducer=None):
+    """Shape/dtype template matching :func:`_ckpt_payload` for restore."""
+    env_t = batched.init_fluid_state(params)
+    r = jax.tree_util.tree_leaves(env_t)[0].shape[0]
+    if getattr(router, "mega", False):
+        slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
+                      else jnp.float32)
+        carry_t = mega_mod.init_mega_state(router.cfg, r, e.n_windows,
+                                           slot_dtype=slot_dtype)
+    else:
+        carry_t = router.init_carry(r)
+    tmpl = {"carry": carry_t, "env": env_t,
+            "obs": engine_mod._fresh_obs_carry(r, router.n_modalities,
+                                               router.n_tiers),
+            "key": jax.random.key_data(jax.random.key(0))}
+    if spec is not None:
+        _, r_local = spec.padded(e.n_cells)
+        stats0 = reducer.init(r_local, jnp.zeros((), jnp.int32))
+        tmpl["stats"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((spec.n_devices(),) + a.shape, a.dtype),
+            stats0)
+    return tmpl
+
+
+def _ckpt_setup(e: Experiment, router, params, spec=None, reducer=None):
+    """Shared chunk-loop state: (checkpointer, resume point, restored
+    pieces).  Chunk boundaries are validated once — every boundary is a
+    multiple of ``checkpoint_every``, so alignment of the stride implies
+    alignment of them all."""
+    if e.checkpoint_every:
+        engine_mod._check_boundary(router, int(e.checkpoint_every))
+    ck_dir = e.checkpoint_dir or e.resume_from
+    if e.checkpoint_every and not ck_dir:
+        raise ValueError("checkpoint_every > 0 needs checkpoint_dir "
+                         "(or resume_from) to say where snapshots go")
+    ckpt = Checkpointer(ck_dir) if ck_dir else None
+    if not e.resume_from:
+        return ckpt, 0, None, None, None
+    tree, extra = Checkpointer(e.resume_from).restore(
+        _ckpt_template(e, router, params, spec, reducer))
+    t_begin = int(extra["t"])
+    if extra.get("scenario") not in (None, e.scenario):
+        raise ValueError(
+            f"resume_from checkpoint was written for scenario "
+            f"{extra['scenario']!r}, not {e.scenario!r} — resuming would "
+            f"splice two different worlds")
+    if t_begin >= e.n_windows:
+        raise ValueError(f"checkpoint is at window {t_begin} but the "
+                         f"experiment ends at {e.n_windows}")
+    chain = jax.random.wrap_key_data(tree["key"])
+    obs = tuple(tree["obs"])
+    if spec is not None:
+        snapshot = (obs, tree["stats"], chain)
+    elif getattr(router, "mega", False):
+        snapshot = (obs, chain)
+    else:
+        snapshot = obs + (chain,)
+    return ckpt, t_begin, tree["carry"], tree["env"], snapshot
+
+
+def _chunk_sizes(e: Experiment, t_begin: int):
+    t = t_begin
+    while t < e.n_windows:
+        n = (min(e.checkpoint_every, e.n_windows - t) if e.checkpoint_every
+             else e.n_windows - t)
+        yield t, n
+        t += n
+
+
+def _chunked_rollout(e: Experiment, router, params, env_step):
+    """Checkpointed twin of the dense single-scan rollout.
+
+    Runs ``resumable_rollout`` chunks between boundary-aligned windows,
+    saving (router carry, env state, engine snapshot) at every interior
+    boundary; the concatenated trace and final states are bit-identical to
+    the uninterrupted program (``tests/test_chaos.py``).
+    """
+    mega = bool(getattr(router, "mega", False))
+    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(e, router, params)
+    if not e.resume_from:
+        carry = None if mega else router.init_carry(e.n_cells)
+        env = batched.init_fluid_state(params)
+    key = jax.random.key(e.seed)
+    traces, boundaries = [], ([t_begin] if t_begin else [])
+    for t, n in _chunk_sizes(e, t_begin):
+        carry, env, tr, snapshot = resumable_rollout(
+            router, carry, env, env_step, n, key, t_begin=t,
+            snapshot=snapshot, n_total=(e.n_windows if mega else None))
+        traces.append(jax.device_get(tr))
+        if t + n < e.n_windows:
+            boundaries.append(t + n)
+            if ckpt is not None:
+                ckpt.save(t + n,
+                          _ckpt_payload(e, router, carry, env, snapshot,
+                                        sharded=False),
+                          extra={"t": t + n, "scenario": e.scenario,
+                                 "seed": e.seed})
+    if ckpt is not None:
+        ckpt.wait()
+    trace = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+        *traces)
+    return carry, env, trace, tuple(boundaries)
+
+
+def _sharded_chunked(e: Experiment, router, params, env_step,
+                     spec: ShardSpec, reducer):
+    """Checkpointed twin of :func:`sharded_rollout` (shard_map engine).
+
+    The snapshot additionally carries the reducer's raw per-shard stats
+    (gathered with a leading device axis); :func:`sharded_finalize` reduces
+    the last chunk's stats exactly as the uninterrupted run does in-shard.
+    """
+    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(e, router, params,
+                                                      spec, reducer)
+    if not e.resume_from:
+        carry, env = None, batched.init_fluid_state(params)
+    key = jax.random.key(e.seed)
+    boundaries, stats = ([t_begin] if t_begin else []), None
+    for t, n in _chunk_sizes(e, t_begin):
+        carry, env, stats, snapshot = sharded_resumable_rollout(
+            router, carry, env, env_step, n, key, shard=spec,
+            n_cells=e.n_cells, reducer=reducer, t_begin=t, snapshot=snapshot)
+        if t + n < e.n_windows:
+            boundaries.append(t + n)
+            if ckpt is not None:
+                ckpt.save(t + n,
+                          _ckpt_payload(e, router, carry, env, snapshot,
+                                        sharded=True),
+                          extra={"t": t + n, "scenario": e.scenario,
+                                 "seed": e.seed})
+    if ckpt is not None:
+        ckpt.wait()
+    return carry, env, sharded_finalize(stats, shard=spec, reducer=reducer), \
+        tuple(boundaries)
+
+
+def _recovery_metrics(e: Experiment, info, res: RunResult,
+                      control: RunResult) -> dict:
+    """Recovery curve of a chaos run against its uninjured control.
+
+    * ``time_to_recover_s`` — windows after the fault clears until the
+      fleet success rate re-enters 95 % of the control's, in seconds
+      (horizon remainder when it never does — finite either way, with
+      ``recovered`` saying which).
+    * ``regret_vs_control`` — mean per-window success-rate shortfall
+      (clipped at 0) against the control over the traced windows.
+    * ``post_resume_forgetting`` — mean drop in success rate across the
+      run's resume boundaries (last-5-windows-before minus
+      first-5-windows-after); 0 when nothing resumed.  Bit-exact resume
+      makes this indistinguishable from the local trend — the metric
+      exists to catch a *broken* resume path, not to measure one that
+      works.
+    """
+    rate = _success_curve(res.trace)
+    rate_c = _success_curve(control.trace)
+    n = min(len(rate), len(rate_c))      # resumed runs trace a suffix only
+    rate, rate_c = rate[-n:], rate_c[-n:]
+    regret = float(np.maximum(rate_c - rate, 0.0).mean())
+
+    t_end = int(np.ceil(info.fault_frac[1] * e.n_windows))
+    i0 = max(t_end - (e.n_windows - n), 0)
+    ok = rate[i0:] >= 0.95 * rate_c[i0:]
+    recovered = bool(ok.any())
+    ttr = int(np.argmax(ok)) if recovered else max(len(rate) - i0, 0)
+
+    offset = e.n_windows - n
+    w = 5
+    drops = [float(rate[b - w:b].mean() - rate[b:b + w].mean())
+             for b in (p - offset for p in res.resume_points)
+             if b - w >= 0 and b + w <= n]
+    return {
+        "time_to_recover_s": float(ttr) * e.window_s,
+        "recovered": recovered,
+        "regret_vs_control": regret,
+        "post_resume_forgetting": (float(np.mean(drops)) if drops else 0.0),
+        "control_success_pct": control.success_pct,
+        "watchdog_events": res.watchdog_events,
+    }
+
+
+def _success_curve(trace) -> np.ndarray:
+    """(T,) fleet success rate per window from a dense trace."""
+    s = np.asarray(trace.env.success).sum(axis=1)
+    f = np.asarray(trace.env.failures).sum(axis=1)
+    return s / np.maximum(s + f, _EPS)
 
 
 def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
@@ -432,10 +705,15 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
     reducer = FleetMetricsReducer(n_cells=e.n_cells)
 
     t0 = time.perf_counter()
-    carry, est, stats = sharded_rollout(
-        router, batched.init_fluid_state(params), env_step, e.n_windows,
-        jax.random.key(e.seed), shard=spec, n_cells=e.n_cells,
-        reducer=reducer)
+    boundaries: tuple = ()
+    if e.checkpoint_every or e.resume_from:
+        carry, est, stats, boundaries = _sharded_chunked(
+            e, router, params, env_step, spec, reducer)
+    else:
+        carry, est, stats = sharded_rollout(
+            router, batched.init_fluid_state(params), env_step, e.n_windows,
+            jax.random.key(e.seed), shard=spec, n_cells=e.n_cells,
+            reducer=reducer)
     jax.block_until_ready(stats)
     wall = time.perf_counter() - t0
 
@@ -483,6 +761,7 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
         final_carry=carry,
         per_device_wall_s=wall,
         cells_per_device=r_local,
+        resume_points=tuple(boundaries),
     )
 
 

@@ -67,6 +67,10 @@ class TickInfo(NamedTuple):
 
     action: jnp.ndarray            # (R,) int32 policy / arm index (0 if n/a)
     unstable: jnp.ndarray          # (R,) bool adaptive-mode flag (AIF only)
+    # (R,) float 0/1 — cells the numerical watchdog quarantined-and-reinit
+    # this tick (None for routers without a watchdog; see
+    # repro.core.fleet.fleet_watchdog_bad)
+    watchdog: Any = None
 
 
 def _no_diag(r: int) -> TickInfo:

@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, CorruptCheckpointError
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CorruptCheckpointError"]

@@ -10,7 +10,10 @@ so the format is self-contained numpy — still production-shaped:
   save or at exit);
 * **rotation** — keep the newest ``keep_n`` checkpoints;
 * **atomicity** — writes go to ``<dir>.tmp`` and are renamed only after the
-  manifest lands, so a preempted save can never be mistaken for a valid one;
+  manifest lands (itself fsync'd and atomically replaced), so a preempted
+  save can never be mistaken for a valid one;
+* **corruption fallback** — ``restore(step=None)`` walks newest-first and
+  skips unreadable checkpoints with a warning (strict when a step is named);
 * **elastic reshape** — arrays are saved unsharded (gathered); on restore
   they are `device_put` against the *current* mesh/sharding, so a job can
   restart on a different topology (mesh signature is recorded, not enforced).
@@ -21,10 +24,16 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint directory exists but cannot be restored (torn write,
+    missing leaf file, shape mismatch against the template)."""
 
 
 def _flatten_with_paths(tree) -> dict[str, Any]:
@@ -78,10 +87,17 @@ class Checkpointer:
                 manifest["leaves"][name] = {
                     "file": fn, "dtype": logical,
                     "shape": list(arr.shape)}
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            # Manifest last, via its own tmp-file + atomic replace: its
+            # presence is the "all leaves landed" commit record a torn
+            # write can never fake (all_steps/restore key off it).
+            mpath = os.path.join(tmp, "manifest.json")
+            with open(mpath + ".tmp", "w") as f:
                 json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(mpath + ".tmp", mpath)
             shutil.rmtree(final, ignore_errors=True)
-            os.rename(tmp, final)
+            os.replace(tmp, final)
             self._rotate()
 
         if blocking:
@@ -121,15 +137,48 @@ class Checkpointer:
 
         ``shardings``: optional matching pytree of NamedSharding — arrays are
         device_put against it (elastic reshape onto the current mesh).
+
+        With ``step=None`` (the crash-recovery path) restore walks the
+        checkpoints newest-first and *falls back* past any it cannot read —
+        a torn leaf file, unparseable manifest or shape drift demotes that
+        checkpoint with a warning instead of killing the restart, because a
+        self-healing runtime must come back from the newest checkpoint that
+        actually survived the fault, not die on the one the fault tore.  An
+        explicitly requested ``step`` stays strict and raises
+        :class:`CorruptCheckpointError`.
+
         Returns (tree, extra).
         """
         self.wait()
-        if step is None:
-            step = self.latest_step()
-        assert step is not None, "no checkpoint found"
+        if step is not None:
+            return self._restore_at(step, like, shardings)
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(
+                f"no checkpoint found under {self.directory!r}")
+        errors = []
+        for s in reversed(steps):
+            try:
+                return self._restore_at(s, like, shardings)
+            except (CorruptCheckpointError, OSError, ValueError, KeyError,
+                    json.JSONDecodeError) as e:
+                errors.append((s, e))
+                warnings.warn(
+                    f"checkpoint step {s} under {self.directory!r} is "
+                    f"unreadable ({e}); falling back to the previous one",
+                    RuntimeWarning, stacklevel=2)
+        raise CorruptCheckpointError(
+            f"all {len(steps)} checkpoints under {self.directory!r} are "
+            f"unreadable: {errors}")
+
+    def _restore_at(self, step: int, like, shardings) -> tuple[Any, dict]:
         d = os.path.join(self.directory, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CorruptCheckpointError(
+                f"step {step}: manifest unreadable: {e}") from e
 
         names = list(_flatten_with_paths(like).keys())
         leaves, treedef = jax.tree_util.tree_flatten(like)
@@ -137,13 +186,22 @@ class Checkpointer:
                         if shardings is not None else [None] * len(leaves))
         out = []
         for name, ref, shd in zip(names, leaves, shard_leaves):
-            info = manifest["leaves"][name]
-            arr = np.load(os.path.join(d, info["file"]))
+            info = manifest["leaves"].get(name)
+            if info is None:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {name!r} missing from manifest")
+            try:
+                arr = np.load(os.path.join(d, info["file"]))
+            except (OSError, ValueError) as e:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {name!r} unreadable: {e}") from e
             ref_dtype = np.dtype(getattr(ref, "dtype", np.float32))
             if arr.dtype.kind in "u" and ref_dtype.kind not in "biufc":
                 arr = arr.view(ref_dtype)        # raw-stored bf16/fp8
-            assert list(arr.shape) == list(ref.shape), (
-                f"{name}: ckpt {arr.shape} vs model {ref.shape}")
+            if list(arr.shape) != list(ref.shape):
+                raise CorruptCheckpointError(
+                    f"step {step}: {name}: ckpt shape {list(arr.shape)} vs "
+                    f"template {list(ref.shape)}")
             arr = arr.astype(ref_dtype)
             out.append(jax.device_put(arr, shd) if shd is not None
                        else jax.device_put(arr))

@@ -148,7 +148,20 @@ def update_belief(model: generative.GenerativeModel,
     if util_bins is not None:
         logp = logp + jnp.where(util_valid,
                                 util_log_likelihood(util_bins, topo), 0.0)
-    return posterior_from_logp(logp)
+    q = posterior_from_logp(logp)
+    if obs_mask is not None:
+        # Degenerate-evidence guard: with *every* modality masked (and no
+        # utilization scrape this tick) the Bayesian answer is exactly the
+        # renormalized prior — return it directly so a fully-dark window can
+        # never turn a borderline prior into a 0/0 posterior.  With any
+        # evidence present the where is a no-op (bit-identical).
+        all_masked = jnp.sum(obs_mask) <= 0
+        if util_bins is not None:
+            all_masked = all_masked & jnp.logical_not(
+                jnp.asarray(util_valid, bool))
+        fallback = prior / jnp.maximum(jnp.sum(prior), 1e-30)
+        q = jnp.where(all_masked, fallback, q)
+    return q
 
 
 def belief_entropy(belief: jnp.ndarray) -> jnp.ndarray:

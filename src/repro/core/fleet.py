@@ -367,6 +367,72 @@ def fleet_routing_weights(info) -> jnp.ndarray:
     return info.routing_weights
 
 
+# ------------------------------------------------------------------ watchdog
+def fleet_watchdog_bad(state: agent_mod.AgentState) -> jnp.ndarray:
+    """(R,) bool — cells whose carry has diverged numerically.
+
+    A cell is flagged when its posterior stops being a finite distribution
+    (NaN/Inf, negative mass, or a sum far from 1 — healthy posteriors are
+    normalized to float32 roundoff every tick), when its observation
+    pseudo-counts go non-finite (the A-model is the learning state that
+    actually diverges; a poisoned A reaches the belief within one tick), or
+    when the error EMA driving the adaptive-preference switch is
+    non-finite.  Deliberately cheap — O(R·M·bins·S) reads, no (R, A, S, S)
+    traffic — so the check can run on *every* tick's incoming carry without
+    denting clean-path throughput (pinned by the perf-regression gate).
+    """
+    r = state.belief.shape[0]
+
+    def rows_finite(a):
+        return jnp.all(jnp.isfinite(a.reshape(r, -1)), axis=-1)
+
+    ok = (rows_finite(state.belief)
+          & jnp.all(state.belief >= 0.0, axis=-1)
+          & (jnp.abs(jnp.sum(state.belief, axis=-1) - 1.0) <= 0.5)
+          & rows_finite(state.model.a_counts)
+          & rows_finite(state.cache.amb)
+          & jnp.isfinite(state.error_ema))
+    return ~ok
+
+
+def fleet_quarantine(state: agent_mod.AgentState, bad: jnp.ndarray,
+                     cfg: generative.AifConfig) -> agent_mod.AgentState:
+    """Reinit the flagged cells to their priors; healthy cells bit-unchanged.
+
+    The quarantined cells restart as fresh agents — prior belief, prior
+    generative model (and its derived cache), an *emptied* replay buffer
+    (contents zeroed, not just size-reset: a NaN slot would re-poison the
+    next slow update's einsum through ``NaN * 0``), balanced action,
+    cleared EMA.  ``t`` is left untouched so the fleet clock (slow/dwell
+    phase) stays aligned across cells.
+    """
+    r = state.belief.shape[0]
+
+    def where_r(fresh, old):
+        b = bad.reshape((r,) + (1,) * (old.ndim - 1))
+        return jnp.where(b, jnp.asarray(fresh, old.dtype), old)
+
+    single = agent_mod.init_agent_state(cfg)
+
+    def sel(fresh_leaf, old_leaf):
+        return where_r(jnp.broadcast_to(fresh_leaf, old_leaf.shape), old_leaf)
+
+    model = jax.tree_util.tree_map(sel, single.model, state.model)
+    cache = jax.tree_util.tree_map(sel, single.cache, state.cache)
+    replay = jax.tree_util.tree_map(sel, single.replay, state.replay)
+    return agent_mod.AgentState(
+        model=model,
+        cache=cache,
+        belief=sel(single.belief, state.belief),
+        replay=replay,
+        prev_action=where_r(policies.BALANCED_ACTION, state.prev_action),
+        dt_since_change=where_r(0.0, state.dt_since_change),
+        error_ema=where_r(0.0, state.error_ema),
+        unstable=where_r(False, state.unstable),
+        t=state.t,
+    )
+
+
 # ------------------------------------------------------------------- rollout
 class FleetTrace(NamedTuple):
     """Per-window traces of a fleet rollout (leading time axis T)."""
@@ -383,6 +449,10 @@ class FleetTrace(NamedTuple):
     # (obs_frac[0] is the all-valid warm-up mask).
     obs_frac: jnp.ndarray         # (T, R)
     env: Any                      # environment info pytree (engine-specific)
+    # (T, R) float 0/1 quarantine events of the numerical watchdog (None for
+    # routers without one; the mega engine scatters its window-boundary
+    # events onto each window's last tick)
+    watchdog: Any = None
 
 
 def fleet_rollout(agent_state: agent_mod.AgentState,

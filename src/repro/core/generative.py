@@ -119,6 +119,15 @@ class AifConfig:
     latency_relax_factor: float = 0.3     # relax C_latency under instability
     error_ema_halflife_s: float = 20.0    # smoothing of the observed error rate
 
+    # In-scan numerical watchdog (self-healing): before every engine tick the
+    # incoming carry is checked for divergence — non-finite posteriors /
+    # pseudo-counts / error EMA, negative belief mass, de-normalized belief
+    # sums — and flagged cells are quarantined back to their priors inside a
+    # lax.cond (identity branch when the fleet is healthy, so the clean path
+    # is bit-identical to watchdog=False).  The mega engine runs the same
+    # check at window boundaries.  See repro.core.fleet.fleet_watchdog_bad.
+    watchdog: bool = True
+
     @property
     def n_states(self) -> int:
         return self.topology.n_states

@@ -283,7 +283,9 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
                 gumbel: jnp.ndarray, t0, *,
                 cfg: generative.AifConfig, disc, util_edges,
                 util_period: int, dt: float, scrape_every: int,
-                restart_blackout: bool, emits_mask: bool):
+                restart_blackout: bool, emits_mask: bool,
+                forced_down: jnp.ndarray | None = None,
+                speed: jnp.ndarray | None = None):
     """W fused fast ticks: belief → EFE → sample → dwell → preferences → env.
 
     The XLA oracle twin of the Pallas megakernel — one launch advances the
@@ -376,10 +378,12 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
             t=state.t + 1)
         weights = policies.routing_weights(action, topo)
         ov = None if obs_valid is None else obs_valid[w]
+        fd = None if forced_down is None else forced_down[w]
+        sp = None if speed is None else speed[w]
         est, win = batched.fluid_window_step(
             params, est, weights, arrival[w], hazard[w], k_env[w], t_idx,
             dt=dt, scrape_every=scrape_every, obs_valid=ov,
-            restart_blackout=restart_blackout)
+            restart_blackout=restart_blackout, forced_down=fd, speed=sp)
 
         ys.append((action, weights, raw_obs, unstable,
                    jnp.mean(obs_mask, axis=-1), win))
@@ -432,6 +436,83 @@ def mega_slow_step(state: MegaFleetState, k_slow: jax.Array,
     slots = slots._replace(wcount=wcount)
     return state._replace(a_counts=a_counts, slots=slots,
                           cache=_refresh_cache(a_counts, slots, cfg))
+
+
+# --------------------------------------------------------------- watchdog
+def mega_watchdog_bad(state: MegaFleetState) -> jnp.ndarray:
+    """(R,) bool — cells whose factored carry has diverged numerically.
+
+    The window-granularity twin of the per-tick engine's
+    :func:`repro.core.fleet.fleet_watchdog_bad`: a cell is bad when its
+    posterior stops being a finite distribution (NaN/Inf, negative mass, or
+    a sum far from 1 — the in-loop guards keep healthy posteriors
+    normalized to float32 roundoff), when its observation pseudo-counts or
+    derived column sums go non-finite (either would poison every later
+    belief update and the next A-learning einsum), or when the error EMA
+    driving the preference switch is non-finite.
+    """
+    r = state.belief.shape[0]
+
+    def rows_finite(a):
+        return jnp.all(jnp.isfinite(a.reshape(r, -1)), axis=-1)
+
+    ok = (rows_finite(state.belief)
+          & jnp.all(state.belief >= 0.0, axis=-1)
+          & (jnp.abs(jnp.sum(state.belief, axis=-1) - 1.0) <= 0.5)
+          & rows_finite(state.a_counts)
+          & rows_finite(state.cache.colsum)
+          & jnp.isfinite(state.error_ema))
+    return ~ok
+
+
+def mega_quarantine(state: MegaFleetState, bad: jnp.ndarray,
+                    cfg: generative.AifConfig) -> MegaFleetState:
+    """Reinit the flagged cells to priors; healthy cells bit-unchanged.
+
+    The bad cells' beliefs return to uniform, their pseudo-counts to the
+    fresh generative prior, and their replay slots are *cleared* (not just
+    de-weighted: a NaN slot would re-poison the A-update einsum through
+    ``NaN * 0``).  The derived cache is recomputed from the cleaned
+    (a_counts, slots) and then where-selected per cell — a blanket refresh
+    would silently update healthy cells' quasi-static (stale-by-design)
+    cache mid-period and break bit-identity with the unwatched program.
+    ``t`` is left untouched: slot index == global tick is a fleet-wide
+    invariant.
+    """
+    r = state.belief.shape[0]
+    s = cfg.topology.n_states
+
+    def where_r(fresh, old):
+        b = bad.reshape((r,) + (1,) * (old.ndim - 1))
+        return jnp.where(b, jnp.asarray(fresh, old.dtype), old)
+
+    a0 = jnp.broadcast_to(generative.init_generative_model(cfg).a_counts,
+                          state.a_counts.shape)
+    a_counts = where_r(a0, state.a_counts)
+    sl = state.slots
+    slots = MegaSlots(
+        q_prev=where_r(0.0, sl.q_prev),
+        q_next=where_r(0.0, sl.q_next),
+        obs_bins=where_r(0, sl.obs_bins),
+        obs_mask=where_r(1.0, sl.obs_mask),
+        action=where_r(0, sl.action),
+        dt_since_change=where_r(0.0, sl.dt_since_change),
+        wcount=where_r(0.0, sl.wcount),
+    )
+    cache_new = _refresh_cache(a_counts, slots, cfg)
+    cache = jax.tree_util.tree_map(
+        lambda fresh, old: where_r(fresh, old), cache_new, state.cache)
+    return MegaFleetState(
+        a_counts=a_counts,
+        slots=slots,
+        cache=cache,
+        belief=where_r(1.0 / s, state.belief),
+        prev_action=where_r(policies.BALANCED_ACTION, state.prev_action),
+        dt_since_change=where_r(0.0, state.dt_since_change),
+        error_ema=where_r(0.0, state.error_ema),
+        unstable=where_r(False, state.unstable),
+        t=state.t,
+    )
 
 
 # ---------------------------------------------------------------- densify

@@ -8,6 +8,9 @@ from repro.envsim.batched import (N_OBS_MODALITIES, FluidParams, FluidResult,
 from repro.envsim.config import (TIER_CLASSES, SimConfig, TierConfig,
                                  default_tiers, discretization_for,
                                  sim_config_for, tiers_for_topology)
+from repro.envsim.chaos import (CHAOS_INFO, CHAOS_PRESETS, ChaosInfo,
+                                capacity_flap, crash_restart_storm,
+                                long_outage, straggler_episodes, zone_outage)
 from repro.envsim.harness import (StrategySummary, evaluate_strategy, table1)
 from repro.envsim.routers import AifRouter
 from repro.envsim.scenarios import (SCENARIOS, Profile, ScenarioBatch,
@@ -30,4 +33,8 @@ __all__ = ["SimConfig", "TierConfig", "default_tiers", "discretization_for",
            # scenarios
            "SCENARIOS", "Profile", "ScenarioBatch", "build_scenario",
            "compile_scenario", "compose", "scrape_blackout", "stale_replay",
-           "telemetry_dropout"]
+           "telemetry_dropout",
+           # fault injection (chaos)
+           "CHAOS_INFO", "CHAOS_PRESETS", "ChaosInfo", "capacity_flap",
+           "crash_restart_storm", "long_outage", "straggler_episodes",
+           "zone_outage"]

@@ -294,7 +294,9 @@ def fluid_window_step(params: FluidParams,
                       scrape_every: int = 10,
                       obs_valid: jnp.ndarray | None = None,
                       restart_blackout: bool = False,
-                      row_block: tuple | None = None
+                      row_block: tuple | None = None,
+                      forced_down: jnp.ndarray | None = None,
+                      speed: jnp.ndarray | None = None
                       ) -> tuple[FluidState, WindowInfo]:
     """Advance every cell one control window under the given routing weights.
 
@@ -319,6 +321,15 @@ def fluid_window_step(params: FluidParams,
         restart draws are row-sliced here, with the draws generated at the
         device-count-invariant (n_true, K) global shape so every device
         count reproduces the unsharded engine's randomness exactly.
+      forced_down: optional (R, K) 0/1 injected-downtime schedule this
+        window (fault injection): an administratively-down tier refuses
+        arrivals, serves nothing, kills its in-system mass and probes as
+        down, independent of the restart machinery — so outages can outlive
+        ``restart_max_s`` and correlate across cells.
+      speed: optional (R, K) service-speed multiplier this window
+        (straggler episodes): <1 shrinks capacity and inflates latency
+        without any liveness loss.  None compiles the exact pre-chaos
+        program.
     """
     if row_block is not None:
         row_start, n_true, n_pad = row_block
@@ -330,18 +341,34 @@ def fluid_window_step(params: FluidParams,
         hazard_scale = _slice_rows(hazard_scale, row_start, r_local)
         if obs_valid is not None:
             obs_valid = _slice_rows(obs_valid, row_start, r_local)
+        if forced_down is not None:
+            forced_down = _slice_rows(forced_down, row_start, r_local)
+        if speed is not None:
+            speed = _slice_rows(speed, row_start, r_local)
     w = jnp.maximum(weights, 0.0)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
 
     up = state.down_left <= _EPS                      # (R, K) bool
+    if forced_down is not None:
+        adminf = jnp.asarray(forced_down, jnp.float32)  # (R, K) 1 = injected
+        up = up & (adminf <= 0.5)
     upf = up.astype(jnp.float32)
+
+    # straggler episodes scale effective service speed (capacity + latency)
+    if speed is None:
+        mu_eff = params.mu
+        service_mean = params.service_mean_s
+    else:
+        sp = jnp.maximum(jnp.asarray(speed, jnp.float32), 1e-3)
+        mu_eff = params.mu * sp
+        service_mean = params.service_mean_s / sp
 
     lam = w * arrival_rate[:, None]                   # (R, K) offered RPS
     arr = lam * dt                                    # (R, K) request mass
     refused = jnp.sum(arr * (1.0 - upf), axis=-1)     # down pods 503 on arrival
     admitted = arr * upf
 
-    cap_rate = params.servers * params.mu             # (R, K) RPS at saturation
+    cap_rate = params.servers * mu_eff                # (R, K) RPS at saturation
     cap = cap_rate * dt * upf
     backlog0 = state.backlog
     avail = backlog0 + admitted
@@ -357,8 +384,8 @@ def fluid_window_step(params: FluidParams,
     wait = jnp.where(cap_rate > 0,
                      0.5 * (backlog0 + backlog1) / jnp.maximum(cap_rate, _EPS),
                      0.0)
-    tier_latency = wait + params.service_mean_s
-    tier_p95 = wait + params.service_mean_s * params.service_p95_factor
+    tier_latency = wait + service_mean
+    tier_p95 = wait + service_mean * params.service_p95_factor
     timed_out = jnp.where(tier_latency > params.timeout_s, served, 0.0)
     completed = served - timed_out                    # (R, K) successes
 
@@ -392,6 +419,12 @@ def fluid_window_step(params: FluidParams,
     restarted = (up & (u < p_restart)).astype(jnp.float32)
     killed = backlog1 * restarted                     # in-system mass dies
     backlog2 = backlog1 * (1.0 - restarted)
+    if forced_down is not None:
+        # injected downtime strands the tier's in-system mass too (restarts
+        # cannot fire on an admin-down tier — `up` already excludes it — so
+        # this never double-counts)
+        killed = killed + backlog2 * adminf
+        backlog2 = backlog2 * (1.0 - adminf)
     dur = params.restart_min_s + dur_u * (
         params.restart_max_s - params.restart_min_s)
     down_left = jnp.maximum(state.down_left - dt, 0.0)
@@ -432,6 +465,9 @@ def fluid_window_step(params: FluidParams,
                     else jnp.asarray(obs_valid, jnp.float32))
         if restart_blackout:
             cell_up = jnp.all(down_left <= _EPS, axis=-1)   # (R,) bool
+            if forced_down is not None:
+                # an administratively-down pod emits nothing either
+                cell_up = cell_up & jnp.all(adminf <= 0.5, axis=-1)
             obs_mask = obs_mask * cell_up[:, None].astype(jnp.float32)
             # the 10 s utilization scrape endpoint is down too: the cell
             # re-publishes its last scrape instead of leaking live state
@@ -461,11 +497,14 @@ def fluid_window_step(params: FluidParams,
         tier_success=state.tier_success + completed,
         n_restarts=state.n_restarts + restarted,
     )
+    tier_up_f = (down_left <= _EPS).astype(jnp.float32)
+    if forced_down is not None:
+        tier_up_f = tier_up_f * (1.0 - adminf)
     info = WindowInfo(
         raw_obs=published,
         obs_mask=obs_mask,
         tier_utilization=util_scrape,
-        tier_up=(down_left <= _EPS).astype(jnp.float32),
+        tier_up=tier_up_f,
         tier_queue=tier_queue,
         tier_latency_s=tier_latency,
         tier_p95_s=tier_p95,
@@ -488,7 +527,9 @@ def run_fluid(params: FluidParams,
               dt: float = 1.0,
               scrape_every: int = 10,
               obs_valid: jnp.ndarray | None = None,
-              restart_blackout: bool = False
+              restart_blackout: bool = False,
+              forced_down: jnp.ndarray | None = None,
+              speed: jnp.ndarray | None = None
               ) -> tuple[FluidState, WindowInfo]:
     """Static-router rollout: one ``lax.scan`` over T windows, no Python loop.
 
@@ -499,6 +540,8 @@ def run_fluid(params: FluidParams,
       key: PRNG key.
       obs_valid: optional (T, R, M) telemetry-validity schedule.
       restart_blackout: see :func:`fluid_window_step` (static).
+      forced_down: optional (T, R, K) injected-downtime schedule.
+      speed: optional (T, R, K) service-speed schedule.
 
     Returns:
       (final FluidState, stacked WindowInfo traces with leading T axis).
@@ -512,14 +555,15 @@ def run_fluid(params: FluidParams,
     keys = jax.random.split(key, t_total)
 
     def step(state, xs):
-        t_idx, rate, hz, w_t, ov, k = xs
+        t_idx, rate, hz, w_t, ov, fd, sp, k = xs
         return fluid_window_step(params, state, w_t, rate, hz, k, t_idx,
                                  dt=dt, scrape_every=scrape_every,
                                  obs_valid=ov,
-                                 restart_blackout=restart_blackout)
+                                 restart_blackout=restart_blackout,
+                                 forced_down=fd, speed=sp)
 
     xs = (jnp.arange(t_total, dtype=jnp.int32), arrival_rate, hazard_scale,
-          weights, obs_valid, keys)
+          weights, obs_valid, forced_down, speed, keys)
     return jax.lax.scan(step, init_fluid_state(params), xs)
 
 
@@ -541,6 +585,8 @@ class FluidIngredients(NamedTuple):
     scrape_every: int
     obs_valid: jnp.ndarray | None      # (T, R, M) or None
     restart_blackout: bool
+    forced_down: jnp.ndarray | None = None  # (T, R, K) or None
+    speed: jnp.ndarray | None = None   # (T, R, K) or None
 
 
 def make_env_step(params: FluidParams,
@@ -549,7 +595,9 @@ def make_env_step(params: FluidParams,
                   dt: float = 1.0,
                   scrape_every: int = 10,
                   obs_valid: jnp.ndarray | None = None,
-                  restart_blackout: bool = False):
+                  restart_blackout: bool = False,
+                  forced_down: jnp.ndarray | None = None,
+                  speed: jnp.ndarray | None = None):
     """Adapt the fluid engine to :func:`repro.core.fleet.fleet_rollout`.
 
     Returns an ``env_step(env_state, weights, t_idx, key) -> (env_state,
@@ -576,15 +624,22 @@ def make_env_step(params: FluidParams,
     hazard_scale = jnp.asarray(hazard_scale)
     if obs_valid is not None:
         obs_valid = jnp.asarray(obs_valid, jnp.float32)
+    if forced_down is not None:
+        forced_down = jnp.asarray(forced_down, jnp.float32)
+    if speed is not None:
+        speed = jnp.asarray(speed, jnp.float32)
 
     def env_step(env_state, weights, t_idx, key, row_block=None):
         ov = None if obs_valid is None else obs_valid[t_idx]
+        fd = None if forced_down is None else forced_down[t_idx]
+        sp = None if speed is None else speed[t_idx]
         return fluid_window_step(params, env_state, weights,
                                  arrival_rate[t_idx], hazard_scale[t_idx],
                                  key, t_idx, dt=dt, scrape_every=scrape_every,
                                  obs_valid=ov,
                                  restart_blackout=restart_blackout,
-                                 row_block=row_block)
+                                 row_block=row_block,
+                                 forced_down=fd, speed=sp)
 
     env_step.emits_mask = obs_valid is not None or restart_blackout
     env_step.supports_shard = True
@@ -594,7 +649,8 @@ def make_env_step(params: FluidParams,
     env_step.fluid = FluidIngredients(
         params=params, arrival_rate=arrival_rate, hazard_scale=hazard_scale,
         dt=dt, scrape_every=scrape_every, obs_valid=obs_valid,
-        restart_blackout=restart_blackout)
+        restart_blackout=restart_blackout,
+        forced_down=forced_down, speed=speed)
     return env_step
 
 
@@ -608,7 +664,9 @@ def make_scenario_env_step(params: FluidParams, sc, dt: float = 1.0,
                          jnp.asarray(sc.hazard_scale), dt=dt,
                          scrape_every=scrape_every,
                          obs_valid=sc.obs_valid,
-                         restart_blackout=sc.restart_blackout)
+                         restart_blackout=sc.restart_blackout,
+                         forced_down=getattr(sc, "forced_down", None),
+                         speed=getattr(sc, "speed", None))
 
 
 def summarize(final: FluidState, trace: WindowInfo) -> FluidResult:

@@ -57,6 +57,14 @@ class ScenarioBatch(NamedTuple):
     obs_valid: np.ndarray | None = None
     # couple telemetry to pod liveness: a down pod emits nothing
     restart_blackout: bool = False
+    # (T, R, K) 0/1 administrative-down schedule (fault injection: zone
+    # outages, MTTF/MTTR churn, outages longer than the restart machinery
+    # can represent), or None for no injected downtime.  None keeps the
+    # engine on the exact pre-chaos program.
+    forced_down: np.ndarray | None = None
+    # (T, R, K) service-speed multiplier (straggler episodes: <1 inflates
+    # latency and shrinks capacity without a liveness loss), or None.
+    speed: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +76,8 @@ class Profile:
     capacity: np.ndarray | None = None   # (R, K)
     obs_valid: np.ndarray | None = None  # (T, R, M) 0/1 validity mask
     blackout: bool = False               # down pods emit no telemetry
+    forced_down: np.ndarray | None = None  # (T, R, K) 0/1 injected downtime
+    speed: np.ndarray | None = None      # (T, R, K) service-speed multiplier
 
 
 def _mul(a: np.ndarray | None, b: np.ndarray | None) -> np.ndarray | None:
@@ -78,12 +88,21 @@ def _mul(a: np.ndarray | None, b: np.ndarray | None) -> np.ndarray | None:
     return a * b
 
 
+def _union(a: np.ndarray | None, b: np.ndarray | None) -> np.ndarray | None:
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return np.maximum(a, b)
+
+
 def compose(*profiles: Profile) -> Profile:
     """Elementwise product of profiles (None fields stay neutral).
 
     ``obs_valid`` masks compose by product too — validity intersects (a
-    modality is fresh only if every component says so) — and ``blackout``
-    flags OR together.
+    modality is fresh only if every component says so) — ``blackout`` flags
+    OR together, ``forced_down`` schedules union (a tier is down if any
+    component takes it down) and ``speed`` multipliers compound.
     """
     out = Profile()
     for p in profiles:
@@ -91,7 +110,9 @@ def compose(*profiles: Profile) -> Profile:
                       hazard=_mul(out.hazard, p.hazard),
                       capacity=_mul(out.capacity, p.capacity),
                       obs_valid=_mul(out.obs_valid, p.obs_valid),
-                      blackout=out.blackout or p.blackout)
+                      blackout=out.blackout or p.blackout,
+                      forced_down=_union(out.forced_down, p.forced_down),
+                      speed=_mul(out.speed, p.speed))
     return out
 
 
@@ -114,11 +135,17 @@ def compile_scenario(profile: Profile, cfg: SimConfig, n_cells: int,
         np.broadcast_to(profile.capacity, (r, k)).astype(np.float32))
     obs_valid = None if profile.obs_valid is None else np.broadcast_to(
         profile.obs_valid, (t, r, n_modalities)).astype(np.float32)
+    forced_down = None if profile.forced_down is None else np.broadcast_to(
+        profile.forced_down, (t, r, k)).astype(np.float32)
+    speed = None if profile.speed is None else np.broadcast_to(
+        profile.speed, (t, r, k)).astype(np.float32)
     return ScenarioBatch(arrival_rate=cfg.rps * rate,
                          hazard_scale=hazard,
                          capacity_scale=cap,
                          obs_valid=obs_valid,
-                         restart_blackout=profile.blackout)
+                         restart_blackout=profile.blackout,
+                         forced_down=forced_down,
+                         speed=speed)
 
 
 # ----------------------------------------------------------------- primitives
@@ -364,12 +391,18 @@ def pad_scenario(sc: ScenarioBatch, n_pad: int) -> ScenarioBatch:
         capacity_scale=pad_cells(sc.capacity_scale, n_pad, 1.0, cell_axis=0),
         obs_valid=pad_cells(sc.obs_valid, n_pad, 1.0, cell_axis=1),
         restart_blackout=sc.restart_blackout,
+        forced_down=pad_cells(sc.forced_down, n_pad, 0.0, cell_axis=1),
+        speed=pad_cells(sc.speed, n_pad, 1.0, cell_axis=1),
     )
 
 
 def build_scenario(name: str, cfg: SimConfig, n_cells: int, n_windows: int,
                    window_s: float = 1.0, seed: int = 0) -> ScenarioBatch:
     """Look up and materialize a named scenario preset."""
+    # fault-injection presets live in repro.envsim.chaos, which registers
+    # them into SCENARIOS at import; a lazy import here guarantees they are
+    # visible without a circular module dependency
+    import repro.envsim.chaos  # noqa: F401
     try:
         builder = SCENARIOS[name]
     except KeyError:

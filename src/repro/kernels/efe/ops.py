@@ -191,7 +191,9 @@ def mega_window(state, est, obs_carry, params,
                 cfg: generative.AifConfig, disc, util_edges, util_period: int,
                 dt: float, scrape_every: int, restart_blackout: bool,
                 emits_mask: bool, use_pallas: bool = False,
-                interpret: bool | None = None):
+                interpret: bool | None = None,
+                forced_down: jnp.ndarray | None = None,
+                speed: jnp.ndarray | None = None):
     """One whole-window launch: W fused fast ticks of the mega engine path.
 
     Dispatch twin of :func:`fleet_belief_efe` at window granularity — the
@@ -216,7 +218,10 @@ def mega_window(state, est, obs_carry, params,
     Returns ``(state, est, obs_carry, ys)`` with ys a per-tick trace tuple
     of (action, weights, raw_obs, unstable, obs_frac, env_window).
     """
-    if use_pallas:
+    # The Pallas megakernel's in-VMEM env port predates the fault-injection
+    # schedules; chaos windows fall back to the XLA oracle (identical
+    # semantics, the oracle *is* the CPU production path).
+    if use_pallas and forced_down is None and speed is None:
         from repro.kernels.efe import mega as mega_kernel
         if interpret is None:
             interpret = _auto_interpret()
@@ -230,4 +235,5 @@ def mega_window(state, est, obs_carry, params,
         state, est, obs_carry, params, arrival, hazard, obs_valid,
         k_env, gumbel, t0, cfg=cfg, disc=disc, util_edges=util_edges,
         util_period=util_period, dt=dt, scrape_every=scrape_every,
-        restart_blackout=restart_blackout, emits_mask=emits_mask)
+        restart_blackout=restart_blackout, emits_mask=emits_mask,
+        forced_down=forced_down, speed=speed)
