@@ -27,7 +27,17 @@ Workloads, all single jitted ``lax.scan`` programs (no Python in the loop):
 * ``fleet_sharded``  — (``--shard``) the device-sharded closed loop under
                      ``shard_map``, weak scaling at fixed cells/device over
                      1/2/4 devices, plus a roofline line for the compiled
-                     per-device tick.
+                     per-device tick,
+* ``fleet_mega_sharded`` — (``--shard``) the whole-window megakernel path
+                     under the same mesh: each shard runs the super-launch
+                     over its row block (draw-at-true-R PRNG contract) and
+                     the metrics reducer folds whole windows at once; the
+                     weak-scaling twin of ``fleet_mega``.
+
+``--profile`` breaks the megakernel rollout's wall clock into its dispatch
+phases (single super-launch vs per-period chunked launches vs the slow
+boundary) and, given a directory, wraps the run in a ``jax.profiler`` trace
+for TensorBoard/Perfetto drill-down.
 
 Each path is recorded as a separate entry in the repo-root
 ``BENCH_fleet.json`` (schema ``{benchmark, device, entries: [{name, config,
@@ -59,6 +69,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import time
 
@@ -276,11 +287,121 @@ def bench_sharded(r_local: int, t: int, devices: int,
             reducer=reducer))
     return {
         "workload": "fleet_sharded", "r": r, "t": t, "scenario": scenario,
-        "devices": devices,
+        "devices": devices, "host_cores": os.cpu_count() or 1,
         "compile_s": round(compile_s, 3),
         "run_s": round(run_s, 4),
         "cell_windows_per_s": round(r * t / run_s, 1),
     }
+
+
+def bench_mega_sharded(r_local: int, t: int, devices: int,
+                       scenario: str = "paper-burst") -> dict:
+    """Device-sharded whole-window megakernel at weak scaling.
+
+    The mega router through :func:`repro.api.engine.sharded_rollout`: one
+    super-launch per shard over its row block, window-level metric
+    reduction on device.  Same mesh/key contract as :func:`bench_sharded`,
+    so the pair of curves prices exactly the engine-path swap the sharded
+    fleet gets from ``Experiment(mega=True, shard="auto")``.
+    """
+    from repro.api import engine as engine_mod
+    from repro.api.experiment import FleetMetricsReducer, _build_world_padded
+    from repro.core.topology import default_topology
+
+    r = r_local * devices
+    spec = api.ShardSpec(devices=devices)
+    _, params, env_step = _build_world_padded(
+        default_topology(), scenario, r, t, 1.0, 0, r, devices)
+    router = api.AifRouter(cfg=AifConfig(), fused=True, mega=True)
+    reducer = FleetMetricsReducer(n_cells=r)
+    key = jax.random.key(0)
+
+    def make_args():
+        return (batched.init_fluid_state(params),)
+
+    compile_s, run_s = _bench(
+        make_args,
+        lambda est: engine_mod.sharded_rollout(
+            router, est, env_step, t, key, shard=spec, n_cells=r,
+            reducer=reducer))
+    return {
+        "workload": "fleet_mega_sharded", "r": r, "t": t,
+        "scenario": scenario, "devices": devices,
+        "host_cores": os.cpu_count() or 1,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def profile_mega(r: int, t: int, scenario: str = "paper-burst",
+                 trace_dir: str | None = None) -> None:
+    """Per-phase wall breakdown of the megakernel rollout.
+
+    Times the same rollout three ways on one warm process:
+
+    * the single super-launch (one dispatch for all T windows),
+    * chunked per-period launches (``launch_periods=1`` — the PR-7
+      dispatch cadence), whose excess over the super-launch is the host
+      dispatch gap the super-launch eliminated,
+    * the slow boundary alone (jitted :func:`repro.core.mega.mega_slow_step`
+      on the final state), scaled by the number of boundaries.
+
+    With ``trace_dir`` the super-launch run is additionally wrapped in a
+    ``jax.profiler`` trace (open with TensorBoard's profile plugin or
+    Perfetto) for op-level drill-down.
+    """
+    from repro.core.mega import mega_slow_step
+
+    sc_cfg = SimConfig()
+    sc = scenarios.build_scenario(scenario, sc_cfg, r, t)
+    params = batched.params_from_config(sc_cfg, r, sc.capacity_scale)
+    env_step = batched.make_scenario_env_step(params, sc)
+    key = jax.random.key(0)
+    router = api.AifRouter(cfg=AifConfig(), fused=True, mega=True)
+    period = router.period
+    n_bound = t // period
+
+    def timed(launch_periods=None):
+        est = batched.init_fluid_state(params)
+        jax.block_until_ready(est)
+        t0 = time.perf_counter()
+        out = api.rollout(router, None, est, env_step, t, key,
+                          launch_periods=launch_periods)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0, out
+
+    # warm both programs, then measure
+    _, (state, _, _) = timed()
+    timed(launch_periods=1)
+    single_s, _ = timed()
+    chunked_s, _ = timed(launch_periods=1)
+
+    slow = jax.jit(lambda s, k: mega_slow_step(s, k, router.cfg))
+    keys = jax.random.split(jax.random.key(1), r)
+    jax.block_until_ready(slow(state, keys))
+    t0 = time.perf_counter()
+    jax.block_until_ready(slow(state, keys))
+    slow_s = (time.perf_counter() - t0) * n_bound
+
+    gap = chunked_s - single_s
+    print(f"profile[fleet_mega r={r} t={t} scenario={scenario}]:")
+    print(f"  super-launch (1 dispatch)      {single_s * 1e3:9.2f} ms "
+          f"({r * t / single_s:,.0f} cw/s)")
+    print(f"  chunked, launch_periods=1      {chunked_s * 1e3:9.2f} ms "
+          f"over {n_bound} launches")
+    print(f"  host dispatch gap eliminated   {gap * 1e3:9.2f} ms "
+          f"({gap / max(n_bound, 1) * 1e3:.3f} ms/launch)")
+    print(f"  slow boundary (streamed)       {slow_s * 1e3:9.2f} ms "
+          f"total across {n_bound} boundaries "
+          f"({100 * slow_s / max(single_s, 1e-12):.1f}% of super-launch "
+          f"wall)", flush=True)
+    if trace_dir:
+        with jax.profiler.trace(trace_dir):
+            timed()
+        print(f"profiler trace written to {trace_dir} (open with "
+              f"TensorBoard's profile plugin or ui.perfetto.dev)",
+              flush=True)
 
 
 def _sharded_roofline(r_local: int, t: int, devices: int,
@@ -465,13 +586,15 @@ def run(quick: bool = False, use_pallas: bool = False,
 
 def run_shard(quick: bool = False, scenario: str = "paper-burst",
               r_local: int = 64, t: int = 120) -> list[dict]:
-    """Weak-scaling curve of the device-sharded closed loop.
+    """Weak-scaling curves of the device-sharded closed loops.
 
     Fixed cells-per-device, device counts 1 / 2 / 4 (capped at what is
     local — run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
-    for the full curve on CPU).  ``--quick`` drops the middle point; the
-    endpoints keep the same (name, r, t, scenario) keys as the full curve
-    so the CI regression gate matches them against the committed rows.
+    for the full curve on CPU), per-tick (``fleet_sharded``) and megakernel
+    (``fleet_mega_sharded``) engine paths.  ``--quick`` drops the middle
+    point; the endpoints keep the same (name, r, t, scenario) keys as the
+    full curve so the CI regression gate matches them against the committed
+    rows.
     """
     avail = jax.local_device_count()
     counts = [d for d in (1, 2, 4) if d <= avail]
@@ -483,6 +606,9 @@ def run_shard(quick: bool = False, scenario: str = "paper-burst",
     _print_row(rows[0])
     for d in counts:
         rows.append(bench_sharded(r_local, t, d, scenario=scenario))
+        _print_row(rows[-1])
+    for d in counts:
+        rows.append(bench_mega_sharded(r_local, t, d, scenario=scenario))
         _print_row(rows[-1])
     _sharded_roofline(r_local, t, counts[-1], scenario=scenario)
     return rows
@@ -522,6 +648,8 @@ def _bench_summary(rows: list[dict], existing: dict | None = None,
                "scenario": row.get("scenario")}
         if "devices" in row:
             cfg["devices"] = row["devices"]
+        if "host_cores" in row:
+            cfg["host_cores"] = row["host_cores"]
         entry = {
             "name": row["workload"],
             "config": cfg,
@@ -559,11 +687,20 @@ def main() -> None:
                          "against the fixed accelerator model and record "
                          "attained-vs-peak rows in BENCH_fleet.json")
     ap.add_argument("--shard", action="store_true",
-                    help="device-sharded weak-scaling curve (fleet_sharded "
-                         "rows) instead of the standard grid; use "
+                    help="device-sharded weak-scaling curves (fleet_sharded "
+                         "+ fleet_mega_sharded rows) instead of the standard "
+                         "grid; use "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=4"
                          " for the full CPU curve")
+    ap.add_argument("--profile", nargs="?", const="", metavar="TRACE_DIR",
+                    help="per-phase wall breakdown of the megakernel "
+                         "rollout (super-launch vs chunked dispatch vs slow "
+                         "boundary); pass a directory to also record a "
+                         "jax.profiler trace there")
     args = ap.parse_args()
+    if args.profile is not None:
+        profile_mega(64, 120, scenario=args.scenario,
+                     trace_dir=args.profile or None)
     if args.json:     # fail fast on an unwritable path, not after the bench
         open(args.json, "a").close()
     rows = (run_shard(quick=args.quick, scenario=args.scenario)

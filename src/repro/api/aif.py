@@ -37,8 +37,9 @@ class AifRouter(Router):
       use_pallas: with ``fused``, dispatch the Pallas TPU kernel rather
         than the XLA oracle.
       mega: run the whole-window megakernel engine path — the transition
-        model stays in factored (slot) form, W fast ticks fuse into one
-        launch per slow period and the rollout carry becomes a
+        model stays in factored (slot) form, the whole rollout fuses into
+        one super-launch (periods scanned inside; chunk with the engine's
+        ``launch_periods``) and the rollout carry becomes a
         :class:`repro.core.mega.MegaFleetState` (densify with
         :func:`repro.core.mega.to_agent_state`).  With ``use_pallas`` the
         window dispatches the Pallas megakernel instead of its XLA oracle.

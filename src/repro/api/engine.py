@@ -57,7 +57,8 @@ def rollout(router: Router,
             key: jax.Array,
             *,
             obs_masked: bool | None = None,
-            t0: int | None = None):
+            t0: int | None = None,
+            launch_periods: int | None = None):
     """Closed-loop fleet experiment as one on-device ``lax.scan``.
 
     Args:
@@ -77,6 +78,12 @@ def rollout(router: Router,
       t0: fast ticks already elapsed on every cell's clock (static).  Only
         needed when ``carry`` is traced; concrete carries are introspected
         via ``router.clock_phase``.
+      launch_periods: mega routers only — dispatch the super-launch in
+        chunks of this many slow periods instead of one jit spanning the
+        whole horizon (actions and final state bit-identical, telemetry
+        floats within ulps; bounds per-launch compile scope and aligns
+        with :func:`resumable_rollout` checkpoint boundaries).  None
+        (default) launches the whole run at once.
 
     Returns:
       (final carry, final env state, :class:`~repro.core.fleet.FleetTrace`).
@@ -86,8 +93,12 @@ def rollout(router: Router,
     if getattr(router, "mega", False):
         state, est, trace, _ = _mega_rollout(
             router, carry, env_state, env_step, n_steps, key,
-            obs_masked=obs_masked, t0=t0)
+            obs_masked=obs_masked, t0=t0, launch_periods=launch_periods)
         return state, est, trace
+    if launch_periods is not None:
+        raise ValueError(
+            "launch_periods only applies to mega routers (the per-tick "
+            "engine is a single scan already); set mega=True or drop it")
     period = max(int(router.period), 1)
     clock_phase = (int(t0) % period if t0 is not None
                    else router.clock_phase(carry))
@@ -458,17 +469,25 @@ def _rollout_core(carry0,
 def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
                   key: jax.Array, *, obs_masked: bool | None,
                   t0: int | None, t_begin: int = 0, state_in=None,
-                  obs_carry=None, n_total: int | None = None):
+                  obs_carry=None, n_total: int | None = None,
+                  launch_periods: int | None = None):
     """Whole-window engine path (``router.mega``).
 
-    One launch per slow period instead of per tick: the router carry is the
-    factored :class:`repro.core.mega.MegaFleetState` (slots + derived
-    cache, no dense B), the per-period key chain is pre-split
+    One launch per rollout (or per ``launch_periods`` chunk): the router
+    carry is the factored :class:`repro.core.mega.MegaFleetState` (slots +
+    derived cache, no dense B on the hot path), the key chain is pre-split
     (:func:`_key_block` — same tree as the per-tick engine, so the
     environment and sampling randomness match it bit-for-bit) and the env
     advances *inside* the fused window.  Requires the env adapter's
-    ``.fluid`` ingredients (:func:`repro.envsim.batched.make_env_step`)
-    and a fresh fleet clock — slots are indexed by global tick.
+    ``.fluid`` ingredients (:func:`repro.envsim.batched.make_env_step`).
+
+    Slots are indexed by global tick, so a run either starts on a fresh
+    fleet clock or *promotes* a warm dense
+    :class:`~repro.core.agent.AgentState` (a per-tick engine carry whose
+    uniform clock sits on a slow-period/dwell boundary) onto the mega path
+    via :func:`repro.core.mega.init_mega_state`'s ``from_agent_state`` —
+    the env schedules are then indexed globally (same world), i.e. they
+    must cover ``[t_warm, t_warm + n_steps)``.
     """
     fl = getattr(env_step, "fluid", None)
     if fl is None:
@@ -483,30 +502,66 @@ def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
         raise ValueError(
             f"mega rollouts start on a fresh fleet clock (t0=0), got "
             f"t0={t0}: transition slots are indexed by the global tick")
+    period = max(int(router.period), 1)
     t = getattr(carry, "t", None)
+    warm = 0
     if t is not None:
         if isinstance(t, jax.core.Tracer):
             raise ValueError(
                 "mega rollouts cannot resume from a traced carry — pass "
                 "carry=None (or a fresh init_carry) outside jit")
-        if np.asarray(t).size and np.any(np.asarray(t) != 0):
-            raise ValueError(
-                "mega rollouts start from a fresh fleet (t == 0 on every "
-                "cell); to continue a warm fleet run the per-tick engine "
-                "(mega=False), or densify the mega carry with "
-                "repro.core.mega.to_agent_state first")
+        t_np = np.asarray(t)
+        if t_np.size and np.any(t_np != 0):
+            if isinstance(carry, mega_mod.MegaFleetState):
+                raise ValueError(
+                    "a warm MegaFleetState cannot seed a new rollout (its "
+                    "slots were sized for the previous horizon) — densify "
+                    "it with repro.core.mega.to_agent_state and pass the "
+                    "dense carry; it will be re-promoted at the new size")
+            # dense per-tick carry -> promote onto the mega path mid-life
+            vals = np.unique(t_np)
+            if vals.size != 1:
+                raise ValueError(
+                    "warm mega promotion needs a uniform fleet clock; got "
+                    f"t in {vals[:8]}")
+            warm = int(vals[0])
+            dwell = max(int(router.dwell), 1)
+            if warm % period or warm % dwell:
+                raise ValueError(
+                    f"warm mega promotion must start on a slow-period and "
+                    f"dwell boundary (t % {period} == 0 and % {dwell} == "
+                    f"0), got t={warm}")
+            if router.use_pallas:
+                raise ValueError(
+                    "warm-promoted fleets run the XLA oracle window (the "
+                    "Pallas megakernel's factored operands assume the "
+                    "fresh sticky transition prior, not a promoted dense "
+                    "baseline) — set use_pallas=False for mega "
+                    "continuation runs")
+            if t_begin:
+                raise ValueError("warm promotion and a resumable t_begin "
+                                 "cannot be combined")
+            t_begin = warm
     if obs_masked is None:
         obs_masked = bool(getattr(env_step, "emits_mask", False))
     cfg = router.cfg
     r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     if state_in is None:
         # slots are indexed by global tick, so a chunked run must size them
-        # to the *whole* horizon up front (n_total), not this chunk's
+        # to the *whole* horizon up front (n_total), not this chunk's —
+        # and a promoted run to the warm prefix plus its remaining horizon
         slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
                       else jnp.float32)
+        horizon = warm + (n_total if n_total is not None else n_steps)
         state_in = mega_mod.init_mega_state(
-            cfg, r, n_total if n_total is not None else n_steps,
-            slot_dtype=slot_dtype)
+            cfg, r, horizon, slot_dtype=slot_dtype,
+            from_agent_state=(carry if warm else None))
+    if warm and fl.arrival_rate.shape[0] < warm + n_steps:
+        raise ValueError(
+            f"warm mega promotion indexes the env schedules globally (same "
+            f"world): need at least {warm + n_steps} scheduled ticks, got "
+            f"{fl.arrival_rate.shape[0]} — build the env_step over the "
+            f"full-run schedules")
     if obs_carry is None:
         m, k_tiers = router.n_modalities, router.n_tiers
         obs_carry = (jnp.zeros((r, m), jnp.float32),
@@ -514,13 +569,37 @@ def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
                      jnp.ones((r, k_tiers), jnp.float32),
                      jnp.zeros((r, k_tiers), jnp.float32),
                      jnp.ones((r, m), jnp.float32))
-    state, est, trace, snap = _mega_impl(
-        state_in, env_state, obs_carry, fl.params, fl.arrival_rate,
-        fl.hazard_scale, fl.obs_valid, fl.forced_down, fl.speed, key,
-        jnp.asarray(t_begin, jnp.int32), router=router, n_steps=n_steps,
-        obs_masked=obs_masked, dt=fl.dt, scrape_every=fl.scrape_every,
-        restart_blackout=fl.restart_blackout)
-    return state, est, trace, snap
+
+    def launch(state, est, obs, k, tb, n):
+        return _mega_impl(
+            state, est, obs, fl.params, fl.arrival_rate, fl.hazard_scale,
+            fl.obs_valid, fl.forced_down, fl.speed, k,
+            jnp.asarray(tb, jnp.int32), router=router, n_steps=n,
+            obs_masked=obs_masked, dt=fl.dt, scrape_every=fl.scrape_every,
+            restart_blackout=fl.restart_blackout)
+
+    if launch_periods is None:
+        return launch(state_in, env_state, obs_carry, key, t_begin, n_steps)
+    if int(launch_periods) < 1:
+        raise ValueError(f"launch_periods must be >= 1, got {launch_periods}")
+    # chunked super-launch: same windows, same key chain, same slot indices
+    # — only the host-side dispatch granularity changes.  Actions and the
+    # final factored state are bit-identical to the single launch (the
+    # chain key and telemetry carry thread through each launch's snapshot);
+    # recorded raw-telemetry floats can drift by ulps, since each chunk
+    # shape compiles its own XLA program with different fusion.
+    chunk = int(launch_periods) * period
+    state, est, obs, k = state_in, env_state, obs_carry, key
+    traces, c0 = [], 0
+    while c0 < n_steps:
+        n = min(chunk, n_steps - c0)
+        state, est, tr, (obs, k) = launch(state, est, obs, k,
+                                          t_begin + c0, n)
+        traces.append(tr)
+        c0 += n
+    trace = (traces[0] if len(traces) == 1 else jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traces))
+    return state, est, trace, (obs, k)
 
 
 @functools.partial(jax.jit,
@@ -639,6 +718,12 @@ def sharded_rollout(router: Router,
     accumulator whose reductions are ``psum``-ed across the mesh — trace
     memory never exceeds O(R/devices).
 
+    ``mega`` routers run the whole-window super-launch per shard
+    (:func:`_sharded_mega_impl`): same key-block contract, with the
+    reducer consuming each fused window's stacked trace at once
+    (``reducer.update_window``).  A 1-device mesh is bit-identical to the
+    unsharded mega engine.
+
     Args:
       router: static router spec; ``init_carry`` must be deterministic in
         its cell count (all in-repo routers are — zeros / broadcast priors).
@@ -671,12 +756,6 @@ def sharded_rollout(router: Router,
             "rollouts need a row_block-aware adapter (see "
             "repro.envsim.batched.make_env_step); wrap or rebuild the "
             "closure instead of sharding a schedule-blind one")
-    if getattr(router, "mega", False):
-        raise ValueError(
-            "sharded_rollout does not support mega=True yet: the megakernel "
-            "window manages its own PRNG block and trace layout, which the "
-            "shard_map reducer contract does not cover — run the mega path "
-            "unsharded (rollout) or set mega=False for multi-device runs")
     r_pad, _ = shard.padded(n_cells)
     lead = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     if lead != r_pad:
@@ -687,6 +766,25 @@ def sharded_rollout(router: Router,
             "the padded size)")
     if obs_masked is None:
         obs_masked = bool(getattr(env_step, "emits_mask", False))
+    if getattr(router, "mega", False):
+        # super-launch per shard: the whole-window engine runs inside the
+        # shard_map body with this shard's row_block, so the PRNG block and
+        # env randomness stay device-count-invariant (draw-at-true-R)
+        if getattr(env_step, "fluid", None) is None:
+            raise ValueError(
+                "sharded mega rollouts need the env adapter's whole-window "
+                "ingredients (env_step.fluid, set by "
+                "repro.envsim.batched.make_env_step)")
+        if n_steps <= 0:
+            raise ValueError("mega rollouts need n_steps >= 1")
+        fl = env_step.fluid
+        return _sharded_mega_impl(
+            env_state, key, fl.params, fl.arrival_rate, fl.hazard_scale,
+            fl.obs_valid, fl.forced_down, fl.speed, router=router,
+            n_steps=n_steps, obs_masked=obs_masked, spec=shard,
+            n_cells=n_cells, reducer=reducer, dt=fl.dt,
+            scrape_every=fl.scrape_every,
+            restart_blackout=fl.restart_blackout)
     clock_phase = router.clock_phase(router.init_carry(1))
     return _sharded_impl(env_state, key, router=router, env_step=env_step,
                          n_steps=n_steps, obs_masked=obs_masked,
@@ -731,6 +829,124 @@ def _sharded_impl(env_state,
     return shard_map(body, mesh=mesh,
                      in_specs=(P(axis), P()),
                      out_specs=(P(axis), P(axis), P()))(env_state, key)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("router", "n_steps", "obs_masked",
+                                    "spec", "n_cells", "reducer", "dt",
+                                    "scrape_every", "restart_blackout"),
+                   donate_argnames=("env_state",))
+def _sharded_mega_impl(env_state,
+                       key: jax.Array,
+                       params,
+                       arrival: jnp.ndarray,
+                       hazard: jnp.ndarray,
+                       obs_valid: jnp.ndarray | None,
+                       forced_down: jnp.ndarray | None,
+                       speed: jnp.ndarray | None,
+                       *,
+                       router: Router,
+                       n_steps: int,
+                       obs_masked: bool,
+                       spec,
+                       n_cells: int,
+                       reducer,
+                       dt: float,
+                       scrape_every: int,
+                       restart_blackout: bool):
+    """:func:`_mega_impl` under ``shard_map`` (the sharded super-launch).
+
+    Each shard runs the whole-window engine over its R/devices rows: the
+    :class:`~repro.core.mega.MegaFleetState` is initialized inside the
+    shard, the per-period key block is drawn at the true-R global shape and
+    row-sliced (:func:`_key_block` with ``rows``), and the env schedules —
+    replicated operands, same operand-ness as :func:`_mega_impl` so XLA
+    compiles the same arithmetic — are time-sliced here and row-sliced
+    inside :func:`repro.envsim.batched.fluid_window_step` via the window's
+    ``row_block``.  Instead of stacking per-tick traces, each fused
+    window's (W, ...) trace is folded into the reducer at once
+    (``reducer.update_window``), keeping trace memory O(R/devices).
+    """
+    mesh = spec.build_mesh()
+    r_pad, r_local = spec.padded(n_cells)
+    axis = spec.axis
+    cfg = router.cfg
+    a_n = cfg.n_actions
+    period = max(int(router.period), 1)
+    slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
+                  else jnp.float32)
+    statics = dict(cfg=cfg, disc=router.resolved_disc,
+                   util_edges=router.resolved_util_edges,
+                   util_period=router.util_period, dt=dt,
+                   scrape_every=scrape_every,
+                   restart_blackout=restart_blackout,
+                   emits_mask=obs_masked, use_pallas=router.use_pallas)
+
+    def body(est, k, params, arrival, hazard, obs_valid, forced_down, speed):
+        row0 = jax.lax.axis_index(axis) * r_local
+        rows = (row0, n_cells, r_pad)
+        state0 = mega_mod.init_mega_state(cfg, r_local, n_steps,
+                                          slot_dtype=slot_dtype)
+        obs0 = _fresh_obs_carry(r_local, router.n_modalities, router.n_tiers)
+        stats0 = reducer.init(r_local, row0)
+
+        def window(carry, t_start, w_ticks: int, do_slow: bool):
+            state, est, obs, k, stats = carry
+            k, (k_env, k_fast, k_slow) = _key_block(k, w_ticks, r_local,
+                                                    rows)
+            gum = jax.vmap(jax.vmap(
+                lambda kk: jax.random.gumbel(kk, (a_n,))))(k_fast)
+            arr_w = jax.lax.dynamic_slice_in_dim(arrival, t_start, w_ticks)
+            haz_w = jax.lax.dynamic_slice_in_dim(hazard, t_start, w_ticks)
+            ov_w = (None if obs_valid is None
+                    else jax.lax.dynamic_slice_in_dim(obs_valid, t_start,
+                                                      w_ticks))
+            fd_w = (None if forced_down is None
+                    else jax.lax.dynamic_slice_in_dim(forced_down,
+                                                      t_start, w_ticks))
+            sp_w = (None if speed is None
+                    else jax.lax.dynamic_slice_in_dim(speed, t_start,
+                                                      w_ticks))
+            state, est, obs, ys = efe_ops.mega_window(
+                state, est, obs, params, arr_w, haz_w, ov_w, k_env, gum,
+                jnp.asarray(t_start, jnp.int32), forced_down=fd_w,
+                speed=sp_w, row_block=rows, **statics)
+            if do_slow:
+                state = mega_mod.mega_slow_step(state, k_slow[-1], cfg)
+            ev = jnp.zeros((w_ticks, r_local), jnp.float32)
+            if getattr(cfg, "watchdog", False):
+                bad = mega_mod.mega_watchdog_bad(state)
+                state = jax.lax.cond(
+                    jnp.any(bad),
+                    lambda s: mega_mod.mega_quarantine(s, bad, cfg),
+                    lambda s: s, state)
+                ev = ev.at[-1].set(bad.astype(jnp.float32))
+            actions, weights, raw_obs, unstable, obs_frac, win = ys
+            tr = FleetTrace(actions=actions, routing_weights=weights,
+                            raw_obs=raw_obs, unstable=unstable,
+                            obs_frac=obs_frac, env=win, watchdog=ev)
+            stats = reducer.update_window(stats, t_start, tr)
+            return (state, est, obs, k, stats)
+
+        carry = (state0, est, obs0, k, stats0)
+        n_periods, n_rem = divmod(n_steps, period)
+        if n_periods:
+            def period_body(c, p_idx):
+                return window(c, p_idx * period, period, do_slow=True), None
+
+            carry, _ = jax.lax.scan(period_body, carry,
+                                    jnp.arange(n_periods, dtype=jnp.int32))
+        if n_rem:
+            carry = window(carry, jnp.asarray(n_periods * period, jnp.int32),
+                           n_rem, do_slow=False)
+        state, est_out, _, _, stats = carry
+        return state, est_out, reducer.finalize(stats, axis)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis), P(), P(), P(), P(), P(), P(), P()),
+                     out_specs=(P(axis), P(axis), P()))(
+                         env_state, key, params, arrival, hazard, obs_valid,
+                         forced_down, speed)
 
 
 # ------------------------------------------------------- checkpointed chunking
@@ -782,7 +998,8 @@ def resumable_rollout(router: Router,
                       t_begin: int = 0,
                       snapshot=None,
                       obs_masked: bool | None = None,
-                      n_total: int | None = None):
+                      n_total: int | None = None,
+                      launch_periods: int | None = None):
     """One chunk of a checkpointable rollout: ticks [t_begin, t_begin+n).
 
     The chunked twin of :func:`rollout` (per-tick and ``mega`` paths).  A
@@ -820,8 +1037,13 @@ def resumable_rollout(router: Router,
         state, est, trace, (obs_out, k_out) = _mega_rollout(
             router, carry if snapshot is None else None, env_state, env_step,
             n_steps, key, obs_masked=obs_masked, t0=None, t_begin=t_begin,
-            state_in=state_in, obs_carry=obs_c, n_total=n_total)
+            state_in=state_in, obs_carry=obs_c, n_total=n_total,
+            launch_periods=launch_periods)
         return state, est, trace, (obs_out, k_out)
+    if launch_periods is not None:
+        raise ValueError(
+            "launch_periods only applies to mega routers (the per-tick "
+            "engine is a single scan already); set mega=True or drop it")
     r = jax.tree_util.tree_leaves(env_state)[0].shape[0]
     if snapshot is None:
         # materialized host-side (not the in-core None default) so every

@@ -169,6 +169,26 @@ class FleetMetricsReducer:
             t_idx >= 1, jnp.sum(ys.obs_frac * valid), 0.0)
         return (valid, hist50, hist95, obs_sum)
 
+    def update_window(self, stats, t0, ys):
+        """Fold one fused window's stacked (W, ...) trace in at once.
+
+        The whole-window mega engine produces each window's trace as one
+        stacked pytree, so the reducer consumes it in one vectorized
+        deposit instead of W scan iterations.  Mathematically identical to
+        W sequential :meth:`update` calls (the histograms are pure
+        scatter-adds; only the accumulation order differs by ulps).
+        ``t0`` is the traced global tick of the window's first tick.
+        """
+        valid, hist50, hist95, obs_sum = stats
+        mass = ys.env.tier_completed * valid[None, :, None]
+        hist50 = self._deposit(hist50, ys.env.tier_latency_s, mass)
+        hist95 = self._deposit(hist95, ys.env.tier_p95_s, mass)
+        w = ys.obs_frac.shape[0]
+        steady = (t0 + jnp.arange(w) >= 1).astype(jnp.float32)
+        obs_sum = obs_sum + jnp.sum(
+            steady[:, None] * ys.obs_frac * valid[None, :])
+        return (valid, hist50, hist95, obs_sum)
+
     def finalize(self, stats, axis: str):
         _, hist50, hist95, obs_sum = stats
         return (jax.lax.psum(hist50, axis), jax.lax.psum(hist95, axis),
@@ -189,13 +209,21 @@ class Experiment:
       seed: drives the scenario schedules and the rollout PRNG.
       window_s: control-window length in seconds.
       fused / use_pallas: AIF execution path (ignored for baselines).
-      mega: run AIF on the whole-window megakernel engine path (one fused
-        launch per slow period, factored transition cache — see
+      mega: run AIF on the whole-window megakernel engine path (the
+        multi-period super-launch: one jit spans the run, factored
+        transition cache, streaming slow boundaries — see
         :mod:`repro.core.mega`).  Requires a fresh fleet clock, so the run
-        always starts from ``carry=None``; incompatible with ``shard``.
+        always starts from ``carry=None``.  Composes with ``shard``: the
+        super-launch then runs per device shard with on-device metric
+        reduction (bit-identical to unsharded on a 1-device mesh).
       mega_slot_dtype: storage dtype of the megakernel's transition slots
         ("float32" or "bfloat16" — mixed precision: bf16 store, fp32
         accumulate).
+      launch_periods: mega only — dispatch the super-launch in chunks of
+        this many slow periods instead of one jit over the whole horizon
+        (actions and final state bit-identical, telemetry floats within
+        ulps; bounds compile scope).  None = single launch.  Not available
+        with ``shard`` (the sharded super-launch is one program).
       shard: device sharding of the cell axis — None (unsharded engine,
         full per-tick trace), ``"auto"`` (all local devices) or a
         :class:`~repro.api.shard.ShardSpec`.  Sharded runs keep trace
@@ -234,6 +262,7 @@ class Experiment:
     use_pallas: bool = False
     mega: bool = False
     mega_slot_dtype: str = "float32"
+    launch_periods: int | None = None
     shard: ShardSpec | str | None = None
     checkpoint_every: int = 0
     checkpoint_dir: str | None = None
@@ -433,7 +462,7 @@ def _run_dense(e: Experiment, topo: Topology) -> RunResult:
         carry, est, trace = rollout(
             router, init,
             batched.init_fluid_state(params), env_step, e.n_windows,
-            jax.random.key(e.seed))
+            jax.random.key(e.seed), launch_periods=e.launch_periods)
         boundaries = ()
     jax.block_until_ready(est)
     wall = time.perf_counter() - t0
@@ -580,7 +609,8 @@ def _chunked_rollout(e: Experiment, router, params, env_step):
     for t, n in _chunk_sizes(e, t_begin):
         carry, env, tr, snapshot = resumable_rollout(
             router, carry, env, env_step, n, key, t_begin=t,
-            snapshot=snapshot, n_total=(e.n_windows if mega else None))
+            snapshot=snapshot, n_total=(e.n_windows if mega else None),
+            launch_periods=(e.launch_periods if mega else None))
         traces.append(jax.device_get(tr))
         if t + n < e.n_windows:
             boundaries.append(t + n)
@@ -693,6 +723,11 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
     breakdown and restarts are computed exactly as in the unsharded path —
     on the true R rows only.
     """
+    if e.launch_periods is not None:
+        raise ValueError(
+            "launch_periods is not available on sharded runs — the sharded "
+            "super-launch is a single shard_map program; drop shard or "
+            "launch_periods")
     r_pad, r_local = spec.padded(e.n_cells)
     scfg, params, env_step = _build_world_padded(
         topo, e.scenario, e.n_cells, e.n_windows, e.window_s, e.seed,

@@ -7,26 +7,43 @@ streams an (S, S) row of it.  But the counts are *structurally low rank*:
 
     b_counts = b0 + α_B · Σ_j  w_j · 1[act_j = a] · q_next_j ⊗ q_prev_j
 
-where ``b0 = u + d·I`` is the sticky prior and the sum runs over replayed
+where ``b0`` is the sticky prior (or, for a warm-promoted fleet, the source
+fleet's already-learned dense counts) and the sum runs over replayed
 transition slots ``j`` with weights that change only on slow boundaries
-(``w_j = settle(Δt_j) · #times-sampled``).  This module keeps the model in
-that factored form — the dense B is *never* materialized:
+(``w_j = settle(Δt_j) · #times-sampled``).  This module keeps that factored
+bookkeeping:
 
 * :class:`MegaSlots` — every pushed transition of the rollout, one slot per
   tick (the rollout horizon is bounded by the replay capacity, so the
   legacy ring buffer never wraps and slot index == tick index).
-* :class:`MegaCache` — the per-slow-period derived tensors: per-slot
-  coefficients, the (R, A, S) column sums of the implicit B, the normalized
-  observation model and its EFE projection rows.  All quasi-static within a
-  period (same invariant the legacy ``ModelCache`` pins).
-* Factored belief prior and EFE that touch O(J·S) instead of O(S²) per
-  tick — belief update → EFE → Gumbel argmax sampling → dwell gate → env
-  window update run as one fused whole-window program
+* :class:`MegaCache` — quasi-static derived tensors (per-column B
+  normalizers, EFE projection rows, per-slot coefficients).  The dense
+  (R, A, S, S) tensor is never materialized in the hot loop: at the
+  paper's S=243 it would be ~300 MB for a 64-cell fleet and every belief
+  or EFE tick would stream it from HBM.
+* Factored belief prior and EFE (:func:`factored_prior` /
+  :func:`factored_efe`) — belief update → EFE → Gumbel argmax sampling →
+  dwell gate → env window update run as one fused whole-window program
   (:func:`mega_window`), the XLA oracle twin of the Pallas megakernel.
 
+**Streaming slow boundaries.**  The boundary step advances the cache
+*incrementally* from the replayed batch (:func:`_advance_cache`): the
+per-column normalizer ``colsum`` gains the batch's O(batch·A·S)
+scatter-free delta (the same per-draw association the per-tick
+:func:`repro.core.learning.update_transition_model` einsum uses), the
+per-slot coefficient rows are re-evaluated elementwise (linear in the
+slot-hit counts), and only the A-derived rows (``logna``/``proj``/
+``projsum``/``qnproj``) are recomputed in full — the A update renormalizes
+whole modality rows, so per-row selection would save nothing there.
+:func:`_refresh_cache` remains as the from-scratch fallback (init,
+quarantine, warm promotion, tests): the slots' ``wcount`` is sufficient
+statistics for it, and the incremental and full forms are mathematically
+identical (the cache is linear in the hit counts), differing only in
+floating-point association.
+
 Semantics match the legacy fused path term-for-term (same guard constants,
-same op order); only floating-point reassociation differs (the j-sum
-replaces a dense matvec), pinned by the rollout-parity tests at 1e-4.
+same op order); only floating-point reassociation differs, pinned by the
+rollout-parity tests at 1e-4 (actions bit-equal).
 """
 from __future__ import annotations
 
@@ -34,6 +51,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import agent as agent_mod
 from repro.core import belief as belief_mod
@@ -50,6 +68,9 @@ class MegaSlots(NamedTuple):
     steps so far — is the *only* mutable learning state:
     the implicit B-count contribution of slot ``j`` is
     ``α_B · settle(Δt_j) · wcount_j · q_next_j ⊗ q_prev_j``.
+    The engine's boundary step folds each replayed batch into the cache
+    incrementally; ``wcount`` stays the sufficient statistic for the
+    from-scratch :func:`_refresh_cache` fallback.
 
     ``q_prev`` / ``q_next`` may be stored in bfloat16 (``slot_dtype``) —
     every consumer accumulates in float32.
@@ -65,13 +86,15 @@ class MegaSlots(NamedTuple):
 
 
 class MegaCache(NamedTuple):
-    """Quasi-static derived tensors, refreshed once per slow period.
+    """Quasi-static derived tensors, advanced once per slow period.
 
     With ``u = b_prior_uniform / S`` and ``d = b_prior_sticky``:
 
-      colsum[a, s]  = (b_prior_uniform + b_prior_sticky)
+      colsum[a, s]  = col0[a, s]
                       + Σ_j coefact[j, a] · Σ_t q_next_j[t] · q_prev_j[s]
-                      (the per-column normalizer of the implicit B)
+                      (the per-column normalizer of the implicit B, where
+                      ``col0`` is the scalar prior column sum — or
+                      ``Σ_t b_base[a, t, s]`` for a warm-promoted fleet)
       coefw[j]      = α_B · settle(Δt_j) · wcount_j
       coefact[j, a] = coefw[j] · 1[action_j = a]
       proj          = the EFE's (P, S) projection rows: the M·NB normalized
@@ -80,6 +103,21 @@ class MegaCache(NamedTuple):
                       both ``proj @ s_pred``.
       qnproj[j, p]  = proj[p] · q_next_j   (per-slot EFE contribution)
       sumqn[j]      = Σ_t q_next_j[t]  (≈ 1; kept exact for the colsum)
+      logna         = log observation model rows for the evidence gather.
+      b_base        = optional (R, A, S, S) dense transition-count baseline
+                      — ``None`` on fresh fleets (the scalar sticky prior
+                      suffices); a warm promotion's already-learned
+                      ``b_counts``.  Static across the rollout: only the
+                      slot terms grow, so it is read (streamed on EFE
+                      ticks), never rewritten.
+
+    Invalidation rule: ``colsum`` advances by the boundary batch's
+    scatter-free delta and the coefficient rows (``coefw``/``coefact``) are
+    re-evaluated elementwise from the bumped hit counts; the A-derived rows
+    (``proj``/``projsum``/``logna``/``qnproj``) are recomputed in full each
+    boundary — every modality row a replayed observation touched is
+    renormalized, and the bin-sum denominator couples the rows of a
+    modality, so per-row selection would save nothing.
     """
 
     colsum: jnp.ndarray    # (R, A, S)
@@ -90,6 +128,7 @@ class MegaCache(NamedTuple):
     coefw: jnp.ndarray     # (R, J)
     coefact: jnp.ndarray   # (R, J, A)
     logna: jnp.ndarray     # (R, M, max_bins, S) log(max(na, 1e-16))
+    b_base: jnp.ndarray | None  # (R, A, S, S) warm baseline or None
 
 
 class MegaFleetState(NamedTuple):
@@ -112,26 +151,11 @@ def n_proj(topo) -> int:
     return topo.n_modalities * topo.max_bins + topo.n_modalities
 
 
-def _refresh_cache(a_counts: jnp.ndarray, slots: MegaSlots,
-                   cfg: generative.AifConfig) -> MegaCache:
-    """Recompute every derived tensor (slow boundaries and init only)."""
-    topo = cfg.topology
+def _a_cache(a_counts: jnp.ndarray, topo):
+    """The observation-model-derived cache rows (recomputed in full at every
+    boundary — the pure O(M·NB·S) per-cell part of the streaming update)."""
     r = a_counts.shape[0]
-    s, a_n = topo.n_states, cfg.n_actions
-    m, nb = topo.n_modalities, topo.max_bins
-    qp = slots.q_prev.astype(jnp.float32)
-    qn = slots.q_next.astype(jnp.float32)
-
-    settle = learning.settle_weight(slots.dt_since_change, cfg)
-    coefw = cfg.alpha_b * settle * slots.wcount                   # (R, J)
-    coefact = coefw[..., None] * jax.nn.one_hot(
-        slots.action, a_n, dtype=jnp.float32)                     # (R, J, A)
-    sumqn = jnp.sum(qn, axis=-1)                                  # (R, J)
-    colsum = (cfg.b_prior_uniform + cfg.b_prior_sticky
-              + jnp.einsum("rja,rjs->ras", coefact * sumqn[..., None], qp))
-
-    # batched normalize_a (same masked counts / bin-sum, axis made
-    # batch-generic) + the EFE projection stack
+    m, nb, s = topo.n_modalities, topo.max_bins, topo.n_states
     mask = spaces.bins_mask(topo)[:, :, None]                     # (M, NB, 1)
     counts = a_counts * mask
     na = counts / jnp.maximum(jnp.sum(counts, axis=-2, keepdims=True), 1e-30)
@@ -139,49 +163,189 @@ def _refresh_cache(a_counts: jnp.ndarray, slots: MegaSlots,
     amb_m = generative.modality_ambiguity_from_normalized(na, topo)
     proj = jnp.concatenate([na.reshape(r, m * nb, s), amb_m], axis=1)
     projsum = jnp.sum(proj, axis=-1)
+    return proj, projsum, logna
+
+
+def slot_coefficients(slots: MegaSlots, cfg: generative.AifConfig,
+                      n_actions: int | None = None):
+    """Per-slot factored B coefficients ``(coefw, coefact)`` from the slots'
+    sufficient statistics (linear in ``wcount``)."""
+    a_n = cfg.n_actions if n_actions is None else n_actions
+    settle = learning.settle_weight(slots.dt_since_change, cfg)
+    coefw = cfg.alpha_b * settle * slots.wcount                   # (R, J)
+    coefact = coefw[..., None] * jax.nn.one_hot(
+        slots.action, a_n, dtype=jnp.float32)                     # (R, J, A)
+    return coefw, coefact
+
+
+def _refresh_cache(a_counts: jnp.ndarray, slots: MegaSlots,
+                   cfg: generative.AifConfig,
+                   b_base: jnp.ndarray | None = None) -> MegaCache:
+    """Recompute every derived tensor from scratch (init, quarantine, warm
+    promotion and the tests' full-refresh fallback — the hot path advances
+    the cache incrementally via :func:`_advance_cache`).
+
+    ``b_base`` replaces the fresh sticky prior as the transition-count
+    baseline (warm promotion: the source fleet's dense ``b_counts``).
+    """
+    topo = cfg.topology
+    a_n = cfg.n_actions
+    qp = slots.q_prev.astype(jnp.float32)
+    qn = slots.q_next.astype(jnp.float32)
+
+    coefw, coefact = slot_coefficients(slots, cfg, a_n)
+    sumqn = jnp.sum(qn, axis=-1)                                  # (R, J)
+    if b_base is None:
+        col0 = cfg.b_prior_uniform + cfg.b_prior_sticky
+    else:
+        col0 = jnp.sum(b_base, axis=-2)                           # (R, A, S)
+    colsum = col0 + jnp.einsum("rja,rjs->ras",
+                               coefact * sumqn[..., None], qp)
+    proj, projsum, logna = _a_cache(a_counts, topo)
     qnproj = jnp.einsum("rps,rjs->rjp", proj, qn)
     return MegaCache(colsum=colsum, proj=proj, projsum=projsum,
                      qnproj=qnproj, sumqn=sumqn, coefw=coefw,
-                     coefact=coefact, logna=logna)
+                     coefact=coefact, logna=logna, b_base=b_base)
+
+
+def _advance_cache(cache: MegaCache, a_counts: jnp.ndarray,
+                   slots: MegaSlots,
+                   q_prev_b: jnp.ndarray, q_next_b: jnp.ndarray,
+                   action_b: jnp.ndarray, dt_b: jnp.ndarray,
+                   valid: jnp.ndarray,
+                   cfg: generative.AifConfig) -> MegaCache:
+    """Advance the cache by one boundary's replayed batch.
+
+    ``colsum`` gains the batch's scatter-free O(batch·A·S) delta — the
+    per-draw association of the per-tick engine's
+    :func:`repro.core.learning.update_transition_model` einsum, so the
+    maintained normalizer tracks the per-tick ``b_counts`` column sums
+    update-for-update.  The per-slot coefficient rows are re-evaluated
+    elementwise from the bumped ``wcount`` (bit-equal to the full refresh:
+    same formula, same inputs), and the A-derived rows are refreshed from
+    the already-updated ``a_counts``.  No (R, A, S, S) tensor is formed.
+    """
+    a_n = cfg.n_actions
+    topo = cfg.topology
+    w = learning.settle_weight(dt_b, cfg) * valid                 # (R, n)
+    oh = jax.nn.one_hot(action_b, a_n, dtype=jnp.float32) * w[..., None]
+    sumqn_b = jnp.sum(q_next_b, axis=-1)                          # (R, n)
+    d_col = cfg.alpha_b * jnp.einsum("rna,rns->ras",
+                                     oh * sumqn_b[..., None], q_prev_b)
+    qn = slots.q_next.astype(jnp.float32)
+    coefw, coefact = slot_coefficients(slots, cfg, a_n)
+    sumqn = jnp.sum(qn, axis=-1)
+    proj, projsum, logna = _a_cache(a_counts, topo)
+    qnproj = jnp.einsum("rps,rjs->rjp", proj, qn)
+    return MegaCache(colsum=cache.colsum + d_col, proj=proj,
+                     projsum=projsum, qnproj=qnproj, sumqn=sumqn,
+                     coefw=coefw, coefact=coefact, logna=logna,
+                     b_base=cache.b_base)
 
 
 def init_mega_state(cfg: generative.AifConfig, r: int, n_slots: int,
-                    slot_dtype=jnp.float32) -> MegaFleetState:
-    """Fresh factored fleet state with ``n_slots`` (== rollout horizon) slots.
+                    slot_dtype=jnp.float32,
+                    from_agent_state=None) -> MegaFleetState:
+    """Factored fleet state with ``n_slots`` (== rollout horizon) slots.
 
     Raises if the horizon exceeds the replay capacity — the factored form
     relies on the legacy ring buffer never wrapping (slot == tick).
+
+    ``from_agent_state`` promotes a trained dense
+    :class:`repro.core.agent.AgentState` (the per-tick engine's carry, or
+    :func:`to_agent_state`'s output) onto the mega path mid-life: the dense
+    ``b_counts`` become the cache baseline, the replay entries become the
+    leading slots (tick order — requires the ring not to have wrapped), and
+    the fleet clock continues.  ``init_mega_state(from_agent_state=
+    to_agent_state(s))`` is an exact round-trip.  Must be called outside
+    jit (the fleet clock is introspected).
     """
     if n_slots > cfg.replay_capacity:
         raise ValueError(
             f"megakernel path supports horizons up to the replay capacity "
             f"({cfg.replay_capacity}); got {n_slots} ticks — beyond that the "
             f"legacy ring buffer overwrites slots and the factored "
-            f"slot==tick invariant breaks.  Split the rollout or raise "
-            f"cfg.replay_capacity.")
+            f"slot==tick invariant breaks.  Raise cfg.replay_capacity, "
+            f"split the run into shorter rollouts (re-promote the carry "
+            f"with init_mega_state(from_agent_state=to_agent_state(...)) "
+            f"between them), or chunk the dispatch with "
+            f"rollout(..., launch_periods=...) over a horizon that still "
+            f"fits the capacity.")
     topo = cfg.topology
     s, m, nb = topo.n_states, topo.n_modalities, topo.max_bins
-    a0 = jnp.broadcast_to(
-        generative.init_generative_model(cfg).a_counts, (r, m, nb, s))
+    if from_agent_state is None:
+        a0 = jnp.broadcast_to(
+            generative.init_generative_model(cfg).a_counts, (r, m, nb, s))
+        slots = MegaSlots(
+            q_prev=jnp.zeros((r, n_slots, s), slot_dtype),
+            q_next=jnp.zeros((r, n_slots, s), slot_dtype),
+            obs_bins=jnp.zeros((r, n_slots, m), jnp.int32),
+            obs_mask=jnp.ones((r, n_slots, m), jnp.float32),
+            action=jnp.zeros((r, n_slots), jnp.int32),
+            dt_since_change=jnp.zeros((r, n_slots), jnp.float32),
+            wcount=jnp.zeros((r, n_slots), jnp.float32),
+        )
+        return MegaFleetState(
+            a_counts=a0,
+            slots=slots,
+            cache=_refresh_cache(a0, slots, cfg),
+            belief=jnp.full((r, s), 1.0 / s, jnp.float32),
+            prev_action=jnp.full((r,), policies.BALANCED_ACTION, jnp.int32),
+            dt_since_change=jnp.zeros((r,), jnp.float32),
+            error_ema=jnp.zeros((r,), jnp.float32),
+            unstable=jnp.zeros((r,), bool),
+            t=jnp.zeros((r,), jnp.int32),
+        )
+
+    src = from_agent_state
+    t_arr = np.asarray(src.t)
+    if t_arr.shape[0] != r:
+        raise ValueError(
+            f"from_agent_state carries {t_arr.shape[0]} cells, expected {r}")
+    if t_arr.size == 0 or np.any(t_arr != t_arr.flat[0]):
+        raise ValueError(
+            "warm promotion needs a uniform fleet clock (every cell at the "
+            "same t) — mixed-phase fleets cannot share the slot==tick "
+            "invariant")
+    t_warm = int(t_arr.flat[0])
+    if t_warm > cfg.replay_capacity:
+        raise ValueError(
+            f"warm promotion at t={t_warm} > replay_capacity="
+            f"{cfg.replay_capacity}: the source ring has wrapped, so its "
+            f"entries no longer sit at their tick index")
+    if t_warm > n_slots:
+        raise ValueError(
+            f"warm promotion needs n_slots >= the source clock "
+            f"({t_warm}); got {n_slots} — size the slots to the promoted "
+            f"fleet's whole remaining horizon")
+
+    def head(arr, fill, dtype):
+        out = jnp.full((r, n_slots) + arr.shape[2:], fill, dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            out, arr[:, :n_slots].astype(dtype), 0, axis=1)
+
+    rep = src.replay
     slots = MegaSlots(
-        q_prev=jnp.zeros((r, n_slots, s), slot_dtype),
-        q_next=jnp.zeros((r, n_slots, s), slot_dtype),
-        obs_bins=jnp.zeros((r, n_slots, m), jnp.int32),
-        obs_mask=jnp.ones((r, n_slots, m), jnp.float32),
-        action=jnp.zeros((r, n_slots), jnp.int32),
-        dt_since_change=jnp.zeros((r, n_slots), jnp.float32),
+        q_prev=head(rep.q_prev, 0.0, slot_dtype),
+        q_next=head(rep.q_next, 0.0, slot_dtype),
+        obs_bins=head(rep.obs_bins, 0, jnp.int32),
+        obs_mask=head(rep.obs_mask, 1.0, jnp.float32),
+        action=head(rep.action, 0, jnp.int32),
+        dt_since_change=head(rep.dt_since_change, 0.0, jnp.float32),
         wcount=jnp.zeros((r, n_slots), jnp.float32),
     )
+    a_counts = src.model.a_counts
     return MegaFleetState(
-        a_counts=a0,
+        a_counts=a_counts,
         slots=slots,
-        cache=_refresh_cache(a0, slots, cfg),
-        belief=jnp.full((r, s), 1.0 / s, jnp.float32),
-        prev_action=jnp.full((r,), policies.BALANCED_ACTION, jnp.int32),
-        dt_since_change=jnp.zeros((r,), jnp.float32),
-        error_ema=jnp.zeros((r,), jnp.float32),
-        unstable=jnp.zeros((r,), bool),
-        t=jnp.zeros((r,), jnp.int32),
+        cache=_refresh_cache(a_counts, slots, cfg,
+                             b_base=src.model.b_counts),
+        belief=src.belief,
+        prev_action=src.prev_action,
+        dt_since_change=src.dt_since_change,
+        error_ema=src.error_ema,
+        unstable=src.unstable,
+        t=src.t,
     )
 
 
@@ -193,15 +357,15 @@ def factored_prior(cache: MegaCache, slots: MegaSlots, belief: jnp.ndarray,
 
     With ``q̃ = q / colsum[a_prev]``:
 
-      prior[t] ∝ u·Σ_s q̃[s] + d·q̃[t] + Σ_j pend_j · q_next_j[t],
+      prior[t] ∝ base_term + Σ_j pend_j · q_next_j[t],
       pend_j = coefact[j, a_prev] · (q_prev_j · q̃)
 
-    — exactly the legacy ``row/colsum @ q`` with the count sum unrolled
-    over slots (two (J, S) GEMVs per router instead of an (S, S) matvec).
+    where ``base_term`` is ``u·Σ_s q̃[s] + d·q̃[t]`` on a fresh fleet and the
+    warm baseline's (S, S) matvec ``b_base[a_prev] q̃`` otherwise — exactly
+    the legacy ``row/colsum @ q`` with the count sum unrolled over slots
+    (two (J, S) GEMVs per router instead of an (S, S) matvec).
     """
     s = belief.shape[-1]
-    u = cfg.b_prior_uniform / s
-    d = cfg.b_prior_sticky
     qp = slots.q_prev.astype(jnp.float32)
     qn = slots.q_next.astype(jnp.float32)
     csum = jnp.take_along_axis(
@@ -210,8 +374,15 @@ def factored_prior(cache: MegaCache, slots: MegaSlots, belief: jnp.ndarray,
     cw = jnp.take_along_axis(
         cache.coefact, prev_action[:, None, None], axis=2)[..., 0]  # (R, J)
     pend = cw * jnp.einsum("rjs,rs->rj", qp, qt)
-    num = (u * jnp.sum(qt, -1, keepdims=True) + d * qt
-           + jnp.einsum("rj,rjt->rt", pend, qn))
+    slot_term = jnp.einsum("rj,rjt->rt", pend, qn)
+    if cache.b_base is None:
+        u = cfg.b_prior_uniform / s
+        d = cfg.b_prior_sticky
+        num = u * jnp.sum(qt, -1, keepdims=True) + d * qt + slot_term
+    else:
+        brow = jnp.take_along_axis(
+            cache.b_base, prev_action[:, None, None, None], axis=1)[:, 0]
+        num = jnp.einsum("rts,rs->rt", brow, qt) + slot_term
     return num / jnp.maximum(jnp.sum(num, -1, keepdims=True), 1e-30)
 
 
@@ -225,24 +396,31 @@ def factored_efe(cache: MegaCache, slots: MegaSlots, q: jnp.ndarray,
     the predicted observation and the ambiguity term are linear in ``ŝ_a``,
     so only its P projections through ``cache.proj`` are computed —
     ``o_pred[a] = (proj @ ŝ_num_a) / Σ_t ŝ_num_a[t]``, with the slot sum
-    entering through the precomputed ``qnproj``.
+    entering through the precomputed ``qnproj``.  A warm baseline adds its
+    dense contraction (the one path that streams ``b_base``).
     """
     topo = cfg.topology
     s = q.shape[-1]
     m, nb = topo.n_modalities, topo.max_bins
-    u = cfg.b_prior_uniform / s
-    d = cfg.b_prior_sticky
     qp = slots.q_prev.astype(jnp.float32)
 
     qa = q[:, None, :] / cache.colsum                             # (R, A, S)
     sqa = jnp.sum(qa, axis=-1)                                    # (R, A)
     dots = jnp.einsum("rjs,ras->rja", qp, qa)                     # (R, J, A)
     pend = cache.coefact * dots
-    o_num = (u * sqa[:, :, None] * cache.projsum[:, None, :]
-             + d * jnp.einsum("rps,ras->rap", cache.proj, qa)
-             + jnp.einsum("rja,rjp->rap", pend, cache.qnproj))    # (R, A, P)
-    sden = jnp.maximum((u * s + d) * sqa
-                       + jnp.einsum("rja,rj->ra", pend, cache.sumqn), 1e-30)
+    slot_o = jnp.einsum("rja,rjp->rap", pend, cache.qnproj)       # (R, A, P)
+    slot_den = jnp.einsum("rja,rj->ra", pend, cache.sumqn)
+    if cache.b_base is None:
+        u = cfg.b_prior_uniform / s
+        d = cfg.b_prior_sticky
+        o_num = (u * sqa[:, :, None] * cache.projsum[:, None, :]
+                 + d * jnp.einsum("rps,ras->rap", cache.proj, qa)
+                 + slot_o)
+        sden = jnp.maximum((u * s + d) * sqa + slot_den, 1e-30)
+    else:
+        s_num = jnp.einsum("rats,ras->rat", cache.b_base, qa)     # (R, A, S)
+        o_num = jnp.einsum("rpt,rat->rap", cache.proj, s_num) + slot_o
+        sden = jnp.maximum(jnp.sum(s_num, axis=-1) + slot_den, 1e-30)
     o_pred = o_num / sden[..., None]
 
     o_obs = o_pred[:, :, :m * nb].reshape(q.shape[0], -1, m, nb)
@@ -276,7 +454,7 @@ def _push_slot(slots: MegaSlots, idx, q_prev, q_next, obs_bins, obs_mask,
     )
 
 
-# ------------------------------------------------------------ whole window
+# --------------------------------------------------------------- hot window
 def mega_window(state: MegaFleetState, est, obs_carry, params,
                 arrival: jnp.ndarray, hazard: jnp.ndarray,
                 obs_valid: jnp.ndarray | None, k_env: jax.Array,
@@ -285,7 +463,8 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
                 util_period: int, dt: float, scrape_every: int,
                 restart_blackout: bool, emits_mask: bool,
                 forced_down: jnp.ndarray | None = None,
-                speed: jnp.ndarray | None = None):
+                speed: jnp.ndarray | None = None,
+                row_block: tuple | None = None):
     """W fused fast ticks: belief → EFE → sample → dwell → preferences → env.
 
     The XLA oracle twin of the Pallas megakernel — one launch advances the
@@ -305,6 +484,9 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
         sampling keys bit-for-bit.
       t0: traced global tick of the window's first tick; must sit on a
         dwell boundary (the engine only launches windows there).
+      row_block: ``(row_start, n_true, n_pad)`` under the sharded engine —
+        forwarded to the env so restart randomness is drawn at the
+        device-count-invariant global shape.
 
     Returns (state, env state, obs_carry, per-tick trace tuple) with the
     trace leaves stacked (W, ...) in tick order.
@@ -318,6 +500,7 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
     edges = jnp.asarray(util_edges, jnp.float32)
     err_ix = topo.modalities.index("error")
     ys = []
+    pushes = []
 
     for w in range(w_ticks):
         t_idx = t0 + w
@@ -342,7 +525,7 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
         loglik = loglik + jnp.where(
             util_valid, belief_mod.util_log_likelihood(util_bins, topo), 0.0)
 
-        # --- belief update (factored prior, legacy posterior guards)
+        # --- belief update (factored cached prior, legacy posterior guards)
         prior = factored_prior(state.cache, state.slots, state.belief,
                                state.prev_action, cfg)
         logp = loglik + jnp.log(jnp.maximum(prior, 1e-30))
@@ -363,17 +546,21 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
         else:
             sampled = state.prev_action
 
-        # --- push the transition slot (slot index == global tick)
-        slots = _push_slot(
-            state.slots, t_idx, state.belief, q_next, obs_bins,
-            mask if mask is not None else jnp.ones_like(obs_mask),
-            state.prev_action, state.dt_since_change)
+        # --- stage the transition slot (slot index == global tick).  The
+        # window's W pushes land as one contiguous [t0, t0+W) block write
+        # after the loop: in-window slots carry coefact == 0 until the next
+        # boundary re-weighs them, so the prior/EFE contractions above read
+        # the window-entry buffers bit-identically while XLA keeps the slot
+        # buffers free of per-tick copy-on-write.
+        pushes.append((state.belief, q_next, obs_bins,
+                       mask if mask is not None else jnp.ones_like(obs_mask),
+                       state.prev_action, state.dt_since_change))
 
         # --- dwell gate + env window
         action, dtc = agent_mod.dwell_gate(
             state.t, state.prev_action, state.dt_since_change, sampled, cfg)
         state = state._replace(
-            slots=slots, belief=q_next, prev_action=action,
+            belief=q_next, prev_action=action,
             dt_since_change=dtc, error_ema=error_ema, unstable=unstable,
             t=state.t + 1)
         weights = policies.routing_weights(action, topo)
@@ -383,7 +570,8 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
         est, win = batched.fluid_window_step(
             params, est, weights, arrival[w], hazard[w], k_env[w], t_idx,
             dt=dt, scrape_every=scrape_every, obs_valid=ov,
-            restart_blackout=restart_blackout, forced_down=fd, speed=sp)
+            restart_blackout=restart_blackout, forced_down=fd, speed=sp,
+            row_block=row_block)
 
         ys.append((action, weights, raw_obs, unstable,
                    jnp.mean(obs_mask, axis=-1), win))
@@ -392,6 +580,21 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
         if emits_mask:
             obs_mask = win.obs_mask
 
+    # --- land the window's slot block in one contiguous write per buffer
+    qp_w, qn_w, ob_w, om_w, ac_w, dt_w = (jnp.stack(xs, axis=1)
+                                          for xs in zip(*pushes))
+    sl = state.slots
+
+    def put(arr, val):
+        return jax.lax.dynamic_update_slice_in_dim(
+            arr, val.astype(arr.dtype), t0, axis=1)
+
+    state = state._replace(slots=sl._replace(
+        q_prev=put(sl.q_prev, qp_w), q_next=put(sl.q_next, qn_w),
+        obs_bins=put(sl.obs_bins, ob_w), obs_mask=put(sl.obs_mask, om_w),
+        action=put(sl.action, ac_w), dt_since_change=put(sl.dt_since_change,
+                                                         dt_w)))
+
     trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ys)
     return (state, est,
             (raw_obs, tier_util, tier_up, tier_queue, obs_mask), trace)
@@ -399,16 +602,20 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
 
 # -------------------------------------------------------------- slow update
 def mega_slow_step(state: MegaFleetState, k_slow: jax.Array,
-                   cfg: generative.AifConfig) -> MegaFleetState:
-    """One slow boundary: replay-sample, learn A exactly, bump B slot
-    weights, refresh the cache.
+                   cfg: generative.AifConfig, *,
+                   incremental: bool = True) -> MegaFleetState:
+    """One slow boundary: replay-sample, learn A exactly, advance the
+    factored cache by the batch's delta.
 
     The replayed index draws are the legacy per-router
     ``randint(key, (batch,), 0, max(size, 1))`` bit-for-bit (slot == tick,
     so the legacy ``idx % capacity`` is the identity here).  The A update is
-    the legacy einsum on the gathered slots; the B update reduces to a
-    scatter-add on ``wcount`` — the dense (R, A, S, S) accumulate happens
-    implicitly, forever.
+    the legacy einsum on the gathered slots; the B side folds the *same
+    gathered batch* into the cached column sums with the per-tick engine's
+    update association (:func:`_advance_cache`) and bumps ``wcount`` — the
+    sufficient statistic that keeps the from-scratch
+    :func:`_refresh_cache` (``incremental=False``, the legacy twin)
+    mathematically identical.
     """
     topo = cfg.topology
     slots = state.slots
@@ -422,20 +629,29 @@ def mega_slow_step(state: MegaFleetState, k_slow: jax.Array,
              * jnp.ones((1, batch), jnp.float32))                # (R, batch)
 
     # exact legacy observation-model update on the gathered slots
+    qp_b = jnp.take_along_axis(slots.q_prev.astype(jnp.float32),
+                               idx[..., None], axis=1)
     qn_b = jnp.take_along_axis(slots.q_next.astype(jnp.float32),
                                idx[..., None], axis=1)
     ob_b = jnp.take_along_axis(slots.obs_bins, idx[..., None], axis=1)
     om_b = jnp.take_along_axis(slots.obs_mask, idx[..., None], axis=1)
+    act_b = jnp.take_along_axis(slots.action, idx, axis=1)
+    dt_b = jnp.take_along_axis(slots.dt_since_change, idx, axis=1)
     onehot = spaces.one_hot_observation(ob_b, topo.max_bins)     # (R,n,M,NB)
     wgt = onehot * valid[..., None, None] * om_b[..., None]
     a_counts = state.a_counts + cfg.alpha_a * jnp.einsum(
         "rnmb,rns->rmbs", wgt, qn_b)
 
-    # the whole B update: count how often each slot was replayed
+    # slot-hit counts: the B update's sufficient statistic
     wcount = slots.wcount.at[jnp.arange(r)[:, None], idx].add(valid)
     slots = slots._replace(wcount=wcount)
-    return state._replace(a_counts=a_counts, slots=slots,
-                          cache=_refresh_cache(a_counts, slots, cfg))
+    if incremental:
+        cache = _advance_cache(state.cache, a_counts, slots, qp_b, qn_b,
+                               act_b, dt_b, valid, cfg)
+    else:
+        cache = _refresh_cache(a_counts, slots, cfg,
+                               b_base=state.cache.b_base)
+    return state._replace(a_counts=a_counts, slots=slots, cache=cache)
 
 
 # --------------------------------------------------------------- watchdog
@@ -476,8 +692,10 @@ def mega_quarantine(state: MegaFleetState, bad: jnp.ndarray,
     (a_counts, slots) and then where-selected per cell — a blanket refresh
     would silently update healthy cells' quasi-static (stale-by-design)
     cache mid-period and break bit-identity with the unwatched program.
-    ``t`` is left untouched: slot index == global tick is a fleet-wide
-    invariant.
+    (A quarantined warm-promoted cell likewise returns to the *fresh*
+    prior, not its promotion baseline — the baseline is part of the
+    possibly-poisoned model.)  ``t`` is left untouched: slot index ==
+    global tick is a fleet-wide invariant.
     """
     r = state.belief.shape[0]
     s = cfg.topology.n_states
@@ -499,9 +717,18 @@ def mega_quarantine(state: MegaFleetState, bad: jnp.ndarray,
         dt_since_change=where_r(0.0, sl.dt_since_change),
         wcount=where_r(0.0, sl.wcount),
     )
-    cache_new = _refresh_cache(a_counts, slots, cfg)
+    if state.cache.b_base is None:
+        b_base = None
+    else:
+        eye = jnp.eye(s, dtype=jnp.float32)
+        b0 = jnp.broadcast_to(cfg.b_prior_uniform / s
+                              + cfg.b_prior_sticky * eye,
+                              state.cache.b_base.shape)
+        b_base = where_r(b0, state.cache.b_base)
+    cache_new = _refresh_cache(a_counts, slots, cfg, b_base=b_base)
     cache = jax.tree_util.tree_map(
-        lambda fresh, old: where_r(fresh, old), cache_new, state.cache)
+        lambda fresh, old: where_r(fresh, old), cache_new,
+        state.cache._replace(b_base=b_base))
     return MegaFleetState(
         a_counts=a_counts,
         slots=slots,
@@ -520,9 +747,12 @@ def to_agent_state(state: MegaFleetState,
                    cfg: generative.AifConfig) -> agent_mod.AgentState:
     """Densify the factored carry into a legacy (R,)-batched AgentState.
 
-    Materializes the (R, A, S, S) transition counts and the replay buffer —
-    expensive by design (this is exactly the memory traffic the factored
-    path exists to avoid); intended for checkpoint interop, drill-down and
+    Materializes the (R, A, S, S) transition counts (baseline — the sticky
+    prior or a warm promotion's ``b_base`` — plus the slots' weighted outer
+    products) and the replay buffer.  Expensive by design (this is exactly
+    the memory traffic the factored path exists to avoid); intended for
+    checkpoint interop, warm-fleet promotion round-trips
+    (:func:`init_mega_state`'s ``from_agent_state``), drill-down and
     parity tests, not the hot loop.
     """
     topo = cfg.topology
@@ -531,12 +761,17 @@ def to_agent_state(state: MegaFleetState,
     s, a_n = topo.n_states, cfg.n_actions
     qp = slots.q_prev.astype(jnp.float32)
     qn = slots.q_next.astype(jnp.float32)
-    eye = jnp.eye(s, dtype=jnp.float32)
-    b0 = cfg.b_prior_uniform / s + cfg.b_prior_sticky * eye
+    if state.cache.b_base is None:
+        eye = jnp.eye(s, dtype=jnp.float32)
+        b0 = cfg.b_prior_uniform / s + cfg.b_prior_sticky * eye
+        base_rows = [b0] * a_n
+    else:
+        base_rows = [state.cache.b_base[:, a] for a in range(a_n)]
     coefact = state.cache.coefact                                 # (R, J, A)
     # one action at a time keeps the peak temp at (R, J, S) not (R, A, S, S)
     b_counts = jnp.stack(
-        [b0 + jnp.einsum("rj,rjt,rjs->rts", coefact[:, :, a], qn, qp)
+        [base_rows[a]
+         + jnp.einsum("rj,rjt,rjs->rts", coefact[:, :, a], qn, qp)
          for a in range(a_n)], axis=1)
 
     cap = cfg.replay_capacity
@@ -561,7 +796,8 @@ def to_agent_state(state: MegaFleetState,
         d_prior=jnp.broadcast_to(jnp.full((s,), 1.0 / s, jnp.float32),
                                  (r, s)),
     )
-    cache = jax.vmap(lambda m: generative.derive_cache(m, topo))(model)
+    cache = jax.vmap(lambda m: generative.derive_cache(m, cfg.topology))(
+        model)
     return agent_mod.AgentState(
         model=model, cache=cache, belief=state.belief, replay=replay,
         prev_action=state.prev_action,

@@ -193,7 +193,8 @@ def mega_window(state, est, obs_carry, params,
                 emits_mask: bool, use_pallas: bool = False,
                 interpret: bool | None = None,
                 forced_down: jnp.ndarray | None = None,
-                speed: jnp.ndarray | None = None):
+                speed: jnp.ndarray | None = None,
+                row_block: tuple | None = None):
     """One whole-window launch: W fused fast ticks of the mega engine path.
 
     Dispatch twin of :func:`fleet_belief_efe` at window granularity — the
@@ -219,9 +220,12 @@ def mega_window(state, est, obs_carry, params,
     of (action, weights, raw_obs, unstable, obs_frac, env_window).
     """
     # The Pallas megakernel's in-VMEM env port predates the fault-injection
-    # schedules; chaos windows fall back to the XLA oracle (identical
-    # semantics, the oracle *is* the CPU production path).
-    if use_pallas and forced_down is None and speed is None:
+    # schedules and draws restart randomness at the local R (incompatible
+    # with the sharded engine's draw-at-true-R row_block contract); chaos
+    # and sharded windows fall back to the XLA oracle (identical semantics,
+    # the oracle *is* the CPU production path).
+    if (use_pallas and forced_down is None and speed is None
+            and row_block is None):
         from repro.kernels.efe import mega as mega_kernel
         if interpret is None:
             interpret = _auto_interpret()
@@ -236,4 +240,4 @@ def mega_window(state, est, obs_carry, params,
         k_env, gumbel, t0, cfg=cfg, disc=disc, util_edges=util_edges,
         util_period=util_period, dt=dt, scrape_every=scrape_every,
         restart_blackout=restart_blackout, emits_mask=emits_mask,
-        forced_down=forced_down, speed=speed)
+        forced_down=forced_down, speed=speed, row_block=row_block)
