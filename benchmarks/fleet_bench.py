@@ -236,6 +236,53 @@ def bench_mega(r: int, t: int, use_pallas: bool = False,
     }
 
 
+def bench_graph(r: int, t: int, preset: str) -> dict:
+    """Closed-loop fused AIF rollout on a graphed world (networked
+    continuum): spillover segment-sums + the neighbor-pressure modality on
+    the per-tick engine path.  ``preset`` is a ``repro.core.graph`` preset
+    name; the matching graph scenario drives the load shape, so these rows
+    never collide with the ungraphed grid in BENCH_fleet.json.
+    """
+    from repro.api.experiment import _build_world, _make_aif
+    from repro.core import graph as graph_mod
+    from repro.core.topology import default_topology
+
+    sc_name = {v: k for k, v in graph_mod.GRAPH_SCENARIOS.items()}[preset]
+    topo = default_topology()
+    g = graph_mod.GRAPH_PRESETS[preset](r)
+    scfg, params, env_step = _build_world(topo, sc_name, r, t, 1.0, 0, g)
+    router = _make_aif(topo, scfg, True, False, False, graph=g)
+    key = jax.random.key(0)
+
+    def make_args():
+        return (router.init_carry(r),
+                batched.init_fluid_state(
+                    params, n_modalities=env_step.n_obs_modalities))
+
+    compile_s, run_s = _bench(
+        make_args,
+        lambda ast, est: api.rollout(router, ast, est, env_step, t, key))
+    return {
+        "workload": "fleet_graph", "r": r, "t": t, "scenario": sc_name,
+        "graph": preset,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "cell_windows_per_s": round(r * t / run_s, 1),
+    }
+
+
+def run_graph(quick: bool = False) -> list[dict]:
+    """``--graph`` rows: the graphed closed loop at the ring and grid
+    presets (R ∈ {64, 256}; quick mode keeps the 64-cell pair)."""
+    rows = []
+    sizes = [64] if quick else [64, 256]
+    for preset in ("ring", "grid"):
+        for r in sizes:
+            rows.append(bench_graph(r, 120, preset))
+            _print_row(rows[-1])
+    return rows
+
+
 def bench_api_compare(r: int, t: int, scenario: str = "paper-burst") -> dict:
     """The declarative comparison surface end-to-end: ``repro.api.compare``
     over an AIF + uniform pair, including the config assembly and host-side
@@ -479,8 +526,8 @@ def _lowered_workloads(scenario: str = "paper-burst") -> dict[str, tuple]:
     out["fleet_mega"] = (engine_mod._mega_impl.lower(
         state0, batched.init_fluid_state(params), obs_carry, fl.params,
         fl.arrival_rate, fl.hazard_scale, fl.obs_valid, fl.forced_down,
-        fl.speed, key, jnp.asarray(0, jnp.int32), router=mega, n_steps=t,
-        obs_masked=False, dt=fl.dt, scrape_every=fl.scrape_every,
+        fl.speed, fl.graph, key, jnp.asarray(0, jnp.int32), router=mega,
+        n_steps=t, obs_masked=False, dt=fl.dt, scrape_every=fl.scrape_every,
         restart_blackout=fl.restart_blackout).compile(), r, t)
     return out
 
@@ -646,6 +693,8 @@ def _bench_summary(rows: list[dict], existing: dict | None = None,
     for row in rows:
         cfg = {"r": row["r"], "t": row["t"],
                "scenario": row.get("scenario")}
+        if "graph" in row:
+            cfg["graph"] = row["graph"]
         if "devices" in row:
             cfg["devices"] = row["devices"]
         if "host_cores" in row:
@@ -686,6 +735,10 @@ def main() -> None:
                     help="price the env / fused / megakernel rollouts "
                          "against the fixed accelerator model and record "
                          "attained-vs-peak rows in BENCH_fleet.json")
+    ap.add_argument("--graph", action="store_true",
+                    help="also benchmark the networked-continuum graphed "
+                         "closed loop (fleet_graph rows at the ring/grid "
+                         "presets)")
     ap.add_argument("--shard", action="store_true",
                     help="device-sharded weak-scaling curves (fleet_sharded "
                          "+ fleet_mega_sharded rows) instead of the standard "
@@ -707,6 +760,8 @@ def main() -> None:
             if args.shard else
             run(quick=args.quick, use_pallas=args.use_pallas,
                 scenario=args.scenario))
+    if args.graph:
+        rows += run_graph(quick=args.quick)
     roofline_rows = (run_roofline(rows, scenario=args.scenario)
                      if args.roofline else None)
     if args.json:

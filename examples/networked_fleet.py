@@ -1,0 +1,84 @@
+"""Networked continuum: a ring fleet absorbs a localized flash crowd.
+
+The ``ring-spillover`` scenario drives a x6 flash crowd into the first
+quarter of the cell axis while the rest of the ring idles.  Without a
+fleet graph every hot cell is on its own — the excess is refused or
+overflows.  With the ring graph attached (the scenario's default), each
+saturated cell re-offers its rejected mass to its two ring neighbors, who
+admit it into live capacity headroom at a hop-latency penalty; the burst
+drains around the ring instead of failing at its origin.
+
+The demo runs the same experiment three ways on identical schedules:
+
+* ``graph="none"``  — the ungraphed control (exact pre-graph program),
+* ring graph + AIF  — the graphed world; AIF additionally observes the
+  neighbor-pressure telemetry modality the graph emits,
+* ring graph + nearest-neighbor offloader — the OpenCDA-style
+  min-response-time heuristic, the graph-aware baseline of the Table-1
+  grid,
+
+and reports fleet-global success (per-cell ratios are not meaningful under
+cross-cell transfer) plus the offloaded fraction.
+
+    PYTHONPATH=src python examples/networked_fleet.py [--quick]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro import api
+
+
+def fleet_success(res) -> float:
+    return (100.0 * float(res.fluid.n_success.sum())
+            / max(float(res.fluid.n_requests.sum()), 1.0))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short horizon for CI smoke runs")
+    args = ap.parse_args()
+    r = 8
+    t = 60 if args.quick else 300
+
+    base = dict(scenario="ring-spillover", n_cells=r, n_windows=t)
+    runs = [
+        ("no graph (control)", api.Experiment(router="least_loaded",
+                                              graph="none", **base)),
+        ("ring + least_loaded", api.Experiment(router="least_loaded",
+                                               **base)),
+        ("ring + nn_offload", api.Experiment(router="nn_offload", **base)),
+        ("ring + aif", api.Experiment(router="aif", **base)),
+    ]
+    print(f"ring fleet, R={r} cells x T={t} windows, localized flash crowd "
+          f"on cells 0-{r // 4 - 1}:")
+
+    t0 = time.time()
+    results = [(name, api.run(e)) for name, e in runs]
+    wall = time.time() - t0
+
+    print(f"\nran {len(runs)} experiments in {wall:.1f}s\n")
+    print(f"{'configuration':22s} {'success %':>10s} {'offloaded %':>12s} "
+          f"{'P95 ms':>8s}")
+    for name, res in results:
+        print(f"{name:22s} {fleet_success(res):10.1f} "
+              f"{100 * res.offload_frac:12.1f} {res.p95_ms:8.0f}")
+
+    control, graphed = results[0][1], results[1][1]
+    gain = fleet_success(graphed) - fleet_success(control)
+    hot = slice(0, r // 4)
+    spill = np.asarray(graphed.trace.env.spill_out)       # (T, R)
+    print(f"\nspillover absorbed the burst: +{gain:.1f} success points over "
+          f"the ungraphed control; the hot arc exported "
+          f"{spill[:, hot].sum():.0f} request-units to its ring neighbors "
+          f"({100 * graphed.offload_frac:.1f}% of all offered load was "
+          f"served away from its origin cell).")
+    print("Every cross-cell exchange is a segment-sum over the static edge "
+          "list, so the graphed rollout is still one jitted scan — and "
+          "composes with shard='auto' for device-sharded fleets.")
+
+
+if __name__ == "__main__":
+    main()

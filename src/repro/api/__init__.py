@@ -39,17 +39,18 @@ from repro.api.experiment import (ROUTERS, TABLE1_ROUTERS, Comparison,
                                   Experiment, FleetMetricsReducer, RunResult,
                                   compare, run, table1_grid)
 from repro.api.router import (CapacityRouter, LeastLoadedRouter,
-                              RoundRobinRouter, Router, RouterObs,
-                              ThompsonRouter, TickInfo, UcbRouter,
+                              MinResponseRouter, RoundRobinRouter, Router,
+                              RouterObs, ThompsonRouter, TickInfo, UcbRouter,
                               UniformRouter)
 from repro.api.shard import ShardSpec
+from repro.core.graph import FleetGraph
 
 __all__ = [
     "AifRouter", "CapacityRouter", "Comparison", "Experiment",
-    "FleetMetricsReducer", "LeastLoadedRouter", "ROUTERS",
-    "RoundRobinRouter", "Router", "RouterObs", "RunResult", "ShardSpec",
-    "TABLE1_ROUTERS", "ThompsonRouter", "TickInfo", "UcbRouter",
-    "UniformRouter", "compare", "resumable_rollout", "rollout", "run",
-    "sharded_finalize", "sharded_resumable_rollout", "sharded_rollout",
-    "table1_grid",
+    "FleetGraph", "FleetMetricsReducer", "LeastLoadedRouter",
+    "MinResponseRouter", "ROUTERS", "RoundRobinRouter", "Router",
+    "RouterObs", "RunResult", "ShardSpec", "TABLE1_ROUTERS",
+    "ThompsonRouter", "TickInfo", "UcbRouter", "UniformRouter", "compare",
+    "resumable_rollout", "rollout", "run", "sharded_finalize",
+    "sharded_resumable_rollout", "sharded_rollout", "table1_grid",
 ]

@@ -573,7 +573,7 @@ def _mega_rollout(router, carry, env_state, env_step: Callable, n_steps: int,
     def launch(state, est, obs, k, tb, n):
         return _mega_impl(
             state, est, obs, fl.params, fl.arrival_rate, fl.hazard_scale,
-            fl.obs_valid, fl.forced_down, fl.speed, k,
+            fl.obs_valid, fl.forced_down, fl.speed, fl.graph, k,
             jnp.asarray(tb, jnp.int32), router=router, n_steps=n,
             obs_masked=obs_masked, dt=fl.dt, scrape_every=fl.scrape_every,
             restart_blackout=fl.restart_blackout)
@@ -615,6 +615,7 @@ def _mega_impl(state,
                obs_valid: jnp.ndarray | None,
                forced_down: jnp.ndarray | None,
                speed: jnp.ndarray | None,
+               graph,
                key: jax.Array,
                t_begin: jnp.ndarray,
                *,
@@ -653,7 +654,7 @@ def _mega_impl(state,
         state, est, obs, ys = efe_ops.mega_window(
             state, est, obs, params, arr_w, haz_w, ov_w, k_env, gum,
             jnp.asarray(t_start, jnp.int32), forced_down=fd_w, speed=sp_w,
-            **statics)
+            graph=graph, **statics)
         if do_slow:
             # the boundary tick's per-cell slow keys, as in the per-tick
             # engine's slow_after
@@ -780,7 +781,7 @@ def sharded_rollout(router: Router,
         fl = env_step.fluid
         return _sharded_mega_impl(
             env_state, key, fl.params, fl.arrival_rate, fl.hazard_scale,
-            fl.obs_valid, fl.forced_down, fl.speed, router=router,
+            fl.obs_valid, fl.forced_down, fl.speed, fl.graph, router=router,
             n_steps=n_steps, obs_masked=obs_masked, spec=shard,
             n_cells=n_cells, reducer=reducer, dt=fl.dt,
             scrape_every=fl.scrape_every,
@@ -815,9 +816,14 @@ def _sharded_impl(env_state,
     def body(est, k):
         row0 = jax.lax.axis_index(axis) * r_local
         carry0 = router.init_carry(r_local)
+        # graph worlds need the mesh axis for the cross-shard spill exchange
+        # (gated so custom row_block-aware closures keep their signature)
+        env_kw = ({"shard_axis": axis}
+                  if getattr(env_step, "has_graph", False) else {})
 
         def env_local(s, w, t, kk):
-            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad))
+            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad),
+                            **env_kw)
 
         stats0 = reducer.init(r_local, row0)
         carry, _ = _rollout_core(
@@ -844,6 +850,7 @@ def _sharded_mega_impl(env_state,
                        obs_valid: jnp.ndarray | None,
                        forced_down: jnp.ndarray | None,
                        speed: jnp.ndarray | None,
+                       graph,
                        *,
                        router: Router,
                        n_steps: int,
@@ -882,7 +889,8 @@ def _sharded_mega_impl(env_state,
                    restart_blackout=restart_blackout,
                    emits_mask=obs_masked, use_pallas=router.use_pallas)
 
-    def body(est, k, params, arrival, hazard, obs_valid, forced_down, speed):
+    def body(est, k, params, arrival, hazard, obs_valid, forced_down, speed,
+             graph):
         row0 = jax.lax.axis_index(axis) * r_local
         rows = (row0, n_cells, r_pad)
         state0 = mega_mod.init_mega_state(cfg, r_local, n_steps,
@@ -910,7 +918,8 @@ def _sharded_mega_impl(env_state,
             state, est, obs, ys = efe_ops.mega_window(
                 state, est, obs, params, arr_w, haz_w, ov_w, k_env, gum,
                 jnp.asarray(t_start, jnp.int32), forced_down=fd_w,
-                speed=sp_w, row_block=rows, **statics)
+                speed=sp_w, row_block=rows, graph=graph, shard_axis=axis,
+                **statics)
             if do_slow:
                 state = mega_mod.mega_slow_step(state, k_slow[-1], cfg)
             ev = jnp.zeros((w_ticks, r_local), jnp.float32)
@@ -943,10 +952,11 @@ def _sharded_mega_impl(env_state,
         return state, est_out, reducer.finalize(stats, axis)
 
     return shard_map(body, mesh=mesh,
-                     in_specs=(P(axis), P(), P(), P(), P(), P(), P(), P()),
+                     in_specs=(P(axis), P(), P(), P(), P(), P(), P(), P(),
+                               P()),
                      out_specs=(P(axis), P(axis), P()))(
                          env_state, key, params, arrival, hazard, obs_valid,
-                         forced_down, speed)
+                         forced_down, speed, graph)
 
 
 # ------------------------------------------------------- checkpointed chunking
@@ -1178,9 +1188,12 @@ def _sharded_chunk_impl(env_state,
 
     def body(est, k, tb, carry_in, obs_in, stats_in):
         row0 = jax.lax.axis_index(axis) * r_local
+        env_kw = ({"shard_axis": axis}
+                  if getattr(env_step, "has_graph", False) else {})
 
         def env_local(s, w, t, kk):
-            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad))
+            return env_step(s, w, t, kk, row_block=(row0, n_cells, r_pad),
+                            **env_kw)
 
         if fresh:
             carry0 = router.init_carry(r_local)

@@ -42,6 +42,7 @@ from repro.api.engine import (resumable_rollout, rollout, sharded_finalize,
 from repro.api.shard import ShardSpec, resolve as resolve_shard
 from repro.checkpoint import Checkpointer
 from repro.core import generative
+from repro.core import graph as graph_mod
 from repro.core import mega as mega_mod
 from repro.core.topology import Topology, default_topology, get_topology
 from repro.envsim import batched, scenarios
@@ -54,9 +55,17 @@ _EPS = 1e-9
 # ------------------------------------------------------------ router registry
 def _make_aif(topo: Topology, scfg: SimConfig, fused: bool,
               use_pallas: bool, mega: bool,
-              mega_slot_dtype: str = "float32") -> AifRouter:
+              mega_slot_dtype: str = "float32",
+              graph: graph_mod.FleetGraph | None = None) -> AifRouter:
+    disc = discretization_for(scfg)
+    if graph is not None:
+        # graphed worlds emit a 5th telemetry column (neighbor pressure);
+        # grow the topology's modality set and the discretization to match
+        topo = graph_mod.with_neighbor_modality(topo)
+        disc = dataclasses.replace(
+            disc, edges=disc.modality_edges() + (graph_mod.NEIGHBOR_EDGES,))
     return AifRouter(cfg=generative.AifConfig(topology=topo),
-                     disc=discretization_for(scfg),
+                     disc=disc,
                      fused=fused, use_pallas=use_pallas, mega=mega,
                      mega_slot_dtype=mega_slot_dtype)
 
@@ -90,12 +99,45 @@ ROUTERS: dict[str, Callable[..., router_mod.Router]] = {
         router_mod.ThompsonRouter(topology=topo),
     "ucb": lambda topo, scfg, *_:
         router_mod.UcbRouter(topology=topo),
+    # OpenCDA-style nearest-neighbor offloader: greedy min estimated
+    # response time (queue/capacity + service) over the live tiers — the
+    # graph-aware heuristic Table 1 compares AIF against.
+    "nn_offload": lambda topo, scfg, *_:
+        router_mod.MinResponseRouter(
+            service_s=tuple(t.mean_service_s for t in scfg.tiers),
+            cap_rps=tuple(t.servers / t.mean_service_s
+                          for t in scfg.tiers)),
 }
 
 #: The paper's Table-1 lineup: AIF plus the five baseline families
-#: (Thompson and UCB are the two members of the bandit family).
+#: (Thompson and UCB are the two members of the bandit family), plus the
+#: nearest-neighbor min-response-time offloader for the networked grids.
 TABLE1_ROUTERS = ("aif", "uniform", "capacity", "round_robin",
-                  "least_loaded", "thompson", "ucb")
+                  "least_loaded", "thompson", "ucb", "nn_offload")
+
+
+def _graphify_router(r: router_mod.Router,
+                     graph: graph_mod.FleetGraph | None) -> router_mod.Router:
+    """Grow a router to the graphed engine's 5-column observation.
+
+    Baselines carry an ``extra_modalities`` pass-through field — the extra
+    neighbor-pressure column rides the obs/mask plumbing unread.  Routers
+    without the field (an :class:`AifRouter` instance) must already consume
+    the neighbor modality; a mismatch raises here instead of surfacing as a
+    scan shape error deep in the engine.
+    """
+    if graph is None:
+        return r
+    if getattr(r, "extra_modalities", None) == 0:
+        r = dataclasses.replace(r, extra_modalities=1)
+    expect = batched.N_OBS_MODALITIES + 1
+    if r.n_modalities != expect:
+        raise ValueError(
+            f"graphed worlds emit {expect} observation modalities (neighbor "
+            f"pressure appended) but router {r.name!r} consumes "
+            f"{r.n_modalities}; build AIF via router='aif' or with "
+            f"repro.core.graph.with_neighbor_modality(topology)")
+    return r
 
 
 # ---------------------------------------------------------- sharded reduction
@@ -134,11 +176,13 @@ class FleetMetricsReducer:
     / ``finalize``).  Hashable (frozen, ints only) so the engine can treat
     it as a static jit argument.
 
-    Stats tuple: ``(valid, hist50, hist95, obs_sum)`` where ``valid`` masks
-    this shard's phantom pad rows (cells >= the true R contribute zero mass
-    to every reduction), the histograms accumulate completion mass over
-    mean / P95 tier-latency atoms, and ``obs_sum`` totals the per-cell
-    effective-observation fraction over the steady ticks (t >= 1).
+    Stats tuple: ``(valid, hist50, hist95, obs_sum, spill_sum)`` where
+    ``valid`` masks this shard's phantom pad rows (cells >= the true R
+    contribute zero mass to every reduction), the histograms accumulate
+    completion mass over mean / P95 tier-latency atoms, ``obs_sum`` totals
+    the per-cell effective-observation fraction over the steady ticks
+    (t >= 1) and ``spill_sum`` totals graph-spillover mass admitted at
+    neighbor cells (stays zero on ungraphed worlds).
     """
 
     n_cells: int
@@ -148,6 +192,7 @@ class FleetMetricsReducer:
         return (valid.astype(jnp.float32),
                 jnp.zeros((_HIST_BINS,), jnp.float32),
                 jnp.zeros((_HIST_BINS,), jnp.float32),
+                jnp.zeros((), jnp.float32),
                 jnp.zeros((), jnp.float32))
 
     @staticmethod
@@ -160,14 +205,17 @@ class FleetMetricsReducer:
         return hist.at[idx.ravel()].add(mass.ravel())
 
     def update(self, stats, t_idx, ys):
-        valid, hist50, hist95, obs_sum = stats
+        valid, hist50, hist95, obs_sum, spill_sum = stats
         mass = ys.env.tier_completed * valid[:, None]
         hist50 = self._deposit(hist50, ys.env.tier_latency_s, mass)
         hist95 = self._deposit(hist95, ys.env.tier_p95_s, mass)
         # obs_frac[0] is the all-valid warm-up mask; count steady ticks only
         obs_sum = obs_sum + jnp.where(
             t_idx >= 1, jnp.sum(ys.obs_frac * valid), 0.0)
-        return (valid, hist50, hist95, obs_sum)
+        spill = getattr(ys.env, "spill_admitted", None)
+        if spill is not None:
+            spill_sum = spill_sum + jnp.sum(spill * valid)
+        return (valid, hist50, hist95, obs_sum, spill_sum)
 
     def update_window(self, stats, t0, ys):
         """Fold one fused window's stacked (W, ...) trace in at once.
@@ -179,7 +227,7 @@ class FleetMetricsReducer:
         scatter-adds; only the accumulation order differs by ulps).
         ``t0`` is the traced global tick of the window's first tick.
         """
-        valid, hist50, hist95, obs_sum = stats
+        valid, hist50, hist95, obs_sum, spill_sum = stats
         mass = ys.env.tier_completed * valid[None, :, None]
         hist50 = self._deposit(hist50, ys.env.tier_latency_s, mass)
         hist95 = self._deposit(hist95, ys.env.tier_p95_s, mass)
@@ -187,12 +235,15 @@ class FleetMetricsReducer:
         steady = (t0 + jnp.arange(w) >= 1).astype(jnp.float32)
         obs_sum = obs_sum + jnp.sum(
             steady[:, None] * ys.obs_frac * valid[None, :])
-        return (valid, hist50, hist95, obs_sum)
+        spill = getattr(ys.env, "spill_admitted", None)
+        if spill is not None:
+            spill_sum = spill_sum + jnp.sum(spill * valid[None, :])
+        return (valid, hist50, hist95, obs_sum, spill_sum)
 
     def finalize(self, stats, axis: str):
-        _, hist50, hist95, obs_sum = stats
+        _, hist50, hist95, obs_sum, spill_sum = stats
         return (jax.lax.psum(hist50, axis), jax.lax.psum(hist95, axis),
-                jax.lax.psum(obs_sum, axis))
+                jax.lax.psum(obs_sum, axis), jax.lax.psum(spill_sum, axis))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +300,16 @@ class Experiment:
         horizon).  Sharded resumes need the same device count the
         checkpoint was written under.
       label: display name (default: the router name).
+      graph: networked-continuum fleet graph — None (ungraphed; the three
+        graph scenario presets auto-attach their matching
+        :data:`repro.core.graph.GRAPH_PRESETS` entry), a preset name
+        (``"ring"`` / ``"grid"`` / ``"hier"`` / ``"none"`` — the last
+        forces the ungraphed program even on a graph scenario, the
+        acceptance control), or a ready
+        :class:`~repro.core.graph.FleetGraph`.  A graphed world spills
+        rejected load to graph neighbors (hop-latency penalty) and emits
+        a 5th neighbor-pressure telemetry modality; registry routers grow
+        to consume it automatically.
     """
 
     router: str | router_mod.Router = "aif"
@@ -268,12 +329,25 @@ class Experiment:
     checkpoint_dir: str | None = None
     resume_from: str | None = None
     label: str | None = None
+    graph: graph_mod.FleetGraph | str | None = None
 
     def resolve_topology(self) -> Topology:
         return (get_topology(self.topology)
                 if isinstance(self.topology, str) else self.topology)
 
-    def resolve_router(self, scfg: SimConfig) -> router_mod.Router:
+    def resolve_graph(self) -> graph_mod.FleetGraph | None:
+        """The effective fleet graph (None = the exact ungraphed program).
+
+        Resolution order: an explicit :class:`FleetGraph` / preset name
+        wins; otherwise the graph scenario presets auto-attach their
+        matching graph; ``graph="none"`` always resolves to None.
+        """
+        return graph_mod.resolve_graph(self.graph, self.n_cells,
+                                       scenario=self.scenario)
+
+    def resolve_router(self, scfg: SimConfig,
+                       graph: graph_mod.FleetGraph | None = None
+                       ) -> router_mod.Router:
         if isinstance(self.router, router_mod.Router):
             if self.fused or self.use_pallas or self.mega:
                 raise ValueError(
@@ -281,7 +355,7 @@ class Experiment:
                     "routers; set them on the Router instance itself (e.g. "
                     "AifRouter(fused=True)) — silently ignoring them would "
                     "misreport which execution path ran")
-            return self.router
+            return _graphify_router(self.router, graph)
         try:
             make = ROUTERS[self.router]
         except KeyError:
@@ -290,9 +364,10 @@ class Experiment:
         if self.router == "aif":
             return _make_aif(self.resolve_topology(), scfg, self.fused,
                              self.use_pallas, self.mega,
-                             self.mega_slot_dtype)
-        return make(self.resolve_topology(), scfg, self.fused,
-                    self.use_pallas, self.mega)
+                             self.mega_slot_dtype, graph=graph)
+        return _graphify_router(
+            make(self.resolve_topology(), scfg, self.fused,
+                 self.use_pallas, self.mega), graph)
 
     @property
     def name(self) -> str:
@@ -310,6 +385,12 @@ class RunResult:
     :class:`~repro.envsim.batched.FluidResult`, the
     :class:`~repro.core.fleet.FleetTrace` and the final router carry stay
     attached for drill-down (belief health checks, weight trajectories).
+
+    ``success_pct`` is the mean of per-cell success rates on ungraphed
+    worlds and the *fleet-global* ratio ΣnSuccess/ΣnRequests on graphed
+    ones (spillover credits completions at the receiving cell, so per-cell
+    ratios are not meaningful there); compare graphed vs ungraphed runs on
+    ``fluid.n_success.sum() / fluid.n_requests.sum()``.
     """
 
     experiment: Experiment
@@ -336,6 +417,9 @@ class RunResult:
     recovery: dict | None = None  # chaos recovery metrics (None: scenario
     #                               has no registered control, or sharded
     #                               run — no per-window trace to curve over)
+    offload_frac: float = 0.0     # fraction of offered load absorbed at a
+    #                               graph neighbor after spillover (0.0 on
+    #                               ungraphed worlds)
 
     def summary(self) -> dict:
         """JSON-safe metric dict (one Table-1 row)."""
@@ -353,6 +437,7 @@ class RunResult:
             "routed_share": [round(float(x), 4) for x in self.routed_share],
             "restarts": round(self.restarts, 1),
             "obs_frac": round(self.obs_frac, 4),
+            "offload_frac": round(self.offload_frac, 4),
             "wall_s": round(self.wall_s, 2),
             "per_device_wall_s": round(self.per_device_wall_s, 2),
             "cells_per_device": self.cells_per_device,
@@ -365,7 +450,8 @@ class RunResult:
 
 @functools.lru_cache(maxsize=8)
 def _build_world(topo: Topology, scenario: str, n_cells: int, n_windows: int,
-                 window_s: float, seed: int):
+                 window_s: float, seed: int,
+                 graph: graph_mod.FleetGraph | None = None):
     """(sim config, fluid params, env_step) for one experiment's world.
 
     Deterministic in its arguments, and cached so repeated runs of the same
@@ -381,14 +467,16 @@ def _build_world(topo: Topology, scenario: str, n_cells: int, n_windows: int,
     sc = scenarios.build_scenario(scenario, scfg, n_cells, n_windows,
                                   window_s=window_s, seed=seed)
     params = batched.params_from_config(scfg, n_cells, sc.capacity_scale)
-    env_step = batched.make_scenario_env_step(params, sc, dt=window_s)
+    env_step = batched.make_scenario_env_step(params, sc, dt=window_s,
+                                              graph=graph)
     return scfg, params, env_step
 
 
 @functools.lru_cache(maxsize=8)
 def _build_world_padded(topo: Topology, scenario: str, n_cells: int,
                         n_windows: int, window_s: float, seed: int,
-                        r_pad: int, n_devices: int):
+                        r_pad: int, n_devices: int,
+                        graph: graph_mod.FleetGraph | None = None):
     """Sharded variant of :func:`_build_world`: true-R world, padded to the
     device multiple.
 
@@ -409,7 +497,11 @@ def _build_world_padded(topo: Topology, scenario: str, n_cells: int,
                                   window_s=window_s, seed=seed)
     sc = scenarios.pad_scenario(sc, r_pad)
     params = batched.params_from_config(scfg, r_pad, sc.capacity_scale)
-    env_step = batched.make_scenario_env_step(params, sc, dt=window_s)
+    if graph is not None:
+        # phantom pad rows must stay edge-less and inert (see pad_scenario)
+        graph.validate_true_rows(n_cells)
+    env_step = batched.make_scenario_env_step(params, sc, dt=window_s,
+                                              graph=graph)
     return scfg, params, env_step
 
 
@@ -430,8 +522,9 @@ def run(experiment: Experiment) -> RunResult:
     e = experiment
     topo = e.resolve_topology()
     spec = resolve_shard(e.shard)
-    res = (_run_sharded(e, topo, spec) if spec is not None
-           else _run_dense(e, topo))
+    g = e.resolve_graph()
+    res = (_run_sharded(e, topo, spec, g) if spec is not None
+           else _run_dense(e, topo, g))
     info = chaos_mod.CHAOS_INFO.get(e.scenario)
     if info is not None and res.trace is not None:
         control = run(dataclasses.replace(
@@ -441,15 +534,18 @@ def run(experiment: Experiment) -> RunResult:
     return res
 
 
-def _run_dense(e: Experiment, topo: Topology) -> RunResult:
+def _run_dense(e: Experiment, topo: Topology,
+               graph: graph_mod.FleetGraph | None = None) -> RunResult:
     """Unsharded execution path of :func:`run` (per-tick or mega engine)."""
     scfg, params, env_step = _build_world(topo, e.scenario, e.n_cells,
-                                          e.n_windows, e.window_s, e.seed)
-    router = e.resolve_router(scfg)
+                                          e.n_windows, e.window_s, e.seed,
+                                          graph)
+    router = e.resolve_router(scfg, graph)
     if router.n_tiers != topo.n_tiers:
         raise ValueError(
             f"router {router.name!r} routes over {router.n_tiers} tiers but "
             f"topology {topo.tier_names} has {topo.n_tiers}")
+    n_mod = getattr(env_step, "n_obs_modalities", batched.N_OBS_MODALITIES)
 
     t0 = time.perf_counter()
     if e.checkpoint_every or e.resume_from:
@@ -461,14 +557,23 @@ def _run_dense(e: Experiment, topo: Topology) -> RunResult:
                 else router.init_carry(e.n_cells))
         carry, est, trace = rollout(
             router, init,
-            batched.init_fluid_state(params), env_step, e.n_windows,
-            jax.random.key(e.seed), launch_periods=e.launch_periods)
+            batched.init_fluid_state(params, n_modalities=n_mod), env_step,
+            e.n_windows, jax.random.key(e.seed),
+            launch_periods=e.launch_periods)
         boundaries = ()
     jax.block_until_ready(est)
     wall = time.perf_counter() - t0
 
     res = batched.summarize(est, trace.env)
     succ = 100.0 * res.success_rate
+    # spillover credits completions at the receiving cell while the request
+    # was counted at its origin, so per-cell ratios can exceed 1 on graphed
+    # worlds; report the fleet-global ratio there (identical semantics
+    # fleet-wide, and conservation bounds it by 100).
+    succ_mean = (100.0 * float(res.n_success.sum())
+                 / max(float(res.n_requests.sum()), 1.0)
+                 if getattr(env_step, "has_graph", False)
+                 else float(succ.mean()))
     n_success = np.maximum(res.n_success, _EPS)
     n_req = np.maximum(res.n_requests, _EPS)
     tier_share = (res.tier_success / n_success[:, None]).mean(0)
@@ -476,10 +581,14 @@ def _run_dense(e: Experiment, topo: Topology) -> RunResult:
     obs_frac = np.asarray(trace.obs_frac)
     # obs_frac[0] is the all-valid warm-up mask; report the steady part
     obs = float(obs_frac[1:].mean()) if obs_frac.shape[0] > 1 else 1.0
+    spill = getattr(trace.env, "spill_admitted", None)
+    offload = (0.0 if spill is None else
+               float(np.asarray(spill, np.float64).sum()
+                     / max(float(res.n_requests.sum()), 1.0)))
     return RunResult(
         experiment=e,
         name=e.name,
-        success_pct=float(succ.mean()),
+        success_pct=succ_mean,
         success_std=float(succ.std()),
         p50_ms=float(res.p50_ms.mean()),
         p95_ms=float(res.p95_ms.mean()),
@@ -495,6 +604,7 @@ def _run_dense(e: Experiment, topo: Topology) -> RunResult:
         cells_per_device=e.n_cells,
         watchdog_events=_watchdog_total(trace),
         resume_points=tuple(boundaries),
+        offload_frac=offload,
     )
 
 
@@ -522,9 +632,9 @@ def _ckpt_payload(e: Experiment, router, carry, env, snapshot, sharded: bool):
 
 
 def _ckpt_template(e: Experiment, router, params, spec: ShardSpec | None,
-                   reducer=None):
+                   reducer=None, n_modalities=batched.N_OBS_MODALITIES):
     """Shape/dtype template matching :func:`_ckpt_payload` for restore."""
-    env_t = batched.init_fluid_state(params)
+    env_t = batched.init_fluid_state(params, n_modalities=n_modalities)
     r = jax.tree_util.tree_leaves(env_t)[0].shape[0]
     if getattr(router, "mega", False):
         slot_dtype = (jnp.bfloat16 if router.mega_slot_dtype == "bfloat16"
@@ -546,7 +656,8 @@ def _ckpt_template(e: Experiment, router, params, spec: ShardSpec | None,
     return tmpl
 
 
-def _ckpt_setup(e: Experiment, router, params, spec=None, reducer=None):
+def _ckpt_setup(e: Experiment, router, params, spec=None, reducer=None,
+                n_modalities=batched.N_OBS_MODALITIES):
     """Shared chunk-loop state: (checkpointer, resume point, restored
     pieces).  Chunk boundaries are validated once — every boundary is a
     multiple of ``checkpoint_every``, so alignment of the stride implies
@@ -561,7 +672,7 @@ def _ckpt_setup(e: Experiment, router, params, spec=None, reducer=None):
     if not e.resume_from:
         return ckpt, 0, None, None, None
     tree, extra = Checkpointer(e.resume_from).restore(
-        _ckpt_template(e, router, params, spec, reducer))
+        _ckpt_template(e, router, params, spec, reducer, n_modalities))
     t_begin = int(extra["t"])
     if extra.get("scenario") not in (None, e.scenario):
         raise ValueError(
@@ -600,10 +711,12 @@ def _chunked_rollout(e: Experiment, router, params, env_step):
     the uninterrupted program (``tests/test_chaos.py``).
     """
     mega = bool(getattr(router, "mega", False))
-    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(e, router, params)
+    n_mod = getattr(env_step, "n_obs_modalities", batched.N_OBS_MODALITIES)
+    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(
+        e, router, params, n_modalities=n_mod)
     if not e.resume_from:
         carry = None if mega else router.init_carry(e.n_cells)
-        env = batched.init_fluid_state(params)
+        env = batched.init_fluid_state(params, n_modalities=n_mod)
     key = jax.random.key(e.seed)
     traces, boundaries = [], ([t_begin] if t_begin else [])
     for t, n in _chunk_sizes(e, t_begin):
@@ -636,10 +749,12 @@ def _sharded_chunked(e: Experiment, router, params, env_step,
     (gathered with a leading device axis); :func:`sharded_finalize` reduces
     the last chunk's stats exactly as the uninterrupted run does in-shard.
     """
-    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(e, router, params,
-                                                      spec, reducer)
+    n_mod = getattr(env_step, "n_obs_modalities", batched.N_OBS_MODALITIES)
+    ckpt, t_begin, carry, env, snapshot = _ckpt_setup(
+        e, router, params, spec, reducer, n_modalities=n_mod)
     if not e.resume_from:
-        carry, env = None, batched.init_fluid_state(params)
+        carry, env = None, batched.init_fluid_state(params,
+                                                    n_modalities=n_mod)
     key = jax.random.key(e.seed)
     boundaries, stats = ([t_begin] if t_begin else []), None
     for t, n in _chunk_sizes(e, t_begin):
@@ -711,7 +826,8 @@ def _success_curve(trace) -> np.ndarray:
     return s / np.maximum(s + f, _EPS)
 
 
-def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
+def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec,
+                 graph: graph_mod.FleetGraph | None = None) -> RunResult:
     """Device-sharded execution path of :func:`run`.
 
     Same world, same router, same PRNG stream — but the rollout runs under
@@ -731,13 +847,14 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
     r_pad, r_local = spec.padded(e.n_cells)
     scfg, params, env_step = _build_world_padded(
         topo, e.scenario, e.n_cells, e.n_windows, e.window_s, e.seed,
-        r_pad, spec.n_devices())
-    router = e.resolve_router(scfg)
+        r_pad, spec.n_devices(), graph)
+    router = e.resolve_router(scfg, graph)
     if router.n_tiers != topo.n_tiers:
         raise ValueError(
             f"router {router.name!r} routes over {router.n_tiers} tiers but "
             f"topology {topo.tier_names} has {topo.n_tiers}")
     reducer = FleetMetricsReducer(n_cells=e.n_cells)
+    n_mod = getattr(env_step, "n_obs_modalities", batched.N_OBS_MODALITIES)
 
     t0 = time.perf_counter()
     boundaries: tuple = ()
@@ -746,13 +863,14 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
             e, router, params, env_step, spec, reducer)
     else:
         carry, est, stats = sharded_rollout(
-            router, batched.init_fluid_state(params), env_step, e.n_windows,
+            router, batched.init_fluid_state(params, n_modalities=n_mod),
+            env_step, e.n_windows,
             jax.random.key(e.seed), shard=spec, n_cells=e.n_cells,
             reducer=reducer)
     jax.block_until_ready(stats)
     wall = time.perf_counter() - t0
 
-    hist50, hist95, obs_sum = (np.asarray(s) for s in stats)
+    hist50, hist95, obs_sum, spill_sum = (np.asarray(s) for s in stats)
     p50_s = _hist_quantile(hist50, 0.50)
     p95_s = _hist_quantile(hist95, 0.95)
     # slice the phantom pad rows off the gathered final state, then reuse
@@ -778,11 +896,15 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
         n_restarts=final.n_restarts,
     )
     succ = 100.0 * res.success_rate
+    succ_mean = (100.0 * float(final.n_success.sum())
+                 / max(float(final.n_requests.sum()), 1.0)
+                 if getattr(env_step, "has_graph", False)
+                 else float(succ.mean()))
     steady = max(e.n_windows - 1, 1) * e.n_cells
     return RunResult(
         experiment=e,
         name=e.name,
-        success_pct=float(succ.mean()),
+        success_pct=succ_mean,
         success_std=float(succ.std()),
         p50_ms=float(1000.0 * p50_s),
         p95_ms=float(1000.0 * p95_s),
@@ -797,6 +919,8 @@ def _run_sharded(e: Experiment, topo: Topology, spec: ShardSpec) -> RunResult:
         per_device_wall_s=wall,
         cells_per_device=r_local,
         resume_points=tuple(boundaries),
+        offload_frac=float(spill_sum) / max(float(final.n_requests.sum()),
+                                            1.0),
     )
 
 
@@ -811,8 +935,8 @@ class Comparison:
         """Table-1-style markdown: one row per (scenario, router)."""
         lines = [
             "| scenario | router | success % | P50 ms | P95 ms | "
-            "tier share of success (light->heavy) | obs % |",
-            "|---|---|---|---|---|---|---|",
+            "tier share of success (light->heavy) | obs % | offload % |",
+            "|---|---|---|---|---|---|---|---|",
         ]
         for res in self.results:
             share = "/".join(f"{100 * float(x):.0f}" for x in res.tier_share)
@@ -820,7 +944,8 @@ class Comparison:
                 f"| {res.experiment.scenario} | {res.name} "
                 f"| {res.success_pct:.1f} ± {res.success_std:.1f} "
                 f"| {res.p50_ms:.0f} | {res.p95_ms:.0f} "
-                f"| {share} | {100 * res.obs_frac:.0f} |")
+                f"| {share} | {100 * res.obs_frac:.0f} "
+                f"| {100 * res.offload_frac:.1f} |")
         return "\n".join(lines)
 
     def to_json(self) -> dict:

@@ -97,7 +97,10 @@ class Router:
 
     @property
     def n_modalities(self) -> int:
-        return N_OBS_MODALITIES
+        # graph worlds publish extra telemetry columns (neighbor pressure);
+        # baselines that ignore them still size their obs buffers to match
+        # the env emission via the extra_modalities dataclass field
+        return N_OBS_MODALITIES + getattr(self, "extra_modalities", 0)
 
     @property
     def period(self) -> int:
@@ -151,6 +154,7 @@ class UniformRouter(Router):
     """Fixed near-uniform split — the paper's production baseline."""
 
     tiers: int = 3
+    extra_modalities: int = 0
 
     name = "uniform"
 
@@ -170,6 +174,7 @@ class CapacityRouter(Router):
     AIF denies itself.  ``weights`` is normalized internally."""
 
     weights: tuple[float, ...] = (0.15, 0.23, 0.62)
+    extra_modalities: int = 0
 
     name = "capacity"
 
@@ -189,6 +194,7 @@ class RoundRobinRouter(Router):
     """Cycles a one-hot weight across tiers every control window."""
 
     tiers: int = 3
+    extra_modalities: int = 0
 
     name = "round_robin"
 
@@ -214,6 +220,7 @@ class LeastLoadedRouter(Router):
 
     softness: float = 1.0
     tiers: int = 3
+    extra_modalities: int = 0
 
     name = "least_loaded"
 
@@ -229,6 +236,54 @@ class LeastLoadedRouter(Router):
         w = jnp.where(total > 0, w / jnp.maximum(total, 1e-30),
                       jnp.full_like(w, 1.0 / self.tiers))
         return carry, w, _no_diag(r)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinResponseRouter(Router):
+    """Nearest-neighbor offloader: greedy min-estimated-response routing.
+
+    The OpenCDA-style heuristic for graph fleets — each window every cell
+    sends *all* traffic to the single up tier with the lowest estimated
+    response time (queue drain + mean service); whatever that tier cannot
+    absorb overflows and, on a graph world, spills to the cell's neighbors
+    via the env's cross-cell spillover term.  This is the graph-aware
+    baseline the Table-1 grid compares AIF against: offloading driven by a
+    fixed response-time rule instead of expected free energy.
+
+    ``service_s`` / ``cap_rps`` are the known per-tier mean service times
+    and saturation throughputs (privileged knowledge, like
+    :class:`CapacityRouter`'s weights); build them from the scenario's
+    :class:`~repro.envsim.config.SimConfig` tiers.
+    """
+
+    service_s: tuple[float, ...] = (0.18, 0.19, 0.23)
+    cap_rps: tuple[float, ...] = (11.11, 15.79, 34.78)
+    extra_modalities: int = 0
+
+    name = "nn_offload"
+
+    def __post_init__(self):
+        if len(self.service_s) != len(self.cap_rps):
+            raise ValueError(
+                f"service_s covers {len(self.service_s)} tiers but cap_rps "
+                f"{len(self.cap_rps)} — both come from the same tier list")
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.service_s)
+
+    def step(self, carry, obs, obs_mask, keys):
+        r = obs.raw_obs.shape[0]
+        svc = jnp.asarray(self.service_s, jnp.float32)
+        cap = jnp.asarray(self.cap_rps, jnp.float32)
+        est = obs.tier_queue / jnp.maximum(cap, 1e-9) + svc     # (R, K)
+        est = jnp.where(obs.tier_up > 0, est, jnp.inf)
+        tier = jnp.argmin(est, axis=-1).astype(jnp.int32)
+        w = jax.nn.one_hot(tier, self.n_tiers, dtype=jnp.float32)
+        all_down = jnp.all(obs.tier_up <= 0, axis=-1, keepdims=True)
+        w = jnp.where(all_down, jnp.full_like(w, 1.0 / self.n_tiers), w)
+        return carry, w, TickInfo(action=tier,
+                                  unstable=jnp.zeros_like(tier, bool))
 
 
 # --------------------------------------------------------------- bandit family
@@ -272,6 +327,7 @@ class ThompsonRouter(Router):
     latency_scale_s: float = 5.0
     latency_weight: float = 0.5
     obs_noise: float = 0.25
+    extra_modalities: int = 0
 
     name = "thompson"
 
@@ -321,6 +377,7 @@ class UcbRouter(Router):
     c: float = 1.0
     latency_scale_s: float = 5.0
     latency_weight: float = 0.5
+    extra_modalities: int = 0
 
     name = "ucb"
 

@@ -73,6 +73,14 @@ class ShardSpec:
         """(R padded to a device multiple, cells per device).
 
         ``"strict"`` pad policy raises on indivisible R instead of padding.
+
+        Pad rows are phantom cells: zero arrivals, zero hazard, excluded
+        from every fleet reduction (:func:`~repro.envsim.scenarios
+        .pad_scenario`).  A :class:`~repro.core.graph.FleetGraph` must be
+        built at the *true* R — no edge may reference a phantom row, so
+        pad cells stay edge-less and inert under spillover too
+        (:meth:`FleetGraph.validate_true_rows` raises ``ValueError``
+        naming this policy on violation).
         """
         d = self.n_devices()
         rem = n_cells % d

@@ -1,0 +1,288 @@
+"""Fleet graphs: the networked continuum's cross-cell edge structure.
+
+The fleet engine scans R service cells that are independent columns — the
+continuum is vertical-only (device -> edge -> cloud *within* a cell).  A
+:class:`FleetGraph` adds the horizontal dimension: a static directed edge
+list with per-edge hop latencies over which a saturated cell re-offers the
+load it would otherwise reject (see the spillover term in
+:func:`repro.envsim.batched.fluid_window_step`) and from which each cell
+observes a neighbor-pressure summary (the optional fifth telemetry
+modality).
+
+Design constraints, in order:
+
+* **Static & hashable.**  The edge list is data baked into the compiled
+  program (segment-sums over fixed index vectors), so the spec is a frozen
+  dataclass of tuples — usable as an ``lru_cache`` world-builder key and
+  inert under jit.  The engine never traces the topology itself.
+* **None-gated.**  ``graph=None`` (or any graph with an empty edge list —
+  the :func:`none` preset) compiles the *exact* pre-graph program: no
+  spillover ops, no neighbor modality, golden rollouts bit-identical.
+* **Pad-safe.**  Device sharding pads R up to a device multiple with
+  phantom cells; a graph is always built at the *true* R, so phantom rows
+  are edge-less by construction and the spillover segment-sums route zero
+  mass through them.  :meth:`FleetGraph.validate_true_rows` enforces this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Bin count of the neighbor-pressure observation modality (low/ok/high).
+NEIGHBOR_BINS = 3
+
+#: Discretization edges of the neighbor-pressure modality: mean neighbor
+#: backlog as a fraction of live system capacity.  Below 0.3 the
+#: neighborhood has headroom, above 0.7 it is near saturation — shedding
+#: sideways will mostly bounce.
+NEIGHBOR_EDGES = (0.3, 0.7)
+
+
+class GraphData(NamedTuple):
+    """Device-resident edge arrays of one :class:`FleetGraph`.
+
+    Built once per world at the (possibly padded) fleet size; every leaf is
+    a fixed operand of the jitted rollout.  ``has_out.shape[0]`` carries the
+    global cell count the spillover segment-sums reduce over.
+    """
+
+    src: jnp.ndarray      # (E,) int32 edge sources
+    dst: jnp.ndarray      # (E,) int32 edge destinations
+    hop: jnp.ndarray      # (E,) float32 per-edge hop latency (seconds)
+    share: jnp.ndarray    # (E,) float32 1/out_degree[src] offer split
+    has_out: jnp.ndarray  # (R,) float32 1 where the cell has any out-edge
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetGraph:
+    """Static cell-to-cell offload topology (frozen, hashable).
+
+    Args:
+      n_cells: the *true* fleet size R this graph spans.  Must match the
+        experiment's ``n_cells`` — phantom pad rows of a sharded run are
+        never graph members (see :meth:`validate_true_rows`).
+      edges: directed ``(src, dst)`` pairs; spillover offered along an edge
+        flows ``src -> dst``.  Preset constructors emit both directions.
+      hop_s: per-edge one-way hop latency in seconds (``len == len(edges)``);
+        spilled mass pays it before queueing at the destination.
+      name: display name (presets fill it in).
+    """
+
+    n_cells: int
+    edges: tuple[tuple[int, int], ...] = ()
+    hop_s: tuple[float, ...] = ()
+    name: str = "custom"
+
+    def __post_init__(self):
+        if self.n_cells < 1:
+            raise ValueError(f"n_cells must be >= 1, got {self.n_cells}")
+        if len(self.hop_s) != len(self.edges):
+            raise ValueError(
+                f"hop_s has {len(self.hop_s)} entries for "
+                f"{len(self.edges)} edges — every edge needs its hop "
+                f"latency")
+        for (s, d), h in zip(self.edges, self.hop_s):
+            if not (0 <= s < self.n_cells and 0 <= d < self.n_cells):
+                raise ValueError(
+                    f"edge ({s}, {d}) references a cell outside "
+                    f"[0, {self.n_cells}) — graphs are built at the true "
+                    f"fleet size, never at a padded one")
+            if s == d:
+                raise ValueError(f"self-edge ({s}, {d}): a cell cannot "
+                                 f"offload to itself")
+            if h < 0.0:
+                raise ValueError(f"negative hop latency {h} on edge "
+                                 f"({s}, {d})")
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    def validate_true_rows(self, n_true: int) -> None:
+        """Enforce the graph-padding contract against the true fleet size.
+
+        Device sharding (``pad="pad"``, the :class:`~repro.api.shard.ShardSpec`
+        default) rounds R up to a device multiple with *phantom* cells that
+        receive zero traffic and join no reduction.  A graph edge touching a
+        phantom row would route real load through a cell that does not
+        exist, so graphs must be built at the true R and padded worlds keep
+        the phantom rows edge-less.
+        """
+        if self.n_cells > n_true:
+            raise ValueError(
+                f"FleetGraph spans {self.n_cells} cells but the true fleet "
+                f"size is {n_true}: rows >= {n_true} are phantom pad cells "
+                f"(ShardSpec pad='pad' policy) and must stay edge-less — "
+                f"build the graph at the true R and pad the world, not the "
+                f"graph")
+        bad = [e for e in self.edges
+               if e[0] >= n_true or e[1] >= n_true]
+        if bad:
+            raise ValueError(
+                f"graph edges {bad[:4]} reference cells >= the true fleet "
+                f"size {n_true}: those rows are phantom pad cells "
+                f"(ShardSpec pad='pad' policy) and must stay edge-less")
+
+    def device_data(self, r_pad: int | None = None) -> GraphData | None:
+        """Materialize the edge arrays at the (padded) global fleet size.
+
+        ``r_pad`` >= ``n_cells`` sizes the segment-sum range so phantom pad
+        rows exist but stay edge-less/inert.  Returns None for an empty
+        edge list — the caller then compiles the exact graph-free program.
+        """
+        r = self.n_cells if r_pad is None else int(r_pad)
+        if r < self.n_cells:
+            raise ValueError(
+                f"r_pad={r} < n_cells={self.n_cells}: the padded size can "
+                f"only grow the cell axis")
+        if not self.edges:
+            return None
+        src = np.asarray([e[0] for e in self.edges], np.int32)
+        dst = np.asarray([e[1] for e in self.edges], np.int32)
+        hop = np.asarray(self.hop_s, np.float32)
+        out_deg = np.bincount(src, minlength=r).astype(np.float32)
+        return GraphData(
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            hop=jnp.asarray(hop),
+            share=jnp.asarray(1.0 / out_deg[src]),
+            has_out=jnp.asarray((out_deg > 0).astype(np.float32)),
+        )
+
+
+# ------------------------------------------------------------------- presets
+def ring(n_cells: int, hop_s: float = 0.05, name: str = "ring") -> FleetGraph:
+    """Bidirectional ring: cell i <-> its two cyclic neighbors."""
+    if n_cells < 2:
+        return FleetGraph(n_cells=n_cells, name=name)
+    edges, hops = [], []
+    for i in range(n_cells):
+        nxt = (i + 1) % n_cells
+        if (i, nxt) not in edges:      # n_cells == 2 would duplicate
+            edges += [(i, nxt), (nxt, i)]
+            hops += [hop_s, hop_s]
+    return FleetGraph(n_cells=n_cells, edges=tuple(edges),
+                      hop_s=tuple(hops), name=name)
+
+
+def grid(n_cells: int, hop_s: float = 0.05) -> FleetGraph:
+    """Near-square 4-neighbor grid, row-major cell ids, both directions."""
+    rows = max(int(math.floor(math.sqrt(n_cells))), 1)
+    cols = (n_cells + rows - 1) // rows
+    edges, hops = [], []
+
+    def add(a, b):
+        edges.append((a, b))
+        hops.append(hop_s)
+
+    for i in range(n_cells):
+        r, c = divmod(i, cols)
+        right = i + 1
+        if c + 1 < cols and right < n_cells:
+            add(i, right)
+            add(right, i)
+        down = i + cols
+        if down < n_cells:
+            add(i, down)
+            add(down, i)
+    return FleetGraph(n_cells=n_cells, edges=tuple(edges),
+                      hop_s=tuple(hops), name="grid")
+
+
+def hier(n_cells: int, cluster: int = 4, hop_s: float = 0.05,
+         uplink_s: float = 0.15) -> FleetGraph:
+    """Two-level hierarchy: leaf cells star onto a per-cluster head, heads
+    ring together over slower uplinks — the cloud-edge continuum's
+    aggregation topology (leaves shed to their head, heads shed across
+    clusters)."""
+    if cluster < 2:
+        raise ValueError(f"cluster size must be >= 2, got {cluster}")
+    edges, hops = [], []
+    heads = list(range(0, n_cells, cluster))
+    for h in heads:
+        for leaf in range(h + 1, min(h + cluster, n_cells)):
+            edges += [(leaf, h), (h, leaf)]
+            hops += [hop_s, hop_s]
+    if len(heads) >= 2:
+        head_ring = ring(len(heads), hop_s=uplink_s)
+        for (a, b), h in zip(head_ring.edges, head_ring.hop_s):
+            edges.append((heads[a], heads[b]))
+            hops.append(h)
+    return FleetGraph(n_cells=n_cells, edges=tuple(edges),
+                      hop_s=tuple(hops), name="hier")
+
+
+def none(n_cells: int) -> FleetGraph:
+    """The edge-less graph: compiles the exact pre-graph program (no
+    spillover term, no neighbor modality) — ``graph=None`` spelled as a
+    preset so sweeps can include the ungraphed control row."""
+    return FleetGraph(n_cells=n_cells, name="none")
+
+
+#: Preset constructors by name (the ``Experiment(graph="ring")`` strings).
+GRAPH_PRESETS = {"ring": ring, "grid": grid, "hier": hier, "none": none}
+
+#: Scenario -> default graph preset: the graph scenario presets
+#: (:mod:`repro.envsim.scenarios`) auto-attach their natural topology when
+#: the experiment leaves ``graph=None``; pass ``graph="none"`` to force the
+#: ungraphed control run on the same schedules.
+GRAPH_SCENARIOS = {
+    "ring-spillover": "ring",
+    "grid-hotspot": "grid",
+    "hier-continuum": "hier",
+}
+
+
+def resolve_graph(graph, n_cells: int,
+                  scenario: str | None = None) -> FleetGraph | None:
+    """Normalize an ``Experiment.graph``-style argument.
+
+    None auto-attaches the scenario's default preset (``GRAPH_SCENARIOS``)
+    when there is one, otherwise stays ungraphed; a string names a preset
+    built at ``n_cells``; a :class:`FleetGraph` passes through after a size
+    check.  Empty-edge graphs resolve to None — the engine then compiles
+    the exact pre-graph program.
+    """
+    if graph is None:
+        preset = GRAPH_SCENARIOS.get(scenario) if scenario else None
+        if preset is None:
+            return None
+        graph = GRAPH_PRESETS[preset](n_cells)
+    if isinstance(graph, str):
+        try:
+            make = GRAPH_PRESETS[graph]
+        except KeyError:
+            raise KeyError(f"unknown graph preset {graph!r}; "
+                           f"available: {sorted(GRAPH_PRESETS)}") from None
+        graph = make(n_cells)
+    if not isinstance(graph, FleetGraph):
+        raise TypeError(
+            f"graph must be None, a preset name or a FleetGraph, got "
+            f"{type(graph).__name__}")
+    if graph.n_cells != n_cells:
+        raise ValueError(
+            f"FleetGraph spans {graph.n_cells} cells but the experiment "
+            f"runs {n_cells} — build the graph at the experiment's true "
+            f"fleet size (presets: repro.core.graph.GRAPH_PRESETS)")
+    return graph if graph.n_edges else None
+
+
+def with_neighbor_modality(topo):
+    """A topology extended with the graph's neighbor-pressure modality.
+
+    Appends a ``"neighbor"`` observation modality (:data:`NEIGHBOR_BINS`
+    bins over :data:`NEIGHBOR_EDGES`) to the topology's modality tuple —
+    the generative model then conditions on sideways pressure exactly like
+    any other telemetry column (unknown modality names get flat preferences,
+    so the neighbor channel is context, not a goal).
+    """
+    if "neighbor" in topo.modalities:
+        return topo
+    return dataclasses.replace(
+        topo,
+        modalities=topo.modalities + ("neighbor",),
+        n_bins=topo.n_bins + (NEIGHBOR_BINS,))

@@ -464,7 +464,9 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
                 restart_blackout: bool, emits_mask: bool,
                 forced_down: jnp.ndarray | None = None,
                 speed: jnp.ndarray | None = None,
-                row_block: tuple | None = None):
+                row_block: tuple | None = None,
+                graph=None,
+                shard_axis: str | None = None):
     """W fused fast ticks: belief → EFE → sample → dwell → preferences → env.
 
     The XLA oracle twin of the Pallas megakernel — one launch advances the
@@ -487,6 +489,10 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
       row_block: ``(row_start, n_true, n_pad)`` under the sharded engine —
         forwarded to the env so restart randomness is drawn at the
         device-count-invariant global shape.
+      graph/shard_axis: optional :class:`repro.core.graph.GraphData` (and,
+        when sharded, the mesh axis name) — forwarded to the env's
+        spillover term; the neighbor-pressure telemetry column then rides
+        the ordinary obs carry through the window.
 
     Returns (state, env state, obs_carry, per-tick trace tuple) with the
     trace leaves stacked (W, ...) in tick order.
@@ -571,7 +577,7 @@ def mega_window(state: MegaFleetState, est, obs_carry, params,
             params, est, weights, arrival[w], hazard[w], k_env[w], t_idx,
             dt=dt, scrape_every=scrape_every, obs_valid=ov,
             restart_blackout=restart_blackout, forced_down=fd, speed=sp,
-            row_block=row_block)
+            row_block=row_block, graph=graph, shard_axis=shard_axis)
 
         ys.append((action, weights, raw_obs, unstable,
                    jnp.mean(obs_mask, axis=-1), win))

@@ -115,7 +115,13 @@ class FluidState(NamedTuple):
 
 
 class WindowInfo(NamedTuple):
-    """Per-window observables + diagnostics (what a router may see)."""
+    """Per-window observables + diagnostics (what a router may see).
+
+    The trailing ``spill_*`` / ``nbr_pressure`` fields are populated only
+    when the world has a :class:`repro.core.graph.FleetGraph` attached
+    (cross-cell spillover); graph-free runs carry None there, which keeps
+    the pre-graph pytree leaves — and the compiled program — unchanged.
+    """
 
     raw_obs: jnp.ndarray          # (R, M): p95_s, rps, queue_depth, err_rate
     obs_mask: jnp.ndarray         # (R, M) 1 = fresh sample, 0 = stale/missing
@@ -128,6 +134,10 @@ class WindowInfo(NamedTuple):
     success: jnp.ndarray          # (R,)
     failures: jnp.ndarray         # (R,)
     restarted: jnp.ndarray        # (R, K) 1.0 where a pod restarted
+    spill_out: jnp.ndarray | None = None       # (R,) mass exported to neighbors
+    spill_in: jnp.ndarray | None = None        # (R,) mass offered by neighbors
+    spill_admitted: jnp.ndarray | None = None  # (R,) offered mass absorbed
+    nbr_pressure: jnp.ndarray | None = None    # (R,) mean neighbor pressure
 
 
 class FluidResult(NamedTuple):
@@ -242,7 +252,11 @@ def params_from_config(cfg: SimConfig,
     )
 
 
-def init_fluid_state(params: FluidParams) -> FluidState:
+def init_fluid_state(params: FluidParams,
+                     n_modalities: int = N_OBS_MODALITIES) -> FluidState:
+    """Zero state; ``n_modalities`` sizes the held-telemetry buffer (pass
+    the env closure's ``n_obs_modalities`` — graph worlds publish a fifth,
+    neighbor-pressure, column)."""
     r = params.n_cells
     # fresh buffer per field (not one shared zeros array): the state is
     # donated through fleet_rollout, and donation rejects pytrees that hand
@@ -256,7 +270,7 @@ def init_fluid_state(params: FluidParams) -> FluidState:
     return FluidState(
         backlog=zt(), down_left=zt(), util_accum=zt(), util_scrape=zt(),
         prev_tier_rps=zt(), p95_ema=z(), rps_ema=z(), err_ema=z(),
-        held_obs=jnp.zeros((r, N_OBS_MODALITIES), jnp.float32),
+        held_obs=jnp.zeros((r, n_modalities), jnp.float32),
         n_requests=z(), n_success=z(), err_timeout=z(), err_overflow=z(),
         err_refused=z(), err_restart=z(), tier_requests=zt(), tier_success=zt(),
         n_restarts=zt(),
@@ -296,7 +310,9 @@ def fluid_window_step(params: FluidParams,
                       restart_blackout: bool = False,
                       row_block: tuple | None = None,
                       forced_down: jnp.ndarray | None = None,
-                      speed: jnp.ndarray | None = None
+                      speed: jnp.ndarray | None = None,
+                      graph=None,
+                      shard_axis: str | None = None
                       ) -> tuple[FluidState, WindowInfo]:
     """Advance every cell one control window under the given routing weights.
 
@@ -330,6 +346,23 @@ def fluid_window_step(params: FluidParams,
         (straggler episodes): <1 shrinks capacity and inflates latency
         without any liveness loss.  None compiles the exact pre-chaos
         program.
+      graph: optional :class:`repro.core.graph.GraphData` built at the
+        *global* (padded) fleet size — activates cross-cell spillover: the
+        mass a cell rejects this window (down-pod refusals + queue
+        overflow) is re-offered to its out-neighbors (split 1/out_degree),
+        pays the edge hop latency, and is admitted into whatever live
+        capacity headroom the receivers have; the remainder fails as
+        overflow at the receiving side.  Implemented as segment-sums over
+        the static edge list, so the window stays one fused jitted
+        program.  Cells with out-edges also observe a fifth telemetry
+        column (mean out-neighbor pressure).  None compiles the exact
+        pre-graph program.
+      shard_axis: with ``row_block`` + ``graph``, the shard_map mesh axis
+        name — spillover is a cross-cell exchange, so the (R,) rejected
+        mass / pressure vectors are all-gathered to the global cell axis
+        before the segment-sums and the results row-sliced back.  A
+        1-device mesh gathers the identity, preserving sharded/unsharded
+        bit-identity.
     """
     if row_block is not None:
         row_start, n_true, n_pad = row_block
@@ -430,10 +463,91 @@ def fluid_window_step(params: FluidParams,
     down_left = jnp.maximum(state.down_left - dt, 0.0)
     down_left = jnp.where(restarted > 0, dur, down_left)
 
+    # ---- cross-cell spillover (graph worlds only) -------------------------
+    # The mass a cell rejected this window (down-pod refusals + queue
+    # overflow) is re-offered along its out-edges instead of failing
+    # locally: each out-neighbor gets a 1/out_degree share, pays the edge's
+    # hop latency, and admits into live capacity headroom whose estimated
+    # response (hop + queueing + service) still beats the client timeout;
+    # what no neighbor can take fails as overflow at the receiving side.
+    # Segment-sums over the static edge list keep the whole exchange inside
+    # the fused window program, and fleet-global request mass is conserved:
+    # Σ requests == Σ success + Σ every failure cause + Σ final backlog.
+    if graph is None:
+        spill_out = spill_in = spill_admitted = nbr_press = None
+        win_fail_graph = None
+    else:
+        over_sum = jnp.sum(over, axis=-1)
+        rej = refused + over_sum                      # (R,) rejected mass
+        up2 = down_left <= _EPS                       # post-restart liveness
+        if forced_down is not None:
+            up2 = up2 & (adminf <= 0.5)
+        up2f = up2.astype(jnp.float32)
+        # cell pressure: in-system mass over live system capacity (the
+        # neighbor-telemetry scalar; fully-down cells saturate the clip)
+        press = jnp.minimum(
+            jnp.sum(backlog2, axis=-1)
+            / jnp.maximum(jnp.sum(syscap * up2f, axis=-1), _EPS), 1e3)
+        r_glob = graph.has_out.shape[0]
+        # a single-shard mesh already holds every row locally (static shape
+        # check): skip the collective so the compiled graph block — and its
+        # XLA fusion, hence every float rounding — is identical to the
+        # unsharded program (1-device sharded bit-identity)
+        single_shard = rej.shape[0] == r_glob
+        if row_block is None or single_shard:
+            rej_g, press_g = rej, press
+        else:
+            # spillover is a cross-cell exchange: gather the per-shard rows
+            # to the global cell axis (shards are contiguous row blocks in
+            # mesh order, so tiled all_gather reassembles the fleet vector)
+            stacked = jax.lax.all_gather(jnp.stack([rej, press]),
+                                         shard_axis, axis=1, tiled=True)
+            rej_g, press_g = stacked[0], stacked[1]
+        offer = rej_g[graph.src] * graph.share        # (E,) per-edge offer
+        spill_in_g = jax.ops.segment_sum(offer, graph.dst,
+                                         num_segments=r_glob)
+        hop_mass_g = jax.ops.segment_sum(offer * graph.hop, graph.dst,
+                                         num_segments=r_glob)
+        nbr_g = jax.ops.segment_sum(press_g[graph.dst] * graph.share,
+                                    graph.src, num_segments=r_glob)
+        if row_block is None or single_shard:
+            spill_in, hop_mass, nbr_press = spill_in_g, hop_mass_g, nbr_g
+            has_out = graph.has_out
+        else:
+            spill_in = _slice_rows(spill_in_g, row_start, r_local)
+            hop_mass = _slice_rows(hop_mass_g, row_start, r_local)
+            nbr_press = _slice_rows(nbr_g, row_start, r_local)
+            has_out = _slice_rows(graph.has_out, row_start, r_local)
+        hop_mean = hop_mass / jnp.maximum(spill_in, _EPS)        # (R,)
+        est_resp = (hop_mean[:, None]
+                    + backlog2 / jnp.maximum(cap_rate, _EPS)
+                    + service_mean)                              # (R, K)
+        viable = (est_resp <= params.timeout_s).astype(jnp.float32) * up2f
+        room = jnp.maximum(syscap - backlog2, 0.0) * viable      # (R, K)
+        room_tot = jnp.sum(room, axis=-1)
+        spill_admitted = jnp.minimum(spill_in, room_tot)         # (R,)
+        admit = room * (spill_admitted
+                        / jnp.maximum(room_tot, _EPS))[:, None]
+        spill_dropped = spill_in - spill_admitted
+        backlog2 = backlog2 + admit
+        keep = 1.0 - has_out          # exporters keep none of their rejects
+        spill_out = rej * has_out
+        win_fail_graph = (refused * keep + over_sum * keep + spill_dropped
+                          + jnp.sum(timed_out, axis=-1)
+                          + jnp.sum(killed, axis=-1))
+
     # ---- accounting -------------------------------------------------------
     win_success = jnp.sum(completed, axis=-1)
-    win_fail = (refused + jnp.sum(over, axis=-1) + jnp.sum(timed_out, axis=-1)
-                + jnp.sum(killed, axis=-1))
+    if win_fail_graph is None:
+        win_fail = (refused + jnp.sum(over, axis=-1)
+                    + jnp.sum(timed_out, axis=-1) + jnp.sum(killed, axis=-1))
+        err_refused_new = state.err_refused + refused
+        err_overflow_new = state.err_overflow + jnp.sum(over, axis=-1)
+    else:
+        win_fail = win_fail_graph
+        err_refused_new = state.err_refused + refused * keep
+        err_overflow_new = (state.err_overflow + over_sum * keep
+                            + spill_dropped)
 
     # ---- router observables (EMA ≈ the event sim's sliding windows) -------
     a_lat = jnp.minimum(1.0, 2.0 * dt / params.latency_window_s)
@@ -455,7 +569,12 @@ def fluid_window_step(params: FluidParams,
     queue_depth = jnp.sum(tier_queue, axis=-1)
 
     # ---- telemetry pipeline (validity mask + stale-hold emission) ---------
-    fresh_obs = jnp.stack([p95_ema, rps_ema, queue_depth, err_ema], axis=-1)
+    obs_cols = [p95_ema, rps_ema, queue_depth, err_ema]
+    if nbr_press is not None:
+        # graph worlds publish the mean out-neighbor pressure as a fifth
+        # telemetry modality (same mask/stale-hold pipeline as the rest)
+        obs_cols.append(nbr_press)
+    fresh_obs = jnp.stack(obs_cols, axis=-1)
     if obs_valid is None and not restart_blackout:
         # degradation-free program: publish fresh values (pre-mask path)
         obs_mask = jnp.ones_like(fresh_obs)
@@ -490,8 +609,8 @@ def fluid_window_step(params: FluidParams,
         n_requests=state.n_requests + jnp.sum(arr, axis=-1),
         n_success=state.n_success + win_success,
         err_timeout=state.err_timeout + jnp.sum(timed_out, axis=-1),
-        err_overflow=state.err_overflow + jnp.sum(over, axis=-1),
-        err_refused=state.err_refused + refused,
+        err_overflow=err_overflow_new,
+        err_refused=err_refused_new,
         err_restart=state.err_restart + jnp.sum(killed, axis=-1),
         tier_requests=state.tier_requests + arr,
         tier_success=state.tier_success + completed,
@@ -512,6 +631,10 @@ def fluid_window_step(params: FluidParams,
         success=win_success,
         failures=win_fail,
         restarted=restarted,
+        spill_out=spill_out,
+        spill_in=spill_in,
+        spill_admitted=spill_admitted,
+        nbr_pressure=nbr_press,
     )
     return new_state, info
 
@@ -587,6 +710,7 @@ class FluidIngredients(NamedTuple):
     restart_blackout: bool
     forced_down: jnp.ndarray | None = None  # (T, R, K) or None
     speed: jnp.ndarray | None = None   # (T, R, K) or None
+    graph: tuple | None = None         # GraphData (global R) or None
 
 
 def make_env_step(params: FluidParams,
@@ -597,7 +721,8 @@ def make_env_step(params: FluidParams,
                   obs_valid: jnp.ndarray | None = None,
                   restart_blackout: bool = False,
                   forced_down: jnp.ndarray | None = None,
-                  speed: jnp.ndarray | None = None):
+                  speed: jnp.ndarray | None = None,
+                  graph=None):
     """Adapt the fluid engine to :func:`repro.core.fleet.fleet_rollout`.
 
     Returns an ``env_step(env_state, weights, t_idx, key) -> (env_state,
@@ -619,6 +744,16 @@ def make_env_step(params: FluidParams,
     each device its row block of the closed-over schedules; wrapped custom
     closures without the attribute are rejected there with a clear error
     instead of a shape mismatch deep inside ``shard_map``.
+
+    Fleet graphs: pass a :class:`repro.core.graph.FleetGraph` (built at the
+    *true* fleet size; ``params`` may be padded wider — phantom rows stay
+    edge-less) to activate cross-cell spillover and the neighbor-pressure
+    telemetry column.  The closure then advertises ``has_graph = True`` and
+    ``n_obs_modalities = 5`` (consumers size belief/held-obs buffers off
+    this), grows a 4-column ``obs_valid`` schedule with an always-valid
+    neighbor column, and accepts a ``shard_axis`` keyword the sharded
+    engine supplies for the cross-shard spill exchange.  ``graph=None`` or
+    an empty edge list compiles the exact pre-graph program.
     """
     arrival_rate = jnp.asarray(arrival_rate)
     hazard_scale = jnp.asarray(hazard_scale)
@@ -628,8 +763,18 @@ def make_env_step(params: FluidParams,
         forced_down = jnp.asarray(forced_down, jnp.float32)
     if speed is not None:
         speed = jnp.asarray(speed, jnp.float32)
+    gd = None if graph is None else graph.device_data(params.n_cells)
+    if gd is not None and obs_valid is not None \
+            and obs_valid.shape[-1] == N_OBS_MODALITIES:
+        # scenario schedules predate the neighbor modality: the sideways
+        # pressure summary is engine-internal (not scraped telemetry), so
+        # degradation schedules leave it always-valid
+        obs_valid = jnp.concatenate(
+            [obs_valid, jnp.ones(obs_valid.shape[:-1] + (1,), jnp.float32)],
+            axis=-1)
 
-    def env_step(env_state, weights, t_idx, key, row_block=None):
+    def env_step(env_state, weights, t_idx, key, row_block=None,
+                 shard_axis=None):
         ov = None if obs_valid is None else obs_valid[t_idx]
         fd = None if forced_down is None else forced_down[t_idx]
         sp = None if speed is None else speed[t_idx]
@@ -639,10 +784,14 @@ def make_env_step(params: FluidParams,
                                  obs_valid=ov,
                                  restart_blackout=restart_blackout,
                                  row_block=row_block,
-                                 forced_down=fd, speed=sp)
+                                 forced_down=fd, speed=sp,
+                                 graph=gd, shard_axis=shard_axis)
 
     env_step.emits_mask = obs_valid is not None or restart_blackout
     env_step.supports_shard = True
+    env_step.has_graph = gd is not None
+    env_step.n_obs_modalities = (N_OBS_MODALITIES + 1 if gd is not None
+                                 else N_OBS_MODALITIES)
     # Whole-window consumers (the megakernel engine path) re-dispatch
     # fluid_window_step over a whole slow period per launch instead of
     # calling the per-tick closure — hand them the raw ingredients.
@@ -650,12 +799,12 @@ def make_env_step(params: FluidParams,
         params=params, arrival_rate=arrival_rate, hazard_scale=hazard_scale,
         dt=dt, scrape_every=scrape_every, obs_valid=obs_valid,
         restart_blackout=restart_blackout,
-        forced_down=forced_down, speed=speed)
+        forced_down=forced_down, speed=speed, graph=gd)
     return env_step
 
 
 def make_scenario_env_step(params: FluidParams, sc, dt: float = 1.0,
-                           scrape_every: int = 10):
+                           scrape_every: int = 10, graph=None):
     """:func:`make_env_step` from a compiled
     :class:`~repro.envsim.scenarios.ScenarioBatch` — unpacks *every*
     schedule, telemetry degradation included, so a call site cannot
@@ -666,7 +815,8 @@ def make_scenario_env_step(params: FluidParams, sc, dt: float = 1.0,
                          obs_valid=sc.obs_valid,
                          restart_blackout=sc.restart_blackout,
                          forced_down=getattr(sc, "forced_down", None),
-                         speed=getattr(sc, "speed", None))
+                         speed=getattr(sc, "speed", None),
+                         graph=graph)
 
 
 def summarize(final: FluidState, trace: WindowInfo) -> FluidResult:

@@ -194,7 +194,9 @@ def mega_window(state, est, obs_carry, params,
                 interpret: bool | None = None,
                 forced_down: jnp.ndarray | None = None,
                 speed: jnp.ndarray | None = None,
-                row_block: tuple | None = None):
+                row_block: tuple | None = None,
+                graph=None,
+                shard_axis: str | None = None):
     """One whole-window launch: W fused fast ticks of the mega engine path.
 
     Dispatch twin of :func:`fleet_belief_efe` at window granularity — the
@@ -221,11 +223,13 @@ def mega_window(state, est, obs_carry, params,
     """
     # The Pallas megakernel's in-VMEM env port predates the fault-injection
     # schedules and draws restart randomness at the local R (incompatible
-    # with the sharded engine's draw-at-true-R row_block contract); chaos
-    # and sharded windows fall back to the XLA oracle (identical semantics,
-    # the oracle *is* the CPU production path).
+    # with the sharded engine's draw-at-true-R row_block contract), and its
+    # per-cell dataflow has no lane for the graph spillover's cross-cell
+    # segment-sum exchange; chaos, sharded and graph windows fall back to
+    # the XLA oracle (identical semantics, the oracle *is* the CPU
+    # production path).
     if (use_pallas and forced_down is None and speed is None
-            and row_block is None):
+            and row_block is None and graph is None):
         from repro.kernels.efe import mega as mega_kernel
         if interpret is None:
             interpret = _auto_interpret()
@@ -240,4 +244,5 @@ def mega_window(state, est, obs_carry, params,
         k_env, gumbel, t0, cfg=cfg, disc=disc, util_edges=util_edges,
         util_period=util_period, dt=dt, scrape_every=scrape_every,
         restart_blackout=restart_blackout, emits_mask=emits_mask,
-        forced_down=forced_down, speed=speed, row_block=row_block)
+        forced_down=forced_down, speed=speed, row_block=row_block,
+        graph=graph, shard_axis=shard_axis)
